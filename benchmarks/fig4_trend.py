@@ -1,0 +1,36 @@
+"""Fig. 4 — the performance-improvement trend across processors, plus our
+TPU-analogue column: the improvement ratio of fused over unfused decode."""
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+from benchmarks import paper_model as pm
+
+
+def run() -> Dict:
+    calls = pm.PAPER_CALLS
+    rows = {
+        "DLX": pm.improvement_pct(
+            pm.DLX_ASSEMBLY.total_cycles(calls), pm.DLX_TEXPAND.total_cycles(calls)),
+        "PicoJava II": pm.improvement_pct(
+            pm.PICOJAVA_ASSEMBLY.total_cycles(calls),
+            pm.PICOJAVA_TEXPAND.total_cycles(calls)),
+        "NIOS II/f": pm.improvement_pct(
+            pm.NIOS["f"][0].total_cycles(calls), pm.NIOS["f"][1].total_cycles(calls)),
+        "NIOS II/s": pm.improvement_pct(
+            pm.NIOS["s"][0].total_cycles(calls), pm.NIOS["s"][1].total_cycles(calls)),
+        "NIOS II/e": pm.improvement_pct(
+            pm.NIOS["e"][0].total_cycles(calls), pm.NIOS["e"][1].total_cycles(calls)),
+    }
+    # ours: HLO-op-count improvement of the fused kernel vs the unfused loop
+    from benchmarks.tables import acs_op_counts
+
+    ops = acs_op_counts()
+    rows["TPU analogue (op count)"] = (
+        (ops["unfused_ops"] - ops["fused_kernel_ops"]) / ops["fused_kernel_ops"] * 100)
+    return {"improvement_pct": rows}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

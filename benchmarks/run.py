@@ -1,0 +1,65 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything quick
+  PYTHONPATH=src python -m benchmarks.run --full     # bigger sweeps
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    from benchmarks import fig3_scaling, fig4_trend, roofline_report, tables, viterbi_throughput
+
+    jobs = {
+        "tables_3_4_5": tables.run,
+        "fig3_scaling": fig3_scaling.run,
+        "fig4_trend": fig4_trend.run,
+        "viterbi_throughput": lambda: viterbi_throughput.run(quick=not args.full),
+        "roofline_report": roofline_report.run,
+    }
+    if args.only:
+        jobs = {k: v for k, v in jobs.items() if args.only in k}
+
+    report = {}
+    failed = []
+    for name, fn in jobs.items():
+        print(f"== {name} ==", flush=True)
+        try:
+            out = fn()
+            report[name] = out
+            (RESULTS / f"{name}.json").write_text(
+                json.dumps(out, indent=1, default=float))
+            if name == "tables_3_4_5":
+                print(json.dumps({k: out[k] for k in
+                                  ("table3_dlx", "table4_picojava")}, indent=1,
+                                 default=float))
+            elif name == "roofline_report":
+                print(json.dumps({k: v for k, v in out.items() if k != "rows"},
+                                 indent=1, default=float))
+            else:
+                print("ok")
+        except Exception as e:
+            failed.append(name)
+            print(f"FAILED {name}: {e}")
+            traceback.print_exc()
+    print(f"\n{len(report)}/{len(jobs)} benchmark groups succeeded; "
+          f"results in {RESULTS}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

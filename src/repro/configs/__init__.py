@@ -1,0 +1,23 @@
+"""Architecture configs: one module per assigned architecture (+ the paper's
+own Viterbi workload).  See base.py for the config dataclasses and registry."""
+from repro.configs.base import (
+    SHAPES,
+    ArchBundle,
+    ModelConfig,
+    PartitionConfig,
+    ShapeConfig,
+    arch_ids,
+    get_arch,
+    get_smoke_arch,
+)
+
+__all__ = [
+    "SHAPES",
+    "ArchBundle",
+    "ModelConfig",
+    "PartitionConfig",
+    "ShapeConfig",
+    "arch_ids",
+    "get_arch",
+    "get_smoke_arch",
+]

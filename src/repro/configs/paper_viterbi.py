@@ -1,0 +1,45 @@
+"""The paper's own workload: Viterbi decoding of rate-1/2 convolutional
+codes.  Not an LM — this config names the trellis codes and batch shapes the
+benchmarks/examples use, mirroring the paper's 12..60-bit sweeps (Fig. 3)
+plus throughput-scale batches for the TPU analogue."""
+import dataclasses
+from typing import Tuple
+
+from repro.core.trellis import CODE_K3_PAPER, CODE_K3_STD, CODE_K5_GSM, CODE_K7_NASA, ConvCode
+
+
+@dataclasses.dataclass(frozen=True)
+class ViterbiShape:
+    name: str
+    n_info_bits: int  # information bits per stream (before flush)
+    batch: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ViterbiBundle:
+    code: ConvCode = CODE_K3_STD
+    paper_code: ConvCode = CODE_K3_PAPER
+    shapes: Tuple[ViterbiShape, ...] = (
+        # the paper's Fig. 3 sweep: 12..60 coded bits (= 6..30 info bits at
+        # rate 1/2, including the 2 flush bits for K=3)
+        ViterbiShape("paper_12b", 4, 1),
+        ViterbiShape("paper_24b", 10, 1),
+        ViterbiShape("paper_36b", 16, 1),
+        ViterbiShape("paper_48b", 22, 1),
+        ViterbiShape("paper_60b", 28, 1),
+        # TPU-scale throughput shapes (batch rides the 128-lane axis)
+        ViterbiShape("tpu_gsm_burst", 185, 4096),   # GSM full-rate burst, K=5
+        ViterbiShape("tpu_nasa_frame", 1024, 1024),  # NASA K=7 frames
+        ViterbiShape("tpu_stream_64k", 65536, 128),  # long-stream decode
+    )
+
+
+ARCH = ViterbiBundle()
+SMOKE = ViterbiBundle(shapes=(ViterbiShape("smoke", 16, 8),))
+
+CODES = {
+    "k3_std": CODE_K3_STD,
+    "k3_paper": CODE_K3_PAPER,
+    "k5_gsm": CODE_K5_GSM,
+    "k7_nasa": CODE_K7_NASA,
+}

@@ -1,0 +1,55 @@
+"""Core library: the paper's contribution (Viterbi / trellis ACS) in JAX."""
+from repro.core.crf import crf_decode, crf_log_norm, crf_loss, crf_marginals, crf_score
+from repro.core.puncture import (
+    PUNCTURE_2_3,
+    PUNCTURE_3_4,
+    PUNCTURE_5_6,
+    effective_rate,
+    punctured_hard_metrics,
+)
+from repro.core.acs import acs_step, acs_step_unfused
+from repro.core.channel import (
+    awgn,
+    bpsk_modulate,
+    bsc,
+    hard_branch_metrics,
+    soft_branch_metrics,
+)
+from repro.core.encoder import encode, pack_symbols, unpack_symbols
+from repro.core.trellis import (
+    CODE_K3_PAPER,
+    CODE_K3_STD,
+    CODE_K5_GSM,
+    CODE_K7_NASA,
+    ConvCode,
+    paper_expansion_calls,
+)
+from repro.core.viterbi import (
+    hmm_viterbi,
+    minplus_matmul,
+    viterbi_decode,
+    viterbi_decode_parallel,
+)
+
+__all__ = [
+    "acs_step",
+    "acs_step_unfused",
+    "awgn",
+    "bpsk_modulate",
+    "bsc",
+    "hard_branch_metrics",
+    "soft_branch_metrics",
+    "encode",
+    "pack_symbols",
+    "unpack_symbols",
+    "CODE_K3_PAPER",
+    "CODE_K3_STD",
+    "CODE_K5_GSM",
+    "CODE_K7_NASA",
+    "ConvCode",
+    "paper_expansion_calls",
+    "hmm_viterbi",
+    "viterbi_decode",
+    "viterbi_decode_parallel",
+    "minplus_matmul",
+]

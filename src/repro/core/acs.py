@@ -1,0 +1,68 @@
+"""Reference (pure-jnp) Add-Compare-Select — the paper's `Texpand` primitive.
+
+This is the oracle the Pallas kernels are validated against (kernels/ref.py
+re-exports it).  The butterfly formulation avoids gathers entirely — see
+trellis.py docstring.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.trellis import ConvCode
+
+
+def acs_step(code: ConvCode, pm: jnp.ndarray, bm_table: jnp.ndarray):
+    """One trellis-expansion (ACS) step for all states, batched.
+
+    Args:
+      pm: (..., S) float32 path metrics.
+      bm_table: (..., n_symbols) float32 per-step branch-metric table
+        (bm_table[c] = metric of emitting symbol c at this step).
+
+    Returns:
+      new_pm: (..., S) updated path metrics.
+      bp: (..., S) int32 backpointer bit j ∈ {0,1}; predecessor of successor
+        state ``s' = u*S/2 + v`` is ``2v + j``.  Ties select j=0 (the paper's
+        lowest-state rule, since 2v < 2v+1).
+    """
+    S = code.n_states
+    oh = jnp.asarray(code.butterfly_onehot)  # (2, S/2, 2, M)
+    # branch metric per (input-bit u, low-state v, pred-parity j)
+    bm = jnp.einsum("uvjm,...m->...uvj", oh, bm_table)  # (..., 2, S/2, 2)
+    pm2 = pm.reshape(pm.shape[:-1] + (S // 2, 2))  # pm2[..., v, j] = pm[..., 2v+j]
+    cand = pm2[..., None, :, :] + bm  # (..., 2, S/2, 2)
+    take1 = cand[..., 1] < cand[..., 0]  # strict: ties -> j=0 (lowest pred state)
+    new_pm = jnp.where(take1, cand[..., 1], cand[..., 0])
+    new_pm = new_pm.reshape(pm.shape[:-1] + (S,))
+    bp = take1.astype(jnp.int32).reshape(pm.shape[:-1] + (S,))
+    return new_pm, bp
+
+
+def acs_step_unfused(code: ConvCode, pm: jnp.ndarray, bm_table: jnp.ndarray):
+    """Deliberately *unfused* ACS, mirroring the paper's plain-assembly
+    trellis function: explicit per-transition adds, then compares, then
+    selects, using gathers on the predecessor/branch tables.
+
+    Semantically identical to :func:`acs_step`; used as the "without custom
+    instruction" baseline in the benchmarks (it lowers to many more HLO ops).
+    """
+    S = code.n_states
+    nxt = code.next_state  # (S, 2) numpy: loop bounds stay static under trace
+    bcode = code.branch_code  # (S, 2)
+    big = jnp.asarray(3.4e38, dtype=pm.dtype)
+    new_pm = jnp.full(pm.shape, big)
+    best_pred_parity = jnp.zeros(pm.shape, dtype=jnp.int32)
+    # iterate transitions exactly like the assembly loop: for each predecessor
+    # state p and input u, ADD branch metric, COMPARE against incumbent,
+    # SELECT the survivor.
+    for p in range(S):
+        for u in (0, 1):
+            sp = int(nxt[p, u])
+            cand = pm[..., p] + bm_table[..., int(bcode[p, u])]  # ADD
+            incumbent = new_pm[..., sp]
+            better = cand < incumbent  # COMPARE (strict: earlier p wins ties)
+            new_pm = new_pm.at[..., sp].set(jnp.where(better, cand, incumbent))  # SELECT
+            best_pred_parity = best_pred_parity.at[..., sp].set(
+                jnp.where(better, p & 1, best_pred_parity[..., sp])
+            )
+    return new_pm, best_pred_parity

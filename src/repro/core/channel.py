@@ -1,0 +1,57 @@
+"""Channel models + branch-metric table construction (hard & soft decision)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trellis import ConvCode
+
+
+def bsc(key: jax.Array, coded_bits: jnp.ndarray, flip_prob: float) -> jnp.ndarray:
+    """Binary symmetric channel: flip each bit with probability ``flip_prob``."""
+    flips = jax.random.bernoulli(key, flip_prob, coded_bits.shape)
+    return (coded_bits.astype(jnp.int32) ^ flips.astype(jnp.int32)).astype(jnp.int32)
+
+
+def bpsk_modulate(coded_bits: jnp.ndarray) -> jnp.ndarray:
+    """Map bit {0,1} -> symbol {+1,-1}."""
+    return 1.0 - 2.0 * coded_bits.astype(jnp.float32)
+
+
+def awgn(key: jax.Array, symbols: jnp.ndarray, snr_db: float) -> jnp.ndarray:
+    """Add white Gaussian noise at the given Es/N0 (dB); unit symbol energy."""
+    snr = 10.0 ** (snr_db / 10.0)
+    sigma = jnp.sqrt(1.0 / (2.0 * snr))
+    return symbols + sigma * jax.random.normal(key, symbols.shape)
+
+
+def hard_branch_metrics(code: ConvCode, received_bits: jnp.ndarray) -> jnp.ndarray:
+    """Hamming branch-metric tables.
+
+    Args:
+      received_bits: (..., T, n_out) hard bits.
+    Returns:
+      (..., T, n_symbols) float32 where entry c = hamming(r_t, symbol c).
+    """
+    from repro.core.encoder import pack_symbols
+
+    r = pack_symbols(code, received_bits)  # (..., T)
+    table = jnp.asarray(code.hamming_table)  # (M, M)
+    return table[r]  # (..., T, M)
+
+
+def soft_branch_metrics(code: ConvCode, received_values: jnp.ndarray) -> jnp.ndarray:
+    """Soft (correlation) branch-metric tables, to be MINIMIZED.
+
+    For BPSK (bit b -> symbol 1-2b) the ML metric to minimize is
+    ``sum_j (y_j - x_j)^2``;  dropping terms constant across symbols leaves
+    ``-2 sum_j y_j x_j``, i.e. ``bm(c) = sum_j y_j * (2*bit_j(c) - 1)``.
+
+    Args:
+      received_values: (..., T, n_out) real channel outputs.
+    Returns:
+      (..., T, n_symbols) float32.
+    """
+    bits = jnp.asarray(code.symbol_bits)  # (M, n)
+    x = 2.0 * bits - 1.0  # (M, n): +1 for bit 1 ... sign such that minimizing works
+    return jnp.einsum("...tj,mj->...tm", received_values.astype(jnp.float32), x)

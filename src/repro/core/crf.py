@@ -1,0 +1,84 @@
+"""Linear-chain CRF — the paper's trellis machinery as a *trainable*
+structured-prediction head.
+
+The Viterbi ACS step is a product in the (max,+) semiring; swapping the
+semiring to (logsumexp,+) gives the CRF forward algorithm (partition
+function), and the gradient of log Z recovers marginals — so one trellis
+implementation serves decoding (the paper's use) and learning.  Decode
+reuses :func:`repro.core.viterbi.hmm_viterbi`; training uses the
+forward-backward identity  log p(y|x) = score(x,y) − log Z(x).
+
+Both the sequential scan and a log-depth associative-scan variant of the
+forward pass are provided — the same parallelization the (min,+) decoder
+uses, because (logsumexp,+) matrix products are associative too.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.viterbi import hmm_viterbi
+
+
+def crf_score(transitions: jnp.ndarray, emissions: jnp.ndarray,
+              tags: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized path score.  transitions: (S, S) [from, to];
+    emissions: (B, T, S); tags: (B, T) int32.  Returns (B,)."""
+    B, T, S = emissions.shape
+    em = jnp.take_along_axis(emissions, tags[..., None], axis=-1)[..., 0]
+    tr = transitions[tags[:, :-1], tags[:, 1:]]
+    return em.sum(-1) + tr.sum(-1)
+
+
+def crf_log_norm(transitions: jnp.ndarray, emissions: jnp.ndarray,
+                 parallel: bool = False) -> jnp.ndarray:
+    """log Z via the forward algorithm in the (logsumexp,+) semiring."""
+    B, T, S = emissions.shape
+    alpha0 = emissions[:, 0]  # (B, S)
+
+    if not parallel:
+        def step(alpha, em_t):
+            nxt = jax.nn.logsumexp(
+                alpha[:, :, None] + transitions[None], axis=1) + em_t
+            return nxt, None
+
+        alpha, _ = jax.lax.scan(step, alpha0, emissions[:, 1:].swapaxes(0, 1))
+        return jax.nn.logsumexp(alpha, axis=-1)
+
+    # log-depth: (logsumexp,+) matrix product associative scan (the same
+    # trick as viterbi_decode_parallel with a different semiring)
+    mats = transitions[None, None] + emissions[:, 1:, None, :]  # (B,T-1,S,S)
+
+    def lse_matmul(a, b):
+        return jax.nn.logsumexp(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+    prefix = jax.lax.associative_scan(lse_matmul, mats, axis=1)
+    total = prefix[:, -1]  # (B, S, S)
+    return jax.nn.logsumexp(alpha0[:, :, None] + total, axis=(1, 2))
+
+
+def crf_loss(transitions, emissions, tags, valid: Optional[jnp.ndarray] = None
+             ) -> jnp.ndarray:
+    """Mean negative log-likelihood (full-length sequences)."""
+    nll = crf_log_norm(transitions, emissions) - crf_score(
+        transitions, emissions, tags)
+    return nll.mean()
+
+
+def crf_decode(transitions, emissions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MAP tag sequence = Viterbi in the (max,+) semiring (the paper's
+    decoder, with learned scores).  Returns (tags (B,T), score (B,))."""
+    B, T, S = emissions.shape
+    states, score = hmm_viterbi(
+        transitions, emissions, log_init=jnp.zeros((S,)))
+    return states, score
+
+
+def crf_marginals(transitions, emissions) -> jnp.ndarray:
+    """Posterior tag marginals via autodiff: d logZ / d emissions."""
+    def logz(em):
+        return crf_log_norm(transitions, em).sum()
+
+    return jax.grad(logz)(emissions)

@@ -1,0 +1,62 @@
+"""Convolutional encoder — a discrete-time LTI system over GF(2), in JAX.
+
+Fully vectorized (no scan): output bit j at time t is the GF(2) inner
+product of generator polynomial j with the register window
+``[u_t, ..., u_{t-K+1}]``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trellis import ConvCode
+
+
+def encode(code: ConvCode, bits: jnp.ndarray, terminate: bool = True) -> jnp.ndarray:
+    """Encode information bits.
+
+    Args:
+      code: the convolutional code.
+      bits: (..., T) array of {0,1} information bits.
+      terminate: if True, append K-1 zero flush bits (paper's convention: the
+        trellis starts AND ends in state 0).
+
+    Returns:
+      (..., T_out, n_out) array of {0,1} coded bits, where
+      T_out = T + (K-1 if terminate else 0).
+    """
+    bits = jnp.asarray(bits)
+    K = code.constraint
+    if terminate:
+        flush = jnp.zeros(bits.shape[:-1] + (K - 1,), dtype=bits.dtype)
+        bits = jnp.concatenate([bits, flush], axis=-1)
+    T = bits.shape[-1]
+    # window[..., t, i] = u_{t-i} (zero before start)
+    pad = jnp.concatenate(
+        [jnp.zeros(bits.shape[:-1] + (K - 1,), dtype=bits.dtype), bits], axis=-1
+    )
+    idx = jnp.arange(T)[:, None] + (K - 1) - jnp.arange(K)[None, :]  # (T, K)
+    window = pad[..., idx]  # (..., T, K) — window[..., t, i] = u_{t-i}
+    # generator taps: poly bit (K-1-i) multiplies u_{t-i}
+    taps = np.zeros((len(code.polys), K), dtype=np.int32)
+    for j, g in enumerate(code.polys):
+        for i in range(K):
+            taps[j, i] = (g >> (K - 1 - i)) & 1
+    taps = jnp.asarray(taps)
+    # GF(2) inner product = parity of AND
+    out = jnp.einsum("...tk,jk->...tj", window.astype(jnp.int32), taps) % 2
+    return out.astype(jnp.int32)
+
+
+def pack_symbols(code: ConvCode, coded_bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack (..., T, n_out) coded bits into (..., T) int32 symbols."""
+    n = code.n_out
+    weights = jnp.asarray([1 << (n - 1 - j) for j in range(n)], dtype=jnp.int32)
+    return jnp.einsum("...tj,j->...t", coded_bits.astype(jnp.int32), weights)
+
+
+def unpack_symbols(code: ConvCode, symbols: jnp.ndarray) -> jnp.ndarray:
+    """Unpack (..., T) int32 symbols into (..., T, n_out) bits."""
+    n = code.n_out
+    shifts = jnp.asarray([n - 1 - j for j in range(n)], dtype=jnp.int32)
+    return (symbols[..., None] >> shifts) & 1

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, ViterbiStream, make_data_iter
+
+__all__ = ["SyntheticLM", "ViterbiStream", "make_data_iter"]

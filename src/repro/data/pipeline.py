@@ -1,0 +1,113 @@
+"""Data pipeline: deterministic, restart-safe synthetic streams.
+
+Every batch is a pure function of (seed, step) — after a crash/restore the
+loop replays exactly the batch it would have seen, with no iterator state to
+checkpoint.  Per-host sharding: each host materializes only its slice of the
+global batch (sliced by process_index; a single-process run owns everything).
+
+Two generators:
+  SyntheticLM     — Zipf-distributed token documents packed to seq_len with
+                    EOS boundaries; labels = next token.
+  ViterbiStream   — random information bits -> convolutional encode -> noisy
+                    channel -> branch-metric tables (the paper's workload).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import bsc, hard_branch_metrics
+from repro.core.encoder import encode
+from repro.core.trellis import ConvCode
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    eos: int = 0
+    mean_doc_len: int = 512
+    zipf_a: float = 1.2
+    # modality stubs
+    n_prefix_tokens: int = 0
+    frontend_dim: int = 0
+    family: str = "lm"
+    dec_ratio: int = 4
+
+    def host_batch(self) -> int:
+        n_proc = jax.process_count()
+        assert self.global_batch % n_proc == 0
+        return self.global_batch // n_proc
+
+    def __call__(self, step: int) -> Dict[str, jnp.ndarray]:
+        # fold (seed, step, process) into one deterministic stream id
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, jax.process_index()]))
+        B = self.host_batch()
+        if self.family == "encdec":
+            S_dec = self.seq_len // self.dec_ratio
+            frames = rng.standard_normal(
+                (B, self.seq_len, self.frontend_dim), dtype=np.float32)
+            toks = self._pack_tokens(rng, B, S_dec + 1)
+            return {
+                "frames": jnp.asarray(frames, jnp.bfloat16),
+                "tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:]),
+            }
+        S_tok = self.seq_len - self.n_prefix_tokens
+        toks = self._pack_tokens(rng, B, S_tok + 1)
+        out = {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+        if self.n_prefix_tokens:
+            patches = rng.standard_normal(
+                (B, self.n_prefix_tokens, self.frontend_dim), dtype=np.float32)
+            out["patches"] = jnp.asarray(patches, jnp.bfloat16)
+        return out
+
+    def _pack_tokens(self, rng, B: int, S: int) -> np.ndarray:
+        """Zipf tokens packed into documents separated by EOS."""
+        toks = (rng.zipf(self.zipf_a, size=(B, S)) % (self.vocab - 1) + 1).astype(np.int32)
+        # sprinkle EOS at ~1/mean_doc_len rate -> document boundaries
+        eos_mask = rng.random((B, S)) < (1.0 / self.mean_doc_len)
+        toks[eos_mask] = self.eos
+        return toks
+
+
+@dataclasses.dataclass
+class ViterbiStream:
+    """The paper's workload: coded bits over a noisy channel, batched."""
+
+    code: ConvCode
+    n_info_bits: int
+    batch: int
+    flip_prob: float = 0.02
+    seed: int = 0
+
+    def __call__(self, step: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2 = jax.random.split(key)
+        bits = jax.random.bernoulli(k1, 0.5, (self.batch, self.n_info_bits)).astype(jnp.int32)
+        coded = encode(self.code, bits, terminate=True)
+        rx = bsc(k2, coded, self.flip_prob)
+        bm = hard_branch_metrics(self.code, rx)
+        return {"info_bits": bits, "coded": coded, "received": rx, "bm_tables": bm}
+
+
+def make_data_iter(model, shape, seed: int = 0):
+    """Data iterator factory keyed off a model config + shape cell."""
+    cfg = model.cfg
+    return SyntheticLM(
+        vocab=cfg.vocab,
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        seed=seed,
+        n_prefix_tokens=cfg.n_prefix_tokens if cfg.modality == "vision" else 0,
+        frontend_dim=cfg.frontend_dim,
+        family=cfg.family,
+        dec_ratio=cfg.dec_ratio,
+    )

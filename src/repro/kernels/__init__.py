@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (trellis ACS).
+
+texpand.py      — the paper's custom instruction: one fused ACS step
+viterbi_scan.py — full-T decode with VMEM-resident path metrics
+minplus.py      — (min,+) matmul for block-parallel / HMM Viterbi
+ops.py          — jit'd public wrappers (layout, padding, interpret switch)
+ref.py          — pure-jnp oracles
+"""
+from repro.kernels.ops import (
+    minplus_matmul_op,
+    texpand_op,
+    viterbi_decode_fused,
+    viterbi_forward_op,
+)
+
+__all__ = [
+    "texpand_op",
+    "viterbi_forward_op",
+    "viterbi_decode_fused",
+    "minplus_matmul_op",
+]

@@ -1,0 +1,71 @@
+"""(min,+) semiring matrix multiply as a Pallas kernel.
+
+Used by the block-parallel Viterbi decoder (chunk transfer-matrix products)
+and the general HMM Viterbi: ``C[i,j] = min_k A[i,k] + B[k,j]``.
+
+Tiled like a matmul: grid (batch, i-tile, j-tile, k-tile), k innermost, with a
+float32 accumulator tile in VMEM scratch that is min-reduced across k-tiles.
+The inner body broadcasts an (bi, bk, 1) tile against a (1, bk, bj) tile on
+the VPU — the (min,+) semiring has no MXU path, so this is deliberately a
+VPU kernel with MXU-friendly tile shapes (multiples of 8×128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.trellis import NEG_UNREACHABLE
+
+
+def _minplus_kernel(a_ref, b_ref, out_ref, acc_ref):
+    k = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, NEG_UNREACHABLE)
+
+    a = a_ref[0].astype(jnp.float32)  # (bi, bk)
+    b = b_ref[0].astype(jnp.float32)  # (bk, bj)
+    part = jnp.min(a[:, :, None] + b[None, :, :], axis=1)  # (bi, bj)
+    acc_ref[...] = jnp.minimum(acc_ref[...], part)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
+def minplus_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched (min,+) matmul.  a: (N, I, K), b: (N, K, J) -> (N, I, J).
+
+    Dims must be multiples of the block sizes (ops.py pads with the
+    semiring's +inf identity, which is correct for min-reduction).
+    """
+    N, I, K = a.shape
+    _, _, J = b.shape
+    grid = (N, I // block_i, J // block_j, K // block_k)
+    out = pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_i, block_k), lambda n, i, j, k: (n, i, k)),
+            pl.BlockSpec((1, block_k, block_j), lambda n, i, j, k: (n, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_i, block_j), lambda n, i, j, k: (n, i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, I, J), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_i, block_j), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out

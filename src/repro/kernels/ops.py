@@ -1,0 +1,118 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle layout conversion ((B, S) user layout <-> (S, B) kernel layout),
+lane/sublane padding, interpret-mode selection (CPU container -> interpret;
+real TPU -> compiled), and compose the full fused decoder (kernel forward
+pass + traceback).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trellis import NEG_UNREACHABLE, ConvCode
+from repro.core.viterbi import _initial_pm, _traceback
+from repro.kernels import minplus as _minplus
+from repro.kernels import texpand as _texpand
+from repro.kernels import viterbi_scan as _vscan
+
+
+def _use_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value) -> Tuple[jnp.ndarray, int]:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), pad
+
+
+def texpand_op(
+    code: ConvCode,
+    pm: jnp.ndarray,
+    bm_table: jnp.ndarray,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused ACS step in user layout.  pm: (B, S); bm_table: (B, M)."""
+    B = pm.shape[0]
+    pm_k = pm.T  # (S, B)
+    bm_k = bm_table.T  # (M, B)
+    block_b = 128 if B >= 128 else max(8, B)
+    pm_k, _ = _pad_to(pm_k, 1, block_b, NEG_UNREACHABLE)
+    bm_k, _ = _pad_to(bm_k, 1, block_b, 0.0)
+    new_pm, bp = _texpand.texpand(
+        code, pm_k.astype(jnp.float32), bm_k.astype(jnp.float32), block_b, _use_interpret(interpret)
+    )
+    return new_pm[:, :B].T, bp[:, :B].T
+
+
+def viterbi_forward_op(
+    code: ConvCode,
+    bm_tables: jnp.ndarray,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full fused forward pass.  bm_tables: (B, T, M).
+
+    Returns final_pm (B, S) and backpointers (T, B, S) (traceback layout).
+    """
+    B, T, M = bm_tables.shape
+    bm_k = bm_tables.transpose(1, 2, 0)  # (T, M, B)
+    block_b = 128 if B >= 128 else max(8, B)
+    bm_k, _ = _pad_to(bm_k, 2, block_b, 0.0)
+    final_pm, bps = _vscan.viterbi_scan(
+        code, bm_k.astype(jnp.float32), block_b, _use_interpret(interpret)
+    )
+    return final_pm[:, :B].T, bps[:, :, :B].transpose(0, 2, 1)
+
+
+def viterbi_decode_fused(
+    code: ConvCode,
+    bm_tables: jnp.ndarray,
+    terminated: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-in fused replacement for core.viterbi.viterbi_decode.
+
+    bm_tables: (B, T, M) -> (bits (B, T), metric (B,)).
+    """
+    B = bm_tables.shape[0]
+    final_pm, bps = viterbi_forward_op(code, bm_tables, interpret)
+    if terminated:
+        final_state = jnp.zeros((B,), dtype=jnp.int32)
+        metric = final_pm[:, 0]
+    else:
+        final_state = jnp.argmin(final_pm, axis=-1).astype(jnp.int32)
+        metric = final_pm.min(axis=-1)
+    bits, _ = _traceback(code, bps, final_state)
+    return bits, metric
+
+
+def minplus_matmul_op(
+    a: jnp.ndarray, b: jnp.ndarray, interpret: Optional[bool] = None
+) -> jnp.ndarray:
+    """Batched (min,+) matmul with padding.  a: (..., I, K), b: (..., K, J)."""
+    batch_shape = a.shape[:-2]
+    I, K = a.shape[-2:]
+    J = b.shape[-1]
+    a2 = a.reshape((-1, I, K))
+    b2 = b.reshape((-1, K, J))
+    bi = min(128, max(8, I))
+    bj = 128 if J >= 128 else max(8, J)
+    bk = min(128, max(8, K))
+    a2, _ = _pad_to(a2, 1, bi, NEG_UNREACHABLE)
+    a2, _ = _pad_to(a2, 2, bk, NEG_UNREACHABLE)
+    b2, _ = _pad_to(b2, 1, bk, NEG_UNREACHABLE)
+    b2, _ = _pad_to(b2, 2, bj, NEG_UNREACHABLE)
+    out = _minplus.minplus_matmul(
+        a2.astype(jnp.float32), b2.astype(jnp.float32), bi, bj, bk, _use_interpret(interpret)
+    )
+    out = jnp.minimum(out, NEG_UNREACHABLE)  # padded lanes produced 2*BIG
+    return out[:, :I, :J].reshape(batch_shape + (I, J))

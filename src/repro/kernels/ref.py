@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the reference implementations
+the kernels are validated against, in kernel-native (state, batch) layout)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trellis import ConvCode
+
+
+def texpand_ref(
+    code: ConvCode, pm: jnp.ndarray, bm_table: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the one-step fused ACS kernel.
+
+    Kernel-native layout: states/symbols lead, batch is the minor (lane) axis.
+
+    Args:
+      pm: (S, B) float32 path metrics.
+      bm_table: (M, B) float32 per-step branch-metric table.
+    Returns:
+      new_pm: (S, B); bp: (S, B) int32 backpointer parity (ties -> 0).
+    """
+    P0, P1 = code.select_matrices
+    OH0, OH1 = code.branch_onehot_pair
+    cand0 = jnp.asarray(P0) @ pm + jnp.asarray(OH0) @ bm_table
+    cand1 = jnp.asarray(P1) @ pm + jnp.asarray(OH1) @ bm_table
+    take1 = cand1 < cand0
+    return jnp.where(take1, cand1, cand0), take1.astype(jnp.int32)
+
+
+def viterbi_scan_ref(
+    code: ConvCode, bm_tables: jnp.ndarray, pm0: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the full-sequence kernel.
+
+    Args:
+      bm_tables: (T, M, B); pm0: (S, B) initial metrics.
+    Returns:
+      final_pm: (S, B); bps: (T, S, B) int32.
+    """
+
+    def step(pm, bm_t):
+        new_pm, bp = texpand_ref(code, pm, bm_t)
+        return new_pm, bp
+
+    final_pm, bps = jax.lax.scan(step, pm0, bm_tables)
+    return final_pm, bps
+
+
+def minplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the (min,+) matmul kernel.  a: (B, I, K), b: (B, K, J)."""
+    return jnp.min(a[..., :, :, None] + b[..., None, :, :], axis=-2)

@@ -1,0 +1,81 @@
+"""`Texpand` — the paper's custom instruction as a fused Pallas TPU kernel.
+
+One trellis-expansion (Add-Compare-Select) step for all states of a batch of
+decoders, fused into a single kernel:
+
+  ADD      cand_j = P_j @ pm + OH_j @ bm_table     (two small MXU matmuls)
+  COMPARE  take1  = cand_1 < cand_0               (strict -> paper tie-break)
+  SELECT   pm'    = where(take1, cand_1, cand_0)
+
+The predecessor "gather" is expressed as one-hot matmuls against static
+selection matrices (see trellis.py) so the kernel contains **no gathers** —
+adds/compares ride the VPU, table lookups ride the MXU.  Path metrics,
+selection matrices and branch tables all live in VMEM.
+
+Layout: (state, batch) — batch on the 128-wide lane axis, states on sublanes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.trellis import ConvCode
+
+
+def _texpand_kernel(p0_ref, p1_ref, oh0_ref, oh1_ref, pm_ref, bm_ref, out_pm_ref, out_bp_ref):
+    pm = pm_ref[...]
+    bm = bm_ref[...]
+    f32 = jnp.float32
+    cand0 = jax.lax.dot(p0_ref[...], pm.astype(f32), precision=jax.lax.Precision.HIGHEST) + jax.lax.dot(
+        oh0_ref[...], bm.astype(f32), precision=jax.lax.Precision.HIGHEST
+    )
+    cand1 = jax.lax.dot(p1_ref[...], pm.astype(f32), precision=jax.lax.Precision.HIGHEST) + jax.lax.dot(
+        oh1_ref[...], bm.astype(f32), precision=jax.lax.Precision.HIGHEST
+    )
+    take1 = cand1 < cand0
+    out_pm_ref[...] = jnp.where(take1, cand1, cand0).astype(out_pm_ref.dtype)
+    out_bp_ref[...] = take1.astype(out_bp_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def texpand(
+    code: ConvCode,
+    pm: jnp.ndarray,
+    bm_table: jnp.ndarray,
+    block_b: int = 128,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused ACS step.  pm: (S, B); bm_table: (M, B).  B must be a
+    multiple of ``block_b`` (ops.py handles padding)."""
+    S, B = pm.shape
+    M = bm_table.shape[0]
+    P0, P1 = code.select_matrices
+    OH0, OH1 = code.branch_onehot_pair
+    grid = (B // block_b,)
+    tbl = lambda r, c: pl.BlockSpec((r, c), lambda i: (0, 0))  # noqa: E731
+    out_pm, out_bp = pl.pallas_call(
+        _texpand_kernel,
+        grid=grid,
+        in_specs=[
+            tbl(S, S),
+            tbl(S, S),
+            tbl(S, M),
+            tbl(S, M),
+            pl.BlockSpec((S, block_b), lambda i: (0, i)),
+            pl.BlockSpec((M, block_b), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((S, block_b), lambda i: (0, i)),
+            pl.BlockSpec((S, block_b), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, B), pm.dtype),
+            jax.ShapeDtypeStruct((S, B), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(P0), jnp.asarray(P1), jnp.asarray(OH0), jnp.asarray(OH1), pm, bm_table)
+    return out_pm, out_bp

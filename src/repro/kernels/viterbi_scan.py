@@ -1,0 +1,92 @@
+"""Full-sequence Viterbi forward pass as a single Pallas kernel.
+
+This is the strongest TPU analogue of the paper's custom instruction: the
+path metrics stay **resident in VMEM scratch across all T trellis steps** —
+they never round-trip to HBM, exactly like the microcoded Texpand keeps its
+operands out of the fetch/decode path.  The grid iterates (batch-tile, time);
+TPU grid execution is sequential, so scratch carries state across time steps.
+
+Per grid step:   bm_t tile (M, bB) streams in;  bp tile (S, bB) streams out;
+                 pm (S, bB) lives in scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.trellis import NEG_UNREACHABLE, ConvCode
+
+
+def _viterbi_scan_kernel(
+    p0_ref, p1_ref, oh0_ref, oh1_ref, bm_ref, out_bp_ref, out_pm_ref, pm_scratch
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        # paths start in state 0 (paper §IV-B): pm = [0, +inf, ...]
+        S = pm_scratch.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, pm_scratch.shape, 0)
+        pm_scratch[...] = jnp.where(row == 0, 0.0, NEG_UNREACHABLE)
+
+    pm = pm_scratch[...]
+    bm = bm_ref[0].astype(jnp.float32)
+    hi = jax.lax.Precision.HIGHEST
+    cand0 = jax.lax.dot(p0_ref[...], pm, precision=hi) + jax.lax.dot(oh0_ref[...], bm, precision=hi)
+    cand1 = jax.lax.dot(p1_ref[...], pm, precision=hi) + jax.lax.dot(oh1_ref[...], bm, precision=hi)
+    take1 = cand1 < cand0
+    new_pm = jnp.where(take1, cand1, cand0)
+    # clamp: unreachable-state metrics grow by BIG per matmul otherwise
+    new_pm = jnp.minimum(new_pm, NEG_UNREACHABLE)
+    pm_scratch[...] = new_pm
+    out_bp_ref[0] = take1.astype(out_bp_ref.dtype)
+    out_pm_ref[...] = new_pm.astype(out_pm_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def viterbi_scan(
+    code: ConvCode,
+    bm_tables: jnp.ndarray,
+    block_b: int = 128,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run all T ACS steps with VMEM-resident path metrics.
+
+    Args:
+      bm_tables: (T, M, B) float32.  B must be a multiple of ``block_b``.
+    Returns:
+      final_pm: (S, B) float32; bps: (T, S, B) int32 backpointer parities.
+    """
+    T, M, B = bm_tables.shape
+    S = code.n_states
+    P0, P1 = code.select_matrices
+    OH0, OH1 = code.branch_onehot_pair
+    grid = (B // block_b, T)  # time innermost: scratch carries pm across t
+    tbl = lambda r, c: pl.BlockSpec((r, c), lambda b, t: (0, 0))  # noqa: E731
+    bps, final_pm = pl.pallas_call(
+        _viterbi_scan_kernel,
+        grid=grid,
+        in_specs=[
+            tbl(S, S),
+            tbl(S, S),
+            tbl(S, M),
+            tbl(S, M),
+            pl.BlockSpec((1, M, block_b), lambda b, t: (t, 0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, block_b), lambda b, t: (t, 0, b)),
+            pl.BlockSpec((S, block_b), lambda b, t: (0, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, S, B), jnp.int32),
+            jax.ShapeDtypeStruct((S, B), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((S, block_b), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(P0), jnp.asarray(P1), jnp.asarray(OH0), jnp.asarray(OH1), bm_tables)
+    return final_pm, bps

@@ -1,0 +1,86 @@
+"""Training launcher.
+
+On real hardware: one process per host (jax.distributed.initialize picks up
+the pod topology), production mesh from launch/mesh.py, sharded data by
+process_index, async checkpoints to shared storage, crash -> restore ->
+resume.  On this CPU container the same code path runs a reduced config
+end-to-end (examples/train_lm.py drives it).
+
+  python -m repro.launch.train --arch qwen3_4b --smoke --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--global-batch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--mesh", default="none", choices=("none", "single", "multi", "host"))
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (multi-host pods)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+
+        jax.distributed.initialize()
+
+    import jax
+
+    from repro.configs.base import SHAPES, get_arch, get_smoke_arch
+    from repro.data.pipeline import make_data_iter
+    from repro.launch.mesh import make_production_mesh, smoke_mesh
+    from repro.models.model_zoo import build
+    from repro.train.train_loop import train
+
+    bundle = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
+    model = build(bundle)
+
+    import dataclasses
+
+    shape = SHAPES["train_4k"]
+    if args.seq_len:
+        shape = dataclasses.replace(shape, seq_len=args.seq_len)
+    if args.global_batch:
+        shape = dataclasses.replace(shape, global_batch=args.global_batch)
+    if args.smoke and not args.seq_len:
+        shape = dataclasses.replace(shape, seq_len=128, global_batch=4)
+
+    mesh = None
+    if args.mesh == "single":
+        mesh = make_production_mesh()
+    elif args.mesh == "multi":
+        mesh = make_production_mesh(multi_pod=True)
+    elif args.mesh == "host":
+        mesh = smoke_mesh()
+
+    data = make_data_iter(model, shape)
+    report = train(
+        model, data, steps=args.steps, lr=args.lr, warmup=args.warmup,
+        mesh=mesh,
+        checkpoint_dir=args.checkpoint_dir or None,
+        checkpoint_every=args.checkpoint_every,
+    )
+    last = report["history"][-1] if report["history"] else {}
+    print(json.dumps({
+        "arch": model.cfg.name, "steps": report["final_step"],
+        "restarts": report["restarts"],
+        "straggler_events": len(report["straggler_events"]),
+        "final_metrics": {k: v for k, v in last.items() if k != "step"},
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

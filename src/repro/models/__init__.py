@@ -1,0 +1,5 @@
+"""Model substrate: blocks (attention/MLA/MoE/SSM/xLSTM), assemblies
+(decoder-only LM, encoder-decoder), and the model zoo."""
+from repro.models.model_zoo import Model, build
+
+__all__ = ["Model", "build"]

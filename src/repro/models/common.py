@@ -1,0 +1,311 @@
+"""Model substrate: param-spec system, norms, dense/embedding, RoPE.
+
+Params are plain pytrees (nested dicts of jnp arrays).  Every param is
+declared first as a :class:`ParamSpec` carrying shape, dtype, *logical axis
+names* and an initializer.  The spec tree gives us, without any allocation:
+  - ``abstract(specs)``      -> ShapeDtypeStruct tree (dry-run inputs)
+  - ``shardings(specs, ...)`` -> NamedSharding tree (pjit in_shardings)
+  - ``init_params(specs, key)`` -> materialized params (smoke tests / training)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------- #
+# Param specs                                                                   #
+# ---------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0  # std multiplier for normal init (before fan-in scaling)
+    fan_in: int = 0  # 0 -> no fan-in scaling
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_leaves_with_specs(specs):
+    return jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+
+
+def abstract(specs):
+    """ShapeDtypeStruct tree from a spec tree (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
+    )
+
+
+def init_params(specs, key: jax.Array):
+    leaves, treedef = tree_leaves_with_specs(specs)
+    keys = jax.random.split(key, max(2, len(leaves)))
+
+    def one(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.dtype)
+        std = spec.scale
+        if spec.fan_in:
+            std = spec.scale / np.sqrt(spec.fan_in)
+        if spec.init == "embed":
+            std = spec.scale
+        return (jax.random.normal(k, spec.shape) * std).astype(spec.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(s, k) for s, k in zip(leaves, keys)]
+    )
+
+
+# ---------------------------------------------------------------------------- #
+# Logical-axis -> mesh resolution                                               #
+# ---------------------------------------------------------------------------- #
+
+# Default logical rules.  Values are mesh axis names (or tuples).  An axis is
+# only actually sharded if the dim size divides the mesh axis size (maybe-shard
+# semantics) — this is what makes e.g. kv_heads=2 compile under model=16.
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "embed": None,
+    "ff": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "vocab": "model",
+    "expert": "model",
+    "expert_ff": None,
+    "kv_lora": None,
+    "seq": None,
+    "seq_shard": "model",  # activations under Megatron-SP
+    "dstate": None,
+    "dinner": "model",  # mamba/xlstm inner dim
+    "layers": None,
+    "conv": None,
+    "capacity": None,
+    "frontend": None,
+}
+
+FSDP_RULES_OVERRIDE: Dict[str, Any] = {
+    # ZeRO-3: additionally shard the embed dim of weights over the data axis
+    "embed": "data",
+}
+
+
+def _mesh_axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= _mesh_axis_size(mesh, a)
+        return out
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+
+def resolve_axes(mesh, rules: Dict[str, Any], shape, axes) -> "jax.sharding.PartitionSpec":
+    """Logical axes -> PartitionSpec with divisibility (maybe-shard) checks
+    and no mesh axis used twice."""
+    from jax.sharding import PartitionSpec as P
+
+    used = set()
+    out = []
+    for size, name in zip(shape, axes):
+        mesh_axis = rules.get(name) if name else None
+        if mesh_axis is None:
+            out.append(None)
+            continue
+        axes_tuple = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        # drop axes missing from mesh, already used, or non-dividing
+        kept = []
+        for a in axes_tuple:
+            if a in mesh.shape and a not in used:
+                kept.append(a)
+        if not kept:
+            out.append(None)
+            continue
+        total = 1
+        for a in kept:
+            total *= mesh.shape[a]
+        if size % total != 0:
+            # try progressively shorter prefixes
+            while kept:
+                kept = kept[:-1]
+                total = 1
+                for a in kept:
+                    total *= mesh.shape[a]
+                if kept and size % total == 0:
+                    break
+            if not kept:
+                out.append(None)
+                continue
+        used.update(kept)
+        out.append(tuple(kept) if len(kept) > 1 else kept[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shardings(specs, mesh, rules: Optional[Dict[str, Any]] = None):
+    """NamedSharding tree for a spec tree."""
+    from jax.sharding import NamedSharding
+
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, resolve_axes(mesh, rules, s.shape, s.axes)),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def logical_sharding(mesh, rules, shape, axes):
+    from jax.sharding import NamedSharding
+
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    return NamedSharding(mesh, resolve_axes(mesh, rules, shape, axes))
+
+
+def constrain(x, mesh, rules, axes):
+    """with_sharding_constraint by logical axes (no-op off-mesh)."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, logical_sharding(mesh, rules, x.shape, axes)
+    )
+
+
+# ---------------------------------------------------------------------------- #
+# Layers                                                                        #
+# ---------------------------------------------------------------------------- #
+
+
+def dense_spec(
+    in_dims: Sequence[int],
+    out_dims: Sequence[int],
+    in_axes: Sequence[Optional[str]],
+    out_axes: Sequence[Optional[str]],
+    *,
+    stack: int = 0,
+    bias: bool = False,
+    dtype=jnp.float32,
+    scale: float = 1.0,
+):
+    """Spec for a (possibly layer-stacked) dense kernel of shape
+    (stack?, *in_dims, *out_dims)."""
+    shape = tuple(in_dims) + tuple(out_dims)
+    axes = tuple(in_axes) + tuple(out_axes)
+    if stack:
+        shape = (stack,) + shape
+        axes = ("layers",) + axes
+    fan_in = int(np.prod(in_dims))
+    p = {"kernel": ParamSpec(shape, axes, "normal", scale, fan_in, dtype)}
+    if bias:
+        bshape = tuple(out_dims)
+        baxes = tuple(out_axes)
+        if stack:
+            bshape = (stack,) + bshape
+            baxes = ("layers",) + baxes
+        p["bias"] = ParamSpec(bshape, baxes, "zeros", dtype=dtype)
+    return p
+
+
+def dense(params, x, spec: str, compute_dtype=jnp.bfloat16):
+    """Apply a dense layer given an einsum spec, e.g. '...d,dhq->...hq'."""
+    kernel = params["kernel"].astype(compute_dtype)
+    y = jnp.einsum(spec, x.astype(compute_dtype), kernel)
+    if "bias" in params:
+        y = y + params["bias"].astype(compute_dtype)
+    return y
+
+
+def norm_spec(d: int, *, stack: int = 0, style: str = "rms"):
+    shape, axes = (d,), ("embed",)
+    if stack:
+        shape, axes = (stack, d), ("layers", "embed")
+    init = "zeros" if style == "gemma" else "ones"
+    p = {"scale": ParamSpec(shape, axes, init)}
+    if style == "layer":
+        p["bias"] = ParamSpec(shape, axes, "zeros")
+    return p
+
+
+def rmsnorm(params, x, eps: float = 1e-6, gemma: bool = False, compute_dtype=jnp.bfloat16):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if gemma:
+        scale = scale + 1.0
+    return (y * scale).astype(compute_dtype)
+
+
+def layernorm(params, x, eps: float = 1e-6, compute_dtype=jnp.bfloat16):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(compute_dtype)
+
+
+def embed_spec(vocab: int, d: int, dtype=jnp.float32):
+    # std = 1/sqrt(d): keeps tied-head logits O(1) at init (gemma-style
+    # embed_scale multiplies the *input* side back up by sqrt(d)).
+    return {"embedding": ParamSpec((vocab, d), ("vocab", "embed"), "embed", d ** -0.5, 0, dtype)}
+
+
+def embed_lookup(params, tokens, compute_dtype=jnp.bfloat16):
+    return params["embedding"].astype(compute_dtype)[tokens]
+
+
+def qknorm_spec(head_dim: int, stack: int = 0):
+    shape, axes = (head_dim,), ("head_dim",)
+    if stack:
+        shape, axes = (stack, head_dim), ("layers", "head_dim")
+    return {
+        "q_scale": ParamSpec(shape, axes, "ones"),
+        "k_scale": ParamSpec(shape, axes, "ones"),
+    }
+
+
+def headwise_rmsnorm(scale, x, eps=1e-6):
+    """RMS norm over the last (head) dim; x: (..., head_dim)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------- #
+# RoPE                                                                          #
+# ---------------------------------------------------------------------------- #
+
+
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (..., S) int -> cos/sin (..., S, dim//2) float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D) with D even; cos/sin: (..., S, D//2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def activation(name: str) -> Callable:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]

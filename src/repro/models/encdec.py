@@ -1,0 +1,230 @@
+"""Encoder-decoder assembly (seamless-m4t family).
+
+Encoder: bidirectional attention blocks over (stub) audio frame embeddings —
+the modality frontend provides precomputed (B, S_enc, frontend_dim) frames
+per the assignment; a linear projector maps them into d_model.
+
+Decoder: causal self-attention + cross-attention + MLP blocks over text
+tokens, with a self KV cache and precomputed cross K/V for serving.
+
+Shape conventions (documented in DESIGN.md):
+  train:   S_enc = shape.seq_len frames, S_dec = seq_len // dec_ratio tokens
+  prefill: encoder forward over seq_len + cross-KV precompute + decoder
+           prefill over seq_len // dec_ratio
+  decode:  one decoder token against a self cache of seq_len and cross K/V
+           of length seq_len (the cell's "KV cache of seq_len").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.attention import (
+    attention_specs,
+    cross_attention,
+    cross_kv,
+    self_attention,
+    self_attention_decode,
+)
+from repro.models.mlp import mlp_apply, mlp_specs
+from repro.models.transformer import (
+    _remat_policy,
+    lm_head,
+    remat_scan,
+    softmax_xent,
+)
+
+
+# --------------------------------------------------------------------------- #
+# Specs                                                                        #
+# --------------------------------------------------------------------------- #
+
+
+def encdec_specs(cfg, part) -> Dict[str, Any]:
+    d = cfg.d_model
+    enc_stack = cfg.enc_layers
+    dec_stack = cfg.n_layers
+    p: Dict[str, Any] = {
+        "frontend_proj": cm.dense_spec((cfg.frontend_dim,), (d,), ("frontend",), ("embed",)),
+        "embed": cm.embed_spec(cfg.vocab, d),
+        "encoder": {
+            "ln1": cm.norm_spec(d, stack=enc_stack),
+            "attn": attention_specs(cfg, enc_stack),
+            "ln2": cm.norm_spec(d, stack=enc_stack),
+            "mlp": mlp_specs(cfg, enc_stack),
+        },
+        "enc_norm": cm.norm_spec(d, stack=0),
+        "decoder": {
+            "ln1": cm.norm_spec(d, stack=dec_stack),
+            "self": attention_specs(cfg, dec_stack),
+            "ln_cross": cm.norm_spec(d, stack=dec_stack),
+            "cross": attention_specs(cfg, dec_stack),
+            "ln2": cm.norm_spec(d, stack=dec_stack),
+            "mlp": mlp_specs(cfg, dec_stack),
+        },
+        "final_norm": cm.norm_spec(d, stack=0),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.dense_spec((d,), (cfg.vocab,), ("embed",), ("vocab",))
+    return p
+
+
+def encdec_cache_specs(cfg, part, B: int, S: int) -> Dict[str, Any]:
+    """Self cache (dec_stack, B, S, KV, hd) + cross K/V of the same S_enc=S."""
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dec_stack = cfg.n_layers
+    seq_ax = "kv_seq" if part.flash_decode else None
+    kv = cm.ParamSpec(
+        (dec_stack, B, S, KV, hd),
+        ("layers", "batch", seq_ax, "kv_heads", "head_dim"),
+        "zeros", dtype=jnp.bfloat16)
+    return {"self": {"k": kv, "v": kv}, "cross": {"k": kv, "v": kv}}
+
+
+# --------------------------------------------------------------------------- #
+# Encoder                                                                      #
+# --------------------------------------------------------------------------- #
+
+
+def encode_frames(params, cfg, part, frames, mesh=None, rules=None):
+    """frames: (B, S_enc, frontend_dim) -> (B, S_enc, d)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = cm.dense(params["frontend_proj"], frames, "...f,fd->...d", cd)
+    if mesh is not None:
+        x = cm.constrain(x, mesh, rules, ("batch", None, None))
+
+    def layer_fn(x, lp):
+        h = cm.rmsnorm(lp["ln1"], x, cfg.norm_eps, compute_dtype=cd)
+        y, _ = self_attention(lp["attn"], cfg, part, h, kind="attn_bidir", mesh=mesh)
+        x = x + y
+        h = cm.rmsnorm(lp["ln2"], x, cfg.norm_eps, compute_dtype=cd)
+        x = x + mlp_apply(lp["mlp"], cfg, h)
+        return x, None
+
+    policy = _remat_policy(part)
+    if policy is not None:
+        layer_fn = jax.checkpoint(layer_fn, policy=policy)
+    x, _ = remat_scan(layer_fn, x, params["encoder"], cfg.enc_layers, policy)
+    return cm.rmsnorm(params["enc_norm"], x, cfg.norm_eps, compute_dtype=cd)
+
+
+def encode_cross_kv(params, cfg, enc_out):
+    """Per-decoder-layer cross K/V from encoder output: (L, B, S, KV, hd)."""
+
+    def one_layer(_, lp):
+        kv = cross_kv(lp["cross"], cfg, enc_out)
+        return None, (kv["k"].astype(jnp.bfloat16), kv["v"].astype(jnp.bfloat16))
+
+    _, (ks, vs) = jax.lax.scan(one_layer, None, params["decoder"])
+    return {"k": ks, "v": vs}
+
+
+# --------------------------------------------------------------------------- #
+# Decoder                                                                      #
+# --------------------------------------------------------------------------- #
+
+
+def _dec_layer_full(lp, cfg, part, x, enc_out, self_cache, mesh):
+    """One decoder layer.  Cross K/V are computed HERE from enc_out (and
+    recomputed in backward under remat) — precomputing all layers' cross
+    K/V up front costs L×(B,S_enc,KV,hd)×2 live tensors, which dominated
+    the enc-dec train cells."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    h = cm.rmsnorm(lp["ln1"], x, cfg.norm_eps, compute_dtype=cd)
+    y, new_self = self_attention(
+        lp["self"], cfg, part, h, kind="attn", cache=self_cache, mesh=mesh)
+    x = x + y
+    h = cm.rmsnorm(lp["ln_cross"], x, cfg.norm_eps, compute_dtype=cd)
+    kv = cross_kv(lp["cross"], cfg, enc_out)
+    x = x + cross_attention(lp["cross"], cfg, part, h, enc_kv=kv, mesh=mesh)
+    h = cm.rmsnorm(lp["ln2"], x, cfg.norm_eps, compute_dtype=cd)
+    x = x + mlp_apply(lp["mlp"], cfg, h)
+    return x, new_self
+
+
+def decoder_forward(params, cfg, part, tokens, enc_out, *,
+                    self_caches=None, mesh=None, rules=None):
+    """Teacher-forced decoder.  tokens: (B, S_dec); enc_out: (B, S_enc, d).
+    Returns (hidden, new self caches or None)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = cm.embed_lookup(params["embed"], tokens, cd)
+
+    def layer_fn(x, xs):
+        lp, sc = xs
+        x, new_self = _dec_layer_full(lp, cfg, part, x, enc_out, sc, mesh)
+        return x, new_self
+
+    policy = _remat_policy(part)
+    if policy is not None:
+        layer_fn = jax.checkpoint(layer_fn, policy=policy)
+    x, new_selfs = remat_scan(
+        layer_fn, x, (params["decoder"], self_caches),
+        cfg.n_layers, policy)
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps, compute_dtype=cd)
+    return x, (new_selfs if self_caches is not None else None)
+
+
+# --------------------------------------------------------------------------- #
+# Top-level steps                                                              #
+# --------------------------------------------------------------------------- #
+
+
+def encdec_train_loss(params, cfg, part, batch, mesh=None, rules=None):
+    """batch: {"frames": (B,S_enc,F), "tokens": (B,S_dec), "labels": (B,S_dec)}."""
+    enc_out = encode_frames(params, cfg, part, batch["frames"], mesh, rules)
+    x, _ = decoder_forward(params, cfg, part, batch["tokens"], enc_out,
+                           mesh=mesh, rules=rules)
+    logits = lm_head(params, cfg, x)
+    loss = softmax_xent(logits, batch["labels"], batch.get("valid"), mesh=mesh)
+    return loss, {"loss": loss}
+
+
+def encdec_prefill(params, cfg, part, batch, caches, *, mesh=None, rules=None):
+    """Encoder forward + cross-KV precompute + decoder prefill.
+
+    batch: {"frames": (B, S_enc, F), "tokens": (B, S_dec)}.
+    caches: {"self": ..., "cross": ...} with S = S_enc (cross) / >=S_dec (self).
+    """
+    enc_out = encode_frames(params, cfg, part, batch["frames"], mesh, rules)
+    cross = encode_cross_kv(params, cfg, enc_out)
+    # write cross K/V into the (possibly longer) cross cache
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        caches["cross"]["k"], cross["k"].astype(caches["cross"]["k"].dtype), 0, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        caches["cross"]["v"], cross["v"].astype(caches["cross"]["v"].dtype), 0, axis=2)
+    x, new_selfs = decoder_forward(
+        params, cfg, part, batch["tokens"], enc_out,
+        self_caches=caches["self"], mesh=mesh, rules=rules)
+    logits = lm_head(params, cfg, x[:, -1:])[:, 0]
+    return logits, {"self": new_selfs, "cross": {"k": ck, "v": cv}}
+
+
+def encdec_decode_step(params, cfg, part, tokens, positions, caches, *,
+                       mesh=None, rules=None):
+    """One decoder token.  tokens: (B,1); caches: {"self","cross"} stacked."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = cm.embed_lookup(params["embed"], tokens, cd)
+
+    def layer_fn(x, xs):
+        lp, sc, ck, cv = xs
+        h = cm.rmsnorm(lp["ln1"], x, cfg.norm_eps, compute_dtype=cd)
+        y, new_self = self_attention_decode(
+            lp["self"], cfg, part, h, kind="attn", positions=positions,
+            cache=sc, mesh=mesh)
+        x = x + y
+        h = cm.rmsnorm(lp["ln_cross"], x, cfg.norm_eps, compute_dtype=cd)
+        x = x + cross_attention(lp["cross"], cfg, part, h,
+                                enc_kv={"k": ck, "v": cv}, decode=True, mesh=mesh)
+        h = cm.rmsnorm(lp["ln2"], x, cfg.norm_eps, compute_dtype=cd)
+        x = x + mlp_apply(lp["mlp"], cfg, h)
+        return x, new_self
+
+    x, new_selfs = jax.lax.scan(
+        layer_fn, x,
+        (params["decoder"], caches["self"], caches["cross"]["k"], caches["cross"]["v"]))
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps, compute_dtype=cd)
+    logits = lm_head(params, cfg, x)[:, 0]
+    return logits, {"self": new_selfs, "cross": caches["cross"]}

@@ -1,0 +1,124 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Prefill/train use the expanded form (materialize per-head K/V from the
+compressed c_kv) with chunked attention.  Decode uses the **absorbed** form:
+the cache holds only (c_kv: r=512, k_rope: 64) per token — the whole point of
+MLA — and queries are mapped into the compressed space via W_uk, so decode
+attention runs directly against the 576-wide cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.attention import NEG_INF, _softcap, chunked_attention
+
+
+def mla_specs(cfg, stack: int):
+    d, H = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    dn, dr, dv, r = m.nope_head_dim, m.rope_head_dim, m.v_head_dim, m.kv_lora_rank
+    p = {
+        "wq": cm.dense_spec((d,), (H, dn + dr), ("embed",), ("heads", "head_dim"), stack=stack),
+        "kv_down": cm.dense_spec((d,), (r,), ("embed",), ("kv_lora",), stack=stack),
+        "k_rope": cm.dense_spec((d,), (dr,), ("embed",), ("head_dim",), stack=stack),
+        "kv_norm": cm.norm_spec(r, stack=stack) | {},
+        "k_up": cm.dense_spec((r,), (H, dn), ("kv_lora",), ("heads", "head_dim"), stack=stack),
+        "v_up": cm.dense_spec((r,), (H, dv), ("kv_lora",), ("heads", "head_dim"), stack=stack),
+        "wo": cm.dense_spec((H, dv), (d,), ("heads", "head_dim"), ("embed",), stack=stack),
+    }
+    # kv_norm spec needs the right axes name for the lora dim
+    p["kv_norm"] = {"scale": cm.ParamSpec(((stack, r) if stack else (r,)),
+                                          (("layers", "kv_lora") if stack else ("kv_lora",)),
+                                          "ones")}
+    return p
+
+
+def _q_proj(params, cfg, x, cd):
+    m = cfg.mla
+    dn, dr = m.nope_head_dim, m.rope_head_dim
+    q = cm.dense(params["wq"], x, "...d,dhk->...hk", cd)
+    return q[..., :dn], q[..., dn:]  # nope, rope parts
+
+
+def mla_attention(
+    params, cfg, part, x, *,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full-sequence MLA (train / prefill).  x: (B, S, d)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    q_nope, q_rope = _q_proj(params, cfg, x, cd)
+    c_kv = cm.dense(params["kv_down"], x, "...d,dr->...r", cd)
+    c_kv = cm.rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps, compute_dtype=cd)
+    k_rope = cm.dense(params["k_rope"], x, "...d,dr->...r", cd)[:, :, None, :]  # (B,S,1,dr)
+    pos = positions if positions is not None else jnp.arange(S)[None, :]
+    cos, sin = cm.rope_angles(pos, dr, cfg.rope_theta)
+    q_rope = cm.apply_rope(q_rope, cos, sin)
+    k_rope = cm.apply_rope(k_rope, cos, sin)
+    k_nope = cm.dense(params["k_up"], c_kv, "...r,rhk->...hk", cd)  # (B,S,H,dn)
+    v = cm.dense(params["v_up"], c_kv, "...r,rhk->...hk", cd)  # (B,S,H,dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(
+        q, k, v, causal=True,
+        chunk_q=part.attn_chunk_q, chunk_kv=part.attn_chunk_kv,
+        scale=(dn + dr) ** -0.5,
+    )
+    y = cm.dense(params["wo"], out, "...hk,hkd->...d", cd)
+    new_cache = None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
+        krc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype), 0, axis=1)
+        new_cache = {"c_kv": ckv, "k_rope": krc}
+    return y, new_cache
+
+
+def mla_attention_decode(
+    params, cfg, part, x, *,
+    positions: jnp.ndarray,  # (B,)
+    cache: Dict[str, jnp.ndarray],  # c_kv: (B,S,r), k_rope: (B,S,dr)
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed-form decode: attention runs in the compressed (r+dr) space."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv, r = m.nope_head_dim, m.rope_head_dim, m.v_head_dim, m.kv_lora_rank
+    q_nope, q_rope = _q_proj(params, cfg, x, cd)  # (B,1,H,dn/(dr))
+    c_new = cm.dense(params["kv_down"], x, "...d,dr->...r", cd)
+    c_new = cm.rmsnorm(params["kv_norm"], c_new, cfg.norm_eps, compute_dtype=cd)
+    kr_new = cm.dense(params["k_rope"], x, "...d,dr->...r", cd)  # (B,1,dr)
+    cos, sin = cm.rope_angles(positions[:, None], dr, cfg.rope_theta)
+    q_rope = cm.apply_rope(q_rope, cos, sin)
+    kr_new = cm.apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]  # (B,1,dr)
+
+    idx = positions.reshape(B, 1, 1).astype(jnp.int32)
+    iota2 = jnp.arange(cache["c_kv"].shape[1]).reshape(1, -1, 1)
+    c_kv = jnp.where(iota2 == idx, c_new.astype(cache["c_kv"].dtype), cache["c_kv"])
+    k_rope = jnp.where(iota2 == idx, kr_new.astype(cache["k_rope"].dtype), cache["k_rope"])
+
+    # absorb W_uk into the query: q_eff (B,H,r)
+    k_up = params["k_up"]["kernel"].astype(cd)  # (r,H,dn)
+    q_eff = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], k_up)
+    scale = (dn + dr) ** -0.5
+    s = jnp.einsum("bhr,bsr->bhs", q_eff, c_kv.astype(cd))
+    s = s + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], k_rope.astype(cd))
+    s = (s * scale).astype(jnp.float32)
+    valid = jnp.arange(c_kv.shape[1])[None, :] < (positions + 1)[:, None]
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", p.astype(cd), c_kv.astype(cd))  # (B,H,r)
+    v_up = params["v_up"]["kernel"].astype(cd)  # (r,H,dv)
+    out = jnp.einsum("bhr,rhk->bhk", o_c, v_up)  # (B,H,dv)
+    y = cm.dense(params["wo"], out[:, None], "...hk,hkd->...d", cd)
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,188 @@
+"""Model zoo: one uniform interface over every assigned architecture.
+
+``build(bundle)`` returns a :class:`Model` whose methods close over the
+config; all take/return plain pytrees so they compose with pjit/shard_map,
+checkpointing and the launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchBundle, ModelConfig, PartitionConfig, ShapeConfig
+from repro.models import common as cm
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    part: PartitionConfig
+    param_specs: Dict[str, Any]
+
+    # ---------------- params ---------------- #
+
+    def init(self, key: jax.Array):
+        return cm.init_params(self.param_specs, key)
+
+    def abstract_params(self):
+        return cm.abstract(self.param_specs)
+
+    def param_shardings(self, mesh, rules=None):
+        return cm.shardings(self.param_specs, mesh, self._rules(rules))
+
+    def _rules(self, rules=None, for_opt=False):
+        r = dict(cm.DEFAULT_RULES)
+        if self.part.fsdp and (for_opt or self.part.zero_stage >= 3):
+            # ZeRO-1: optimizer state shards over data, params stay
+            # replicated on data (sharded on model only)
+            r.update(cm.FSDP_RULES_OVERRIDE)
+        if self.part.flash_decode:
+            r["kv_seq"] = "model"
+        if rules:
+            r.update(rules)
+        return r
+
+    # ---------------- caches ---------------- #
+
+    def cache_specs(self, B: int, S: int):
+        if self.cfg.family == "encdec":
+            return ed.encdec_cache_specs(self.cfg, self.part, B, S)
+        return tf.cache_specs(self.cfg, self.part, B, S)
+
+    def abstract_cache(self, B: int, S: int):
+        return cm.abstract(self.cache_specs(B, S))
+
+    def cache_shardings(self, mesh, B: int, S: int, rules=None):
+        return cm.shardings(self.cache_specs(B, S), mesh, self._rules(rules))
+
+    def init_cache(self, B: int, S: int):
+        if self.cfg.family == "encdec":
+            return jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                self.cache_specs(B, S), is_leaf=cm._is_spec)
+        return tf.init_cache(self.cfg, self.part, B, S)
+
+    # ---------------- steps ---------------- #
+
+    def train_loss(self, params, batch, mesh=None, rules=None):
+        rules = self._rules(rules)
+        if self.cfg.family == "encdec":
+            return ed.encdec_train_loss(params, self.cfg, self.part, batch, mesh, rules)
+        return tf.lm_train_loss(params, self.cfg, self.part, batch, mesh, rules)
+
+    def prefill(self, params, batch, caches, mesh=None, rules=None):
+        rules = self._rules(rules)
+        if self.cfg.family == "encdec":
+            return ed.encdec_prefill(params, self.cfg, self.part, batch, caches,
+                                     mesh=mesh, rules=rules)
+        return tf.lm_prefill(params, self.cfg, self.part, batch["tokens"], caches,
+                             patches=batch.get("patches"), mesh=mesh, rules=rules)
+
+    def decode_step(self, params, tokens, positions, caches, mesh=None, rules=None):
+        rules = self._rules(rules)
+        if self.cfg.family == "encdec":
+            return ed.encdec_decode_step(params, self.cfg, self.part, tokens,
+                                         positions, caches, mesh=mesh, rules=rules)
+        return tf.lm_decode_step(params, self.cfg, self.part, tokens, positions,
+                                 caches, mesh=mesh, rules=rules)
+
+    # ---------------- dry-run inputs ---------------- #
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of the step kind
+        (the modality frontend is a stub: precomputed frame/patch embeddings
+        appear as inputs, per the assignment)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        bf16 = jnp.bfloat16
+
+        def tok(*s):
+            return jax.ShapeDtypeStruct(s, i32)
+
+        if shape.kind == "train":
+            if cfg.family == "encdec":
+                S_dec = S // cfg.dec_ratio
+                return {
+                    "batch": {
+                        "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), bf16),
+                        "tokens": tok(B, S_dec),
+                        "labels": tok(B, S_dec),
+                    }
+                }
+            if cfg.modality == "vision":
+                n_tok = S - cfg.n_prefix_tokens
+                return {
+                    "batch": {
+                        "tokens": tok(B, n_tok),
+                        "patches": jax.ShapeDtypeStruct(
+                            (B, cfg.n_prefix_tokens, cfg.frontend_dim), bf16),
+                        "labels": tok(B, n_tok),
+                    }
+                }
+            return {"batch": {"tokens": tok(B, S), "labels": tok(B, S)}}
+
+        if shape.kind == "prefill":
+            caches = self.abstract_cache(B, S)
+            if cfg.family == "encdec":
+                S_dec = S // cfg.dec_ratio
+                batch = {
+                    "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), bf16),
+                    "tokens": tok(B, S_dec),
+                }
+            elif cfg.modality == "vision":
+                batch = {
+                    "tokens": tok(B, S - cfg.n_prefix_tokens),
+                    "patches": jax.ShapeDtypeStruct(
+                        (B, cfg.n_prefix_tokens, cfg.frontend_dim), bf16),
+                }
+            else:
+                batch = {"tokens": tok(B, S)}
+            return {"batch": batch, "caches": caches}
+
+        # decode: one new token against a cache of S
+        return {
+            "tokens": tok(B, 1),
+            "positions": jax.ShapeDtypeStruct((B,), i32),
+            "caches": self.abstract_cache(B, S),
+        }
+
+    def batch_shardings(self, mesh, tree, rules=None):
+        """NamedShardings for an input_specs()-shaped tree: leading dim of
+        every leaf is batch (except nothing else needs sharding)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        r = self._rules(rules)
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+        def shard_leaf(leaf):
+            if leaf.ndim == 0:
+                return NamedSharding(mesh, P())
+            spec = [None] * leaf.ndim
+            if leaf.shape[0] % max(1, _prod(mesh.shape[a] for a in batch_axes)) == 0:
+                spec[0] = batch_axes if len(batch_axes) > 1 else (
+                    batch_axes[0] if batch_axes else None)
+            return NamedSharding(mesh, P(*spec))
+
+        return jax.tree_util.tree_map(shard_leaf, tree)
+
+
+def _prod(it):
+    out = 1
+    for x in it:
+        out *= x
+    return out
+
+
+def build(bundle: ArchBundle) -> Model:
+    cfg, part = bundle.model, bundle.partition
+    if cfg.family == "encdec":
+        specs = ed.encdec_specs(cfg, part)
+    else:
+        specs = tf.lm_specs(cfg, part)
+    return Model(cfg=cfg, part=part, param_specs=specs)

@@ -1,0 +1,174 @@
+"""Mamba-1 selective SSM block (for jamba), TPU-adapted.
+
+The selective scan is computed in *chunks*: within a chunk the linear
+recurrence h_t = a_t h_{t-1} + b_t is solved with ``jax.lax.associative_scan``
+(log-depth — the same semiring-scan machinery as the block-parallel Viterbi
+decoder in core/viterbi.py, with (×,+) instead of (min,+)); across chunks a
+``lax.scan`` carries the (B, d_inner, d_state) state.  This bounds the
+materialized (B, chunk, d_inner, d_state) tensor while keeping VPU-friendly
+parallel depth, analogous to how the Texpand kernel keeps its recurrent state
+(path metrics) in VMEM.
+
+Decode is the exact single-step recurrence (O(1) state, no KV growth).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def ssm_specs(cfg, stack: int):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    dtr = _dt_rank(cfg)
+    N = s.d_state
+
+    def P(shape, axes, init="normal", scale=1.0, fan_in=0):
+        if stack:
+            shape = (stack,) + shape
+            axes = ("layers",) + axes
+        return cm.ParamSpec(shape, axes, init, scale, fan_in)
+
+    return {
+        "in_proj": cm.dense_spec((d,), (2 * d_in,), ("embed",), ("dinner",), stack=stack),
+        "conv_w": P((s.d_conv, d_in), ("conv", "dinner"), "normal", 1.0, s.d_conv),
+        "conv_b": P((d_in,), ("dinner",), "zeros"),
+        "x_proj": cm.dense_spec((d_in,), (dtr + 2 * N,), ("dinner",), (None,), stack=stack),
+        "dt_proj": cm.dense_spec((dtr,), (d_in,), (None,), ("dinner",), stack=stack, bias=True),
+        "A_log": P((d_in, N), ("dinner", "dstate"), "ones"),
+        "D": P((d_in,), ("dinner",), "ones"),
+        "out_proj": cm.dense_spec((d_in,), (d,), ("dinner",), ("embed",), stack=stack),
+    }
+
+
+def _ssm_scan_chunked(xc, dt, Bm, Cm, A, h0, chunk: int):
+    """Selective-scan with fully chunk-local intermediates.
+
+    Solves h_t = a_t h_{t-1} + b_t and emits y_t = <h_t, C_t>, where
+    a = exp(dt·A), b = dt·B·x.  a/b/h live only at (B, chunk, D, N) — the
+    full-length (B, S, D, N) tensor is never materialized (it dominated the
+    jamba train cells at ~8.6 GB/layer).
+
+    xc/dt: (B, S, D); Bm/Cm: (B, S, N); A: (D, N); h0: (B, D, N).
+    Returns y (B, S, D) float32 and the final state.
+    """
+    B, S, D = xc.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    while S % chunk:  # largest divisor <= requested chunk
+        chunk -= 1
+    nc = S // chunk
+
+    def resh(t):
+        return t.reshape((B, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (resh(xc), resh(dt), resh(Bm), resh(Cm))
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    def chunk_step(h, xs_c):
+        xc_c, dt_c, B_c, C_c = xs_c  # (B, chunk, ...)
+        a_k = jnp.exp(dt_c[..., None] * A)  # (B, chunk, D, N)
+        b_k = (dt_c[..., None] * B_c[:, :, None, :]) * xc_c[..., None]
+        b_k = b_k.at[:, 0].add(a_k[:, 0] * h)  # fold carry into element 0
+        _, hh = jax.lax.associative_scan(combine, (a_k, b_k), axis=1)
+        y_c = jnp.einsum("bsdn,bsn->bsd", hh, C_c)  # contract N immediately
+        return hh[:, -1], y_c
+
+    # checkpoint per chunk: (B, chunk, D, N) intermediates recompute in bwd
+    chunk_step = jax.checkpoint(chunk_step)
+    hT, ys = jax.lax.scan(chunk_step, h0, xs)
+    return ys.swapaxes(0, 1).reshape(B, S, D), hT
+
+
+def ssm_apply(
+    params, cfg, x, *,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full-sequence selective SSM.  x: (B, S, d).
+
+    If ``cache`` is given (prefill), the final conv window and ssm state are
+    stored for decode.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    s = cfg.ssm
+    B, S, d = x.shape
+    d_in = s.expand * d
+    N = s.d_state
+    dtr = _dt_rank(cfg)
+
+    xz = cm.dense(params["in_proj"], x, "...d,df->...f", cd)
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    # depthwise causal conv1d
+    w = params["conv_w"].astype(cd)  # (K, d_in)
+    K = w.shape[0]
+    xpad = jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(xpad[:, i : i + S] * w[i] for i in range(K)) + params["conv_b"].astype(cd)
+    xc = jax.nn.silu(conv)
+
+    proj = cm.dense(params["x_proj"], xc, "...f,fp->...p", cd)
+    dt_in, Bm, Cm = proj[..., :dtr], proj[..., dtr : dtr + N], proj[..., dtr + N :]
+    dt = jax.nn.softplus(cm.dense(params["dt_proj"], dt_in, "...r,rf->...f", cd)).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (d_in, N)
+
+    h0 = cache["ssm"].astype(jnp.float32) if cache is not None else jnp.zeros((B, d_in, N), jnp.float32)
+    y, hT = _ssm_scan_chunked(
+        xc.astype(jnp.float32), dt, Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32), A, h0, s.chunk)
+    y = (y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)).astype(cd)
+    y = y * jax.nn.silu(z)
+    out = cm.dense(params["out_proj"], y, "...f,fd->...d", cd)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": hT.astype(cache["ssm"].dtype),
+                     "conv": xi[:, -(K - 1):].astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def ssm_decode(
+    params, cfg, x, *,
+    cache: Dict[str, jnp.ndarray],  # ssm: (B, d_in, N); conv: (B, K-1, d_in)
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token recurrence.  x: (B, 1, d)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    s = cfg.ssm
+    B = x.shape[0]
+    d_in = s.expand * cfg.d_model
+    N = s.d_state
+    dtr = _dt_rank(cfg)
+
+    xz = cm.dense(params["in_proj"], x, "...d,df->...f", cd)[:, 0]
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    w = params["conv_w"].astype(cd)  # (K, d_in)
+    K = w.shape[0]
+    window = jnp.concatenate([cache["conv"].astype(cd), xi[:, None]], axis=1)  # (B,K,d_in)
+    conv = jnp.einsum("bkf,kf->bf", window, w) + params["conv_b"].astype(cd)
+    xc = jax.nn.silu(conv)
+
+    proj = cm.dense(params["x_proj"], xc, "...f,fp->...p", cd)
+    dt_in, Bm, Cm = proj[..., :dtr], proj[..., dtr : dtr + N], proj[..., dtr + N :]
+    dt = jax.nn.softplus(cm.dense(params["dt_proj"], dt_in, "...r,rf->...f", cd)).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)  # (B,d_in,N)
+    bx = (dt[..., None] * Bm[:, None, :].astype(jnp.float32)) * xc[..., None].astype(jnp.float32)
+    h = a * cache["ssm"].astype(jnp.float32) + bx
+    y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32))
+    y = (y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)).astype(cd)
+    y = y * jax.nn.silu(z)
+    out = cm.dense(params["out_proj"], y[:, None], "...f,fd->...d", cd)
+    new_cache = {"ssm": h.astype(cache["ssm"].dtype),
+                 "conv": window[:, 1:].astype(cache["conv"].dtype)}
+    return out, new_cache

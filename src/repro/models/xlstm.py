@@ -1,0 +1,292 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, true recurrence), per arXiv:2405.04517.
+
+mLSTM's chunkwise form mirrors the repo's semiring-scan theme: the gate
+stabilizer m_t follows a (max,+) recurrence — the same algebra as the Viterbi
+path metrics — carried across chunks by ``lax.scan`` while everything within
+a chunk is computed in parallel.
+
+sLSTM is genuinely sequential (recurrent weights through a nonlinearity), so
+it runs as a ``lax.scan`` over time with per-head block-diagonal recurrence —
+the honest TPU mapping (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+# --------------------------------------------------------------------------- #
+# mLSTM                                                                        #
+# --------------------------------------------------------------------------- #
+
+
+def mlstm_specs(cfg, stack: int):
+    d = cfg.d_model
+    x = cfg.xlstm
+    d_in = int(x.mlstm_proj_factor * d)
+    H = cfg.n_heads
+    K = x.conv_kernel
+
+    def P(shape, axes, init="normal", scale=1.0, fan_in=0):
+        if stack:
+            shape, axes = (stack,) + shape, ("layers",) + axes
+        return cm.ParamSpec(shape, axes, init, scale, fan_in)
+
+    return {
+        "up_proj": cm.dense_spec((d,), (2 * d_in,), ("embed",), ("dinner",), stack=stack),
+        "conv_w": P((K, d_in), ("conv", "dinner"), "normal", 1.0, K),
+        "conv_b": P((d_in,), ("dinner",), "zeros"),
+        "wq": cm.dense_spec((d_in,), (d_in,), ("dinner",), (None,), stack=stack),
+        "wk": cm.dense_spec((d_in,), (d_in,), ("dinner",), (None,), stack=stack),
+        "wv": cm.dense_spec((d_in,), (d_in,), ("dinner",), (None,), stack=stack),
+        "w_if": cm.dense_spec((d_in,), (2 * H,), ("dinner",), (None,), stack=stack, bias=True),
+        "gn": P((d_in,), ("dinner",), "ones"),
+        "down_proj": cm.dense_spec((d_in,), (d,), ("dinner",), ("embed",), stack=stack),
+    }
+
+
+def _conv1d(params, x, cd):
+    w = params["conv_w"].astype(cd)
+    K, S = w.shape[0], x.shape[1]
+    xpad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xpad[:, i : i + S] * w[i] for i in range(K)) + params["conv_b"].astype(cd)
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state, chunk: int):
+    """Chunkwise stabilized mLSTM.
+
+    q,k,v: (B,S,H,dh); log_i/log_f: (B,S,H); state: (C: (B,H,dh,dh),
+    n: (B,H,dh), m: (B,H)).  Returns h (B,S,H,dh) and final state.
+    """
+    B, S, H, dh = q.shape
+    chunk = min(chunk, S)
+    while S % chunk:  # largest divisor <= requested chunk
+        chunk -= 1
+    nc = S // chunk
+    scale = dh ** -0.5
+
+    def resh(x):
+        return x.reshape((B, nc, chunk) + x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, lis, lfs = map(resh, (q * scale, k, v, log_i, log_f))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, li, lf = xs  # (B, chunk, H, ...)
+        F = jnp.cumsum(lf, axis=1)  # inclusive decay-to-i  (B,chunk,H)
+        G = li - F  # (B,chunk,H)
+        gmax = jax.lax.cummax(G, axis=1)
+        m_new = jnp.maximum(m[:, None] + F, F + gmax)  # (B,chunk,H)
+        # intra-chunk weights: D_ij = exp(F_i - F_j + li_j - m_i), j<=i
+        logD = F[:, :, None] - F[:, None, :] + li[:, None, :] - m_new[:, :, None]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dm = jnp.where(tri[None, :, :, None], jnp.exp(logD), 0.0)  # (B,i,j,H)
+        s = jnp.einsum("bihd,bjhd->bijh", qc.astype(jnp.float32), kc.astype(jnp.float32))
+        w = s * Dm
+        h_num = jnp.einsum("bijh,bjhd->bihd", w, vc.astype(jnp.float32))
+        n_num = jnp.einsum("bijh,bjhd->bihd", Dm, kc.astype(jnp.float32))
+        # inter-chunk (carried state) contribution
+        inter_w = jnp.exp(m[:, None] + F - m_new)  # (B,chunk,H)
+        h_num += inter_w[..., None] * jnp.einsum(
+            "bihd,bhde->bihe", qc.astype(jnp.float32), C)
+        n_num += inter_w[..., None] * n[:, None]
+        qn = jnp.einsum("bihd,bihd->bih", qc.astype(jnp.float32), n_num)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        h = h_num / denom[..., None]
+        # state update to chunk end
+        FL = F[:, -1]  # (B,H)
+        m_next = jnp.maximum(m + FL, FL + gmax[:, -1])
+        wj = jnp.exp(FL[:, None] - F + li - m_next[:, None])  # (B,chunk,H)
+        C_next = jnp.exp(m + FL - m_next)[:, :, None, None] * C + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", wj, kc.astype(jnp.float32), vc.astype(jnp.float32))
+        n_next = jnp.exp(m + FL - m_next)[:, :, None] * n + jnp.einsum(
+            "bjh,bjhd->bhd", wj, kc.astype(jnp.float32))
+        return (C_next, n_next, m_next), h.astype(jnp.bfloat16)
+
+    # checkpoint per chunk: the (B, chunk, chunk, H) decay/score tensors are
+    # recomputed in backward instead of stored for every chunk
+    chunk_step = jax.checkpoint(chunk_step)
+    (C, n, m), hs = jax.lax.scan(chunk_step, state, (qs, ks, vs, lis, lfs))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    return h, (C, n, m)
+
+
+def mlstm_init_state(B, H, dh):
+    return (jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32))
+
+
+def mlstm_apply(params, cfg, x, *, cache=None):
+    """x: (B,S,d).  cache (decode/prefill): {"C","n","m","conv"}."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc_cfg = cfg.xlstm
+    B, S, d = x.shape
+    d_in = int(xc_cfg.mlstm_proj_factor * d)
+    H = cfg.n_heads
+    dh = d_in // H
+    up = cm.dense(params["up_proj"], x, "...d,df->...f", cd)
+    xm, z = up[..., :d_in], up[..., d_in:]
+    conv = jax.nn.silu(_conv1d(params, xm, cd))
+    q = cm.dense(params["wq"], conv, "...f,fg->...g", cd).reshape(B, S, H, dh)
+    k = cm.dense(params["wk"], conv, "...f,fg->...g", cd).reshape(B, S, H, dh)
+    v = cm.dense(params["wv"], xm, "...f,fg->...g", cd).reshape(B, S, H, dh)
+    if_raw = cm.dense(params["w_if"], xm, "...f,fg->...g", cd).astype(jnp.float32)
+    log_i = if_raw[..., :H]  # exp input gate -> log_i = raw
+    log_f = jax.nn.log_sigmoid(if_raw[..., H:])
+    state = mlstm_init_state(B, H, dh) if cache is None else (
+        cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+        cache["m"].astype(jnp.float32))
+    h, (C, n, m) = _mlstm_chunk(q, k, v, log_i, log_f, state, xc_cfg.chunk)
+    h = h.reshape(B, S, d_in).astype(cd)
+    # per-head group norm
+    hg = h.reshape(B, S, H, dh).astype(jnp.float32)
+    hg = hg * jax.lax.rsqrt(jnp.mean(hg * hg, axis=-1, keepdims=True) + cfg.norm_eps)
+    h = (hg.reshape(B, S, d_in) * params["gn"].astype(jnp.float32)).astype(cd)
+    out = cm.dense(params["down_proj"], h * jax.nn.silu(z), "...f,fd->...d", cd)
+    new_cache = None
+    if cache is not None:
+        K = params["conv_w"].shape[0]
+        new_cache = {"C": C, "n": n, "m": m, "conv": xm[:, -(K - 1):].astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def mlstm_decode(params, cfg, x, *, cache):
+    """Single-step mLSTM recurrence.  x: (B,1,d)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc_cfg = cfg.xlstm
+    B, _, d = x.shape
+    d_in = int(xc_cfg.mlstm_proj_factor * d)
+    H = cfg.n_heads
+    dh = d_in // H
+    up = cm.dense(params["up_proj"], x, "...d,df->...f", cd)[:, 0]
+    xm, z = up[..., :d_in], up[..., d_in:]
+    w = params["conv_w"].astype(cd)
+    K = w.shape[0]
+    window = jnp.concatenate([cache["conv"].astype(cd), xm[:, None]], axis=1)
+    conv = jax.nn.silu(jnp.einsum("bkf,kf->bf", window, w) + params["conv_b"].astype(cd))
+    q = cm.dense(params["wq"], conv, "...f,fg->...g", cd).reshape(B, H, dh) * (dh ** -0.5)
+    k = cm.dense(params["wk"], conv, "...f,fg->...g", cd).reshape(B, H, dh)
+    v = cm.dense(params["wv"], xm, "...f,fg->...g", cd).reshape(B, H, dh)
+    if_raw = cm.dense(params["w_if"], xm, "...f,fg->...g", cd).astype(jnp.float32)
+    log_i, log_f = if_raw[..., :H], jax.nn.log_sigmoid(if_raw[..., H:])
+    C, n, m = (cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+               cache["m"].astype(jnp.float32))
+    m_new = jnp.maximum(log_f + m, log_i)
+    fw = jnp.exp(log_f + m - m_new)[:, :, None]
+    iw = jnp.exp(log_i - m_new)[:, :, None]
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    C = fw[..., None] * C + iw[..., None] * kf[:, :, :, None] * vf[:, :, None, :]
+    n = fw * n + iw * kf
+    h_num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    qn = jnp.einsum("bhd,bhd->bh", qf, n)
+    h = h_num / jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, d_in)
+    hg = h.reshape(B, H, dh)
+    hg = hg * jax.lax.rsqrt(jnp.mean(hg * hg, axis=-1, keepdims=True) + cfg.norm_eps)
+    h = (hg.reshape(B, d_in) * params["gn"].astype(jnp.float32)).astype(cd)
+    out = cm.dense(params["down_proj"], (h * jax.nn.silu(z))[:, None], "...f,fd->...d", cd)
+    return out, {"C": C, "n": n, "m": m_new, "conv": window[:, 1:].astype(cache["conv"].dtype)}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM                                                                        #
+# --------------------------------------------------------------------------- #
+
+
+def slstm_specs(cfg, stack: int):
+    d = cfg.d_model
+    x = cfg.xlstm
+    H = cfg.n_heads
+    dh = d // H
+    d_ff = int(x.slstm_proj_factor * d)
+
+    def P(shape, axes, init="normal", scale=1.0, fan_in=0):
+        if stack:
+            shape, axes = (stack,) + shape, ("layers",) + axes
+        return cm.ParamSpec(shape, axes, init, scale, fan_in)
+
+    return {
+        "w_gates": cm.dense_spec((d,), (4, d), ("embed",), (None, "dinner"), stack=stack, bias=True),
+        "r_gates": P((4, H, dh, dh), (None, "heads", "head_dim", None), "normal", 1.0, dh),
+        "gn": P((d,), ("dinner",), "ones"),
+        "up_gate": cm.dense_spec((d,), (d_ff,), ("embed",), ("ff",), stack=stack),
+        "up": cm.dense_spec((d,), (d_ff,), ("embed",), ("ff",), stack=stack),
+        "down": cm.dense_spec((d_ff,), (d,), ("ff",), ("embed",), stack=stack),
+    }
+
+
+def slstm_init_state(B, d):
+    z = jnp.zeros((B, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((B, d), -1e30, jnp.float32)}
+
+
+def _slstm_cell(params, cfg, x_t, state):
+    """One sLSTM step.  x_t: (B, 4, d) pre-computed Wx part."""
+    H = cfg.n_heads
+    d = state["h"].shape[-1]
+    dh = d // H
+    B = x_t.shape[0]
+    h_prev = state["h"].reshape(B, H, dh)
+    r = params["r_gates"].astype(jnp.float32)  # (4,H,dh,dh)
+    rec = jnp.einsum("bhd,ghde->bghe", h_prev, r).reshape(B, 4, d)
+    g = x_t.astype(jnp.float32) + rec
+    log_i = g[:, 0]
+    log_f = jax.nn.log_sigmoid(g[:, 1])
+    z_in = jnp.tanh(g[:, 2])
+    o = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * z_in
+    n = jnp.maximum(f_s * state["n"] + i_s, jnp.exp(-m_new))
+    h = o * (c / n)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(params, cfg, x, *, cache=None):
+    """x: (B,S,d); sequential scan over time."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    wx = cm.dense(params["w_gates"], x, "...d,dgf->...gf", cd)  # (B,S,4,d)
+    state = cache["state"] if cache is not None else slstm_init_state(B, d)
+
+    def step(st, x_t):
+        st2 = _slstm_cell(params, cfg, x_t, st)
+        return st2, st2["h"].astype(jnp.bfloat16)
+
+    # checkpoint per step: keeps backward residuals at O(state), not O(T·state)
+    step = jax.checkpoint(step)
+    state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(cd)  # (B,S,d)
+    H = cfg.n_heads
+    dh = d // H
+    hg = h.reshape(B, S, H, dh).astype(jnp.float32)
+    hg = hg * jax.lax.rsqrt(jnp.mean(hg * hg, axis=-1, keepdims=True) + cfg.norm_eps)
+    h = (hg.reshape(B, S, d) * params["gn"].astype(jnp.float32)).astype(cd)
+    up = jax.nn.gelu(cm.dense(params["up_gate"], h, "...d,df->...f", cd))
+    y = cm.dense(params["down"], up * cm.dense(params["up"], h, "...d,df->...f", cd),
+                 "...f,fd->...d", cd)
+    new_cache = {"state": state} if cache is not None else None
+    return y, new_cache
+
+
+def slstm_decode(params, cfg, x, *, cache):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, _, d = x.shape
+    wx = cm.dense(params["w_gates"], x, "...d,dgf->...gf", cd)[:, 0]  # (B,4,d)
+    state = _slstm_cell(params, cfg, wx, cache["state"])
+    h = state["h"].astype(cd)
+    H = cfg.n_heads
+    dh = d // H
+    hg = h.reshape(B, H, dh).astype(jnp.float32)
+    hg = hg * jax.lax.rsqrt(jnp.mean(hg * hg, axis=-1, keepdims=True) + cfg.norm_eps)
+    h = (hg.reshape(B, d) * params["gn"].astype(jnp.float32)).astype(cd)
+    up = jax.nn.gelu(cm.dense(params["up_gate"], h, "...d,df->...f", cd))
+    y = cm.dense(params["down"], up * cm.dense(params["up"], h, "...d,df->...f", cd),
+                 "...f,fd->...d", cd)
+    return y[:, None], {"state": state}

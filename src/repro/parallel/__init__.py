@@ -1,0 +1,10 @@
+"""Distribution: logical-axis sharding, shard_map collectives (sequence-
+parallel Viterbi, flash-decode), and a GPipe-style pipeline stage."""
+from repro.parallel.sharding import (
+    batch_spec,
+    make_rules,
+    named_sharding,
+    step_shardings,
+)
+
+__all__ = ["batch_spec", "make_rules", "named_sharding", "step_shardings"]

@@ -1,0 +1,74 @@
+"""Sharding helpers: logical-axis rules -> NamedShardings for whole step
+signatures (params, optimizer state, batches, caches).
+
+The actual resolution logic (maybe-shard divisibility, no axis reuse) lives
+in models/common.py; this module packages it for the launchers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import common as cm
+
+
+def make_rules(part, extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    rules = dict(cm.DEFAULT_RULES)
+    if part.fsdp:
+        rules.update(cm.FSDP_RULES_OVERRIDE)
+    if part.flash_decode:
+        rules["kv_seq"] = "model"
+    if extra:
+        rules.update(extra)
+    return rules
+
+
+def batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh, ndim: int, batch_dim: int = 0) -> P:
+    """PartitionSpec sharding dim `batch_dim` over ("pod","data")."""
+    ba = batch_axes(mesh)
+    spec = [None] * ndim
+    if ba:
+        spec[batch_dim] = ba if len(ba) > 1 else ba[0]
+    return P(*spec)
+
+
+def named_sharding(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def shard_batch_tree(mesh, tree):
+    """NamedShardings for a batch pytree: dim 0 of every leaf is batch if it
+    divides the dp size, else replicated."""
+    ba = batch_axes(mesh)
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+
+    def one(leaf):
+        shape = leaf.shape if hasattr(leaf, "shape") else ()
+        if len(shape) and shape[0] % dp == 0 and dp > 1:
+            return NamedSharding(mesh, batch_spec(mesh, len(shape)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def step_shardings(model, mesh, shape_kind: str, B: int, S: int, rules=None):
+    """(in_shardings, out_shardings) trees for a given step kind.
+
+    train:  in = (params, batch) -> out (loss/metrics replicated)
+    prefill: in = (params, batch, caches)
+    decode: in = (params, tokens, positions, caches)
+    """
+    p_sh = model.param_shardings(mesh, rules)
+    repl = NamedSharding(mesh, P())
+    if shape_kind == "train":
+        return p_sh, repl
+    c_sh = model.cache_shardings(mesh, B, S, rules)
+    return p_sh, c_sh

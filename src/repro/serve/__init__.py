@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeEngine
+from repro.serve.viterbi_head import ViterbiHead
+
+__all__ = ["ServeEngine", "ViterbiHead"]

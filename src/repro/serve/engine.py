@@ -1,0 +1,85 @@
+"""Batched serving engine: prefill + jitted decode loop with greedy /
+temperature sampling and per-request stop handling.
+
+The engine owns the cache pytree and step functions; the decode step is
+jitted once per (batch, cache_len) bucket.  On a mesh, caches are sharded by
+the model's cache rules (batch over data, cache seq over model for
+flash-decode) — the same shardings the dry-run proves out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: "object"
+    params: "object"
+    max_len: int
+    mesh: Optional[object] = None
+    temperature: float = 0.0
+    eos: int = 0
+
+    def __post_init__(self):
+        m = self.model
+
+        def _prefill(params, batch, caches):
+            return m.prefill(params, batch, caches, mesh=self.mesh)
+
+        def _decode(params, tokens, positions, caches):
+            return m.decode_step(params, tokens, positions, caches, mesh=self.mesh)
+
+        if self.mesh is not None:
+            with self.mesh:
+                self._prefill = jax.jit(_prefill)
+                self._decode = jax.jit(_decode, donate_argnums=(3,))
+        else:
+            self._prefill = jax.jit(_prefill)
+            self._decode = jax.jit(_decode, donate_argnums=(3,))
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(
+        self,
+        prompts: jnp.ndarray,  # (B, S_prompt) int32
+        max_new_tokens: int,
+        seed: int = 0,
+    ) -> Dict[str, jnp.ndarray]:
+        """Greedy/temperature generation for a batch of equal-length prompts."""
+        B, S_p = prompts.shape
+        caches = self.model.init_cache(B, self.max_len)
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        with ctx:
+            logits, caches = self._prefill(self.params, {"tokens": prompts}, caches)
+            key = jax.random.PRNGKey(seed)
+            tok = self._sample(logits, key)[:, None]
+            out = [tok]
+            positions = jnp.full((B,), S_p, jnp.int32)
+            done = jnp.zeros((B,), bool)
+            for i in range(max_new_tokens - 1):
+                key, sub = jax.random.split(key)
+                logits, caches = self._decode(self.params, tok, positions, caches)
+                nxt = self._sample(logits, sub)[:, None]
+                done = done | (tok[:, 0] == self.eos)
+                nxt = jnp.where(done[:, None], self.eos, nxt)
+                out.append(nxt)
+                tok = nxt
+                positions = positions + 1
+        return {"tokens": jnp.concatenate(out, axis=1), "done": done}
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,114 @@
+"""Viterbi serving head — the paper's technique as a first-class serving
+feature.
+
+Decodes convolutionally-encoded bit streams (the paper's "10^15 bits/day of
+digital TV" use case) behind one object:
+
+  encode-side:  bits -> conv encode -> (optional channel sim)
+  decode-side:  received bits/LLRs -> branch metrics -> fused Viterbi
+                (Pallas Texpand kernels) -> info bits
+
+Decoder selection:
+  'fused'        kernels.viterbi_decode_fused (VMEM-resident Pallas scan)
+  'sequential'   core.viterbi_decode (jnp lax.scan reference)
+  'parallel'     core.viterbi_decode_parallel ((min,+) associative scan)
+  'seqparallel'  parallel.collectives.viterbi_decode_seqparallel
+                 (shard_map across the 'model' mesh axis — for long streams)
+
+An LM can be piped straight into the head: generate token bits, encode,
+push through a noisy channel, decode, and verify — see
+examples/serve_viterbi.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import (
+    awgn,
+    bpsk_modulate,
+    bsc,
+    hard_branch_metrics,
+    soft_branch_metrics,
+)
+from repro.core.encoder import encode
+from repro.core.trellis import CODE_K3_STD, ConvCode
+from repro.core.viterbi import viterbi_decode, viterbi_decode_parallel
+from repro.kernels.ops import viterbi_decode_fused
+
+
+@dataclasses.dataclass
+class ViterbiHead:
+    code: ConvCode = CODE_K3_STD
+    mode: str = "fused"  # fused | sequential | parallel | seqparallel
+    soft: bool = False
+    mesh: Optional[object] = None
+    chunk: int = 64
+
+    # ------------------------- encode side ------------------------- #
+
+    def encode_bits(self, bits: jnp.ndarray) -> jnp.ndarray:
+        """(B, T) info bits -> (B, T+K-1, n_out) coded bits (terminated)."""
+        return encode(self.code, bits, terminate=True)
+
+    def channel(self, key, coded_bits, *, flip_prob=0.0, snr_db=None):
+        """Hard (BSC) or soft (BPSK+AWGN) channel simulation."""
+        if snr_db is not None:
+            return awgn(key, bpsk_modulate(coded_bits), snr_db)
+        return bsc(key, coded_bits, flip_prob)
+
+    # ------------------------- decode side ------------------------- #
+
+    def branch_metrics(self, received) -> jnp.ndarray:
+        if self.soft:
+            return soft_branch_metrics(self.code, received)
+        return hard_branch_metrics(self.code, received)
+
+    def decode(self, received) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """received: (B, T, n_out) hard bits or soft values.
+        Returns (info_bits (B, T-(K-1)), path_metric (B,))."""
+        bm = self.branch_metrics(received)
+        bits, metric = self.decode_from_metrics(bm)
+        K = self.code.constraint
+        return bits[:, : bits.shape[1] - (K - 1)], metric  # drop flush bits
+
+    def decode_from_metrics(self, bm_tables) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if self.mode == "fused":
+            return viterbi_decode_fused(self.code, bm_tables)
+        if self.mode == "sequential":
+            return viterbi_decode(self.code, bm_tables)
+        if self.mode == "parallel":
+            return viterbi_decode_parallel(self.code, bm_tables, chunk=self.chunk)
+        if self.mode == "seqparallel":
+            from repro.parallel.collectives import viterbi_decode_seqparallel
+
+            assert self.mesh is not None, "seqparallel needs a mesh"
+            return viterbi_decode_seqparallel(self.code, bm_tables, self.mesh)
+        raise KeyError(self.mode)
+
+    # --------------------- end-to-end convenience --------------------- #
+
+    def roundtrip(self, key, bits, *, flip_prob=0.02, snr_db=None):
+        """encode -> channel -> decode; returns (decoded, ber, exact)."""
+        coded = self.encode_bits(bits)
+        rx = self.channel(key, coded, flip_prob=flip_prob, snr_db=snr_db)
+        dec, _ = self.decode(rx)
+        ber = (dec != bits).mean()
+        return dec, ber, bool((dec == bits).all())
+
+
+def tokens_to_bits(tokens: jnp.ndarray, bits_per_token: int) -> jnp.ndarray:
+    """(B, T) int32 -> (B, T*bits) {0,1} MSB-first — LM output as a bitstream."""
+    shifts = jnp.arange(bits_per_token - 1, -1, -1)
+    bits = (tokens[..., None] >> shifts) & 1
+    return bits.reshape(tokens.shape[0], -1).astype(jnp.int32)
+
+
+def bits_to_tokens(bits: jnp.ndarray, bits_per_token: int) -> jnp.ndarray:
+    B, n = bits.shape
+    bits = bits.reshape(B, n // bits_per_token, bits_per_token)
+    weights = 1 << jnp.arange(bits_per_token - 1, -1, -1)
+    return jnp.einsum("btk,k->bt", bits, weights).astype(jnp.int32)

@@ -1,0 +1,6 @@
+"""Training runtime: optimizers, jitted step builders, checkpointing,
+fault tolerance."""
+from repro.train.optimizer import adafactor, adamw, cosine_warmup
+from repro.train.train_loop import make_train_step, train
+
+__all__ = ["adamw", "adafactor", "cosine_warmup", "make_train_step", "train"]

@@ -1,0 +1,177 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+AdamW keeps two fp32 moments per param (sharded like the param — and over
+'data' too when FSDP is on, i.e. ZeRO-1/2/3 follow from the sharding rules,
+not special code).  Adafactor keeps factored second moments: O(n+m) state per
+(n, m) matrix — the practical choice for the 110B config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- #
+# Schedules                                                                    #
+# --------------------------------------------------------------------------- #
+
+
+def cosine_warmup(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+# --------------------------------------------------------------------------- #
+# AdamW                                                                        #
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step, lr) -> (new_params, new_state)
+    state_specs: Callable  # param_specs -> state spec tree (for sharding)
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, max_grad_norm=1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step, lr):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            upd = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), mu, nu
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu}, gnorm
+
+    def state_specs(param_specs):
+        import dataclasses as dc
+
+        from repro.models.common import ParamSpec, _is_spec
+
+        f32 = lambda s: dc.replace(s, dtype=jnp.float32, init="zeros")  # noqa: E731
+        m = jax.tree_util.tree_map(f32, param_specs, is_leaf=_is_spec)
+        return {"mu": m, "nu": m}
+
+    return Optimizer(init, update, state_specs)
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (factored second moments)                                          #
+# --------------------------------------------------------------------------- #
+
+
+def adafactor(decay=0.8, eps=1e-30, clip_threshold=1.0, weight_decay=0.0,
+              max_grad_norm=1.0, min_dim_size_to_factor=128) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor \
+            and shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"v": jax.tree_util.tree_map(one, params)}
+
+    def update(grads, state, params, step, lr):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps))[..., None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv_ = beta * v["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(nv_, eps))
+                nv = {"v": nv_}
+            rms_u = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+        is_v = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)  # noqa: E731
+        out = jax.tree_util.tree_map(
+            upd, grads, state["v"], params, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+        istup = lambda x: isinstance(x, tuple)  # noqa: E731
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup)
+        new_v = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup)
+        return new_params, {"v": new_v}, gnorm
+
+    def state_specs(param_specs):
+        import dataclasses as dc
+
+        from repro.models.common import ParamSpec, _is_spec
+
+        def one(s: "ParamSpec"):
+            if _factored(s.shape):
+                return {
+                    "vr": dc.replace(s, shape=s.shape[:-1], axes=s.axes[:-1],
+                                     dtype=jnp.float32, init="zeros"),
+                    "vc": dc.replace(s, shape=s.shape[:-2] + s.shape[-1:],
+                                     axes=s.axes[:-2] + s.axes[-1:],
+                                     dtype=jnp.float32, init="zeros"),
+                }
+            return {"v": dc.replace(s, dtype=jnp.float32, init="zeros")}
+
+        return {"v": jax.tree_util.tree_map(one, param_specs, is_leaf=_is_spec)}
+
+    return Optimizer(init, update, state_specs)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise KeyError(name)

@@ -1,0 +1,193 @@
+"""Jitted train-step builder + fault-tolerant training loop.
+
+``make_train_step`` builds one pjit'd step: value_and_grad over the model
+loss, microbatch gradient accumulation (lax.scan over chunks), optimizer
+update.  Gradient reduction across data-parallel replicas is inserted by
+SPMD from the shardings; with FSDP rules the reduction lowers to
+reduce-scatter + all-gather (ZeRO) instead of all-reduce.
+
+``train`` wraps the step in the fault-tolerance harness: periodic async
+checkpoints, crash -> restore -> resume, straggler detection.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard_batch_tree
+from repro.train.optimizer import Optimizer, cosine_warmup, get_optimizer
+
+
+def build_step_fn(
+    model,
+    optimizer: Optimizer,
+    lr_fn: Callable,
+    mesh=None,
+    rules=None,
+):
+    """Raw (unjitted) train step — shared by make_train_step (which jits it)
+    and launch/dryrun.py (which lowers it).  With part.microbatches > 1, the
+    batch's leading dim is split and gradients are accumulated over chunks
+    (sequential remat of the batch dim — the standard memory/throughput
+    trade)."""
+    mb = model.part.microbatches
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch, mesh=mesh, rules=rules)
+
+    def step(params, opt_state, batch, step_idx):
+        # mixed precision: forward/backward consume a bf16 copy of the fp32
+        # master weights, cast while still sharded — FSDP weight all-gathers
+        # then move bf16, not f32 (halves the dominant collective term)
+        params_c = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16)
+            if p.dtype == jnp.dtype(jnp.float32) else p, params)
+        if mb > 1:
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch)
+
+            def acc_fn(acc, chunk):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params_c, chunk)
+                acc_g, acc_l = acc
+                return (jax.tree_util.tree_map(jnp.add, acc_g, g), acc_l + l), m
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params_c)
+            (grads, loss_sum), ms = jax.lax.scan(acc_fn, (zeros, 0.0), split)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            loss = loss_sum / mb
+            metrics = jax.tree_util.tree_map(lambda x: x[-1], ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params_c, batch)
+        lr = lr_fn(step_idx)
+        new_params, new_opt, gnorm = optimizer.update(
+            grads, opt_state, params, step_idx, lr)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_train_step(
+    model,
+    optimizer: Optimizer,
+    lr_fn: Callable,
+    mesh=None,
+    rules=None,
+    donate: bool = True,
+):
+    """Jitted train step with param/optimizer shardings attached."""
+    step = build_step_fn(model, optimizer, lr_fn, mesh, rules)
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    p_sh = model.param_shardings(mesh, rules)
+    o_sh = _opt_shardings(model, optimizer, mesh, rules)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    repl = NamedSharding(mesh, P())
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, None, None),
+        out_shardings=(p_sh, o_sh, repl),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def _opt_shardings(model, optimizer, mesh, rules=None):
+    from repro.models import common as cm
+
+    specs = optimizer.state_specs(model.param_specs)
+    return cm.shardings(specs, mesh, model._rules(rules, for_opt=True))
+
+
+def train(
+    model,
+    data_iter,
+    *,
+    steps: int,
+    lr: float = 3e-4,
+    warmup: int = 100,
+    mesh=None,
+    rules=None,
+    seed: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    keep_checkpoints: int = 3,
+    fail_hook: Optional[Callable[[int], None]] = None,
+    log_every: int = 10,
+    straggler_zscore: float = 4.0,
+) -> Dict[str, Any]:
+    """Fault-tolerant training loop.
+
+    fail_hook(step) may raise to simulate node failure (used by tests); on
+    any exception the loop restores the latest checkpoint and resumes.
+    Returns the final params/opt_state plus a run report.
+    """
+    from repro.train import checkpoint as ckpt
+    from repro.train.fault_tolerance import StragglerDetector
+
+    optimizer = get_optimizer(model.part.optimizer)
+    lr_fn = cosine_warmup(lr, warmup, steps)
+    step_fn = make_train_step(model, optimizer, lr_fn, mesh, rules, donate=False)
+
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = optimizer.init(params)
+    start_step = 0
+    saver = ckpt.AsyncCheckpointer(checkpoint_dir, keep=keep_checkpoints) \
+        if checkpoint_dir else None
+    if saver is not None:
+        restored = saver.restore_latest()
+        if restored is not None:
+            params, opt_state, start_step = ckpt.reshard_restored(
+                restored, params, opt_state)
+
+    detector = StragglerDetector(zscore=straggler_zscore)
+    history = []
+    restarts = 0
+    step = start_step
+    while step < steps:
+        try:
+            batch = data_iter(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch, step)
+            metrics = jax.tree_util.tree_map(float, jax.device_get(metrics))
+            dt = time.perf_counter() - t0
+            straggle = detector.observe(step, dt)
+            if straggle:
+                metrics["straggler_event"] = 1.0
+            if log_every and step % log_every == 0:
+                history.append({"step": step, "time_s": dt, **metrics})
+            if saver is not None and checkpoint_every and \
+                    step % checkpoint_every == checkpoint_every - 1:
+                saver.save(step + 1, params, opt_state)
+            if fail_hook is not None:
+                fail_hook(step)
+            step += 1
+        except (ckpt.SimulatedFailure,) as e:  # node failure -> restore
+            restarts += 1
+            if saver is None:
+                raise
+            restored = saver.restore_latest(block=True)
+            if restored is None:  # no checkpoint yet: restart from scratch
+                params = model.init(jax.random.PRNGKey(seed))
+                opt_state = optimizer.init(params)
+                step = 0
+            else:
+                params, opt_state, step = ckpt.reshard_restored(
+                    restored, params, opt_state)
+    if saver is not None:
+        saver.wait()
+    return {
+        "params": params,
+        "opt_state": opt_state,
+        "history": history,
+        "restarts": restarts,
+        "straggler_events": detector.events,
+        "final_step": step,
+    }

@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the real single
+CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    """A (1,1) ('data','model') mesh on the single CPU device — exercises
+    every mesh code path (shard_map, flash decode, sharding rules) without
+    multiple devices."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,142 @@
+"""Attention unit tests: chunked/online-softmax vs naive, sliding window,
+GQA, flash decode on a mesh, ring-cache decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    _masked_decode,
+    chunked_attention,
+    flash_decode_sharded,
+)
+
+
+def naive_attention(q, k, v, causal=True, window=0, softcap=0.0):
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q4 = (q * D ** -0.5).reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q4, k).astype(jnp.float32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, v.shape[-1])
+
+
+def _qkv(rng, B=2, S=64, H=4, KV=2, D=16, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk_q,chunk_kv", [(16, 16), (64, 32), (8, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_naive(chunk_q, chunk_kv, causal, rng):
+    q, k, v = _qkv(rng)
+    out = chunked_attention(q, k, v, causal=causal, chunk_q=chunk_q,
+                            chunk_kv=chunk_kv)
+    ref = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [8, 16, 48])
+def test_sliding_window_matches_naive(window, rng):
+    q, k, v = _qkv(rng)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            chunk_q=16, chunk_kv=16)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_softcap(rng):
+    q, k, v = _qkv(rng, S=32)
+    out = chunked_attention(q, k, v, causal=True, softcap=20.0,
+                            chunk_q=16, chunk_kv=16)
+    ref = naive_attention(q, k, v, causal=True, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_full_row(rng):
+    """_masked_decode for the last position == full attention's last row."""
+    q, k, v = _qkv(rng, S=32)
+    B, S, H, D = q.shape
+    full = naive_attention(q, k, v, causal=True)
+    lo = jnp.zeros((B,), jnp.int32)
+    hi = jnp.full((B,), S, jnp.int32)
+    dec = _masked_decode(q[:, -1], k, v, lo, hi, 0.0)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_sharded_matches_masked(rng, mesh11):
+    q, k, v = _qkv(rng, S=32)
+    B, S, H, D = q.shape
+    lo = jnp.zeros((B,), jnp.int32)
+    hi = jnp.full((B,), S - 3, jnp.int32)  # partially filled cache
+    ref = _masked_decode(q[:, -1], k, v, lo, hi, 0.0)
+    with mesh11:
+        out = flash_decode_sharded(q[:, -1], k, v, lo, hi, 0.0, mesh11,
+                                   ("data",))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_ring_cache_decode_matches_window_attention(rng):
+    """Streaming W-window decode with the ring cache == banded attention's
+    last row, after enough steps to wrap the ring."""
+    import dataclasses
+
+    from repro.configs.base import get_smoke_arch
+    from repro.models import transformer as tf
+    from repro.models.common import init_params
+    from repro.models.attention import attention_specs
+
+    bundle = get_smoke_arch("gemma3_12b")
+    cfg = dataclasses.replace(bundle.model, compute_dtype="float32")
+    part = bundle.partition
+    specs = attention_specs(cfg, 0)
+    params = init_params(specs, rng)
+    B, S = 2, 48  # window is 16 -> ring wraps twice
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, cfg.d_model))
+
+    from repro.models.attention import self_attention
+
+    full, _ = self_attention(params, cfg, part, x, kind="attn_local")
+
+    W = cfg.window
+    cache = {
+        "k": jnp.zeros((B, W, cfg.n_kv_heads, cfg.resolved_head_dim), jnp.float32),
+        "v": jnp.zeros((B, W, cfg.n_kv_heads, cfg.resolved_head_dim), jnp.float32),
+        "pos": jnp.full((B, W), -1, jnp.int32),
+    }
+    outs = []
+    for t in range(S):
+        y, cache = tf._local_ring_decode(
+            params, cfg, part, x[:, t:t + 1],
+            positions=jnp.full((B,), t, jnp.int32), cache=cache)
+        outs.append(y[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_gqa_group_broadcast(rng):
+    """KV heads broadcast across query groups exactly (KV=1 == MHA with
+    repeated heads)."""
+    q, k, v = _qkv(rng, H=4, KV=1)
+    out = chunked_attention(q, k, v, causal=True, chunk_q=16, chunk_kv=16)
+    k4 = jnp.repeat(k, 4, axis=2)
+    v4 = jnp.repeat(v, 4, axis=2)
+    ref = chunked_attention(q, k4, v4, causal=True, chunk_q=16, chunk_kv=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of the same family runs one forward/train step on CPU, asserting output
+shapes and no NaNs; plus prefill/decode consistency against the full
+forward pass."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import arch_ids, get_smoke_arch
+from repro.models.model_zoo import build
+
+B, S = 2, 32
+
+
+def _batch_for(model, key):
+    cfg = model.cfg
+    if cfg.family == "encdec":
+        S_dec = S // cfg.dec_ratio
+        return {
+            "frames": jax.random.normal(key, (B, S, cfg.frontend_dim), jnp.bfloat16),
+            "tokens": jax.random.randint(key, (B, S_dec), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (B, S_dec), 0, cfg.vocab),
+        }
+    if cfg.modality == "vision":
+        nt = S - cfg.n_prefix_tokens
+        return {
+            "tokens": jax.random.randint(key, (B, nt), 0, cfg.vocab),
+            "patches": jax.random.normal(
+                key, (B, cfg.n_prefix_tokens, cfg.frontend_dim), jnp.bfloat16),
+            "labels": jax.random.randint(key, (B, nt), 0, cfg.vocab),
+        }
+    return {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+    }
+
+
+@pytest.mark.parametrize("arch_id", arch_ids())
+def test_train_step_shapes_and_finite(arch_id, rng):
+    model = build(get_smoke_arch(arch_id))
+    params = model.init(rng)
+    batch = _batch_for(model, jax.random.fold_in(rng, 1))
+    loss, metrics = jax.jit(lambda p, b: model.train_loss(p, b))(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch_id}: loss={loss}"
+    # gradients exist and are finite for every parameter
+    grads = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves), arch_id
+
+
+@pytest.mark.parametrize("arch_id", arch_ids())
+def test_prefill_decode_runs(arch_id, rng):
+    model = build(get_smoke_arch(arch_id))
+    cfg = model.cfg
+    params = model.init(rng)
+    batch = _batch_for(model, jax.random.fold_in(rng, 1))
+    batch.pop("labels")
+    caches = model.init_cache(B, S)
+    logits, caches = jax.jit(lambda p, b, c: model.prefill(p, b, c))(
+        params, batch, caches)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch_id
+    pos0 = S // cfg.dec_ratio if cfg.family == "encdec" else (
+        S if cfg.modality != "vision" else S)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for i in range(2):
+        logits, caches = jax.jit(
+            lambda p, t, po, c: model.decode_step(p, t, po, c))(
+            params, tok, jnp.full((B,), pos0 + i, jnp.int32), caches)
+        assert logits.shape == (B, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all()), arch_id
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch_id", ["qwen3_4b", "gemma3_12b", "qwen2_5_3b",
+                                     "jamba_v0_1_52b", "xlstm_350m"])
+def test_decode_consistent_with_full_forward(arch_id, rng):
+    """Teacher-forcing consistency: prefill(S tokens) + decode(token S)
+    produces the same logits as a full forward over S+1 tokens.  Run in
+    float32 compute to make the comparison meaningful.
+
+    MoE capacity is raised so routing drops (which legitimately differ
+    between a full pass and single-token decode) don't enter the check;
+    chunkwise-parallel recurrences (mLSTM/sLSTM) are allowed their
+    documented ~1e-2 stabilizer-reordering drift."""
+    bundle = get_smoke_arch(arch_id)
+    cfg = dataclasses.replace(bundle.model, compute_dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    bundle = dataclasses.replace(bundle, model=cfg)
+    model = build(bundle)
+    params = model.init(rng)
+    toks = jax.random.randint(jax.random.fold_in(rng, 1), (B, S + 1), 0, cfg.vocab)
+
+    # full forward logits at position S (predicting token S+1)
+    from repro.models import transformer as tf
+
+    x = tf.embed_tokens(params, cfg, toks)
+    x, _, _ = tf.run_stack_full(params["blocks"], cfg, model.part, x)
+    from repro.models import common as cm
+
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps,
+                   compute_dtype=jnp.float32)
+    full_logits = tf.lm_head(params, cfg, x)[:, S]
+
+    caches = model.init_cache(B, S + 1)
+    _, caches = model.prefill(params, {"tokens": toks[:, :S]}, caches)
+    dec_logits, _ = model.decode_step(
+        params, toks[:, S:S + 1], jnp.full((B,), S, jnp.int32), caches)
+    loose = arch_id in ("xlstm_350m", "jamba_v0_1_52b")  # chunkwise recurrences
+    tol = dict(rtol=1e-1, atol=2e-1) if loose else dict(rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), **tol)
+    # and the argmax token must agree everywhere
+    assert (np.asarray(dec_logits.argmax(-1)) ==
+            np.asarray(full_logits.argmax(-1))).all()
+
+
+def test_param_counts_are_plausible():
+    """Analytic param counts (roofline MODEL_FLOPS source) are within 2x of
+    the materialized smoke param count scaled... sanity only: exact count
+    check on the smoke config itself."""
+    import numpy as np
+
+    for arch_id in arch_ids():
+        bundle = get_smoke_arch(arch_id)
+        model = build(bundle)
+        params = model.init(jax.random.PRNGKey(0))
+        real = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+        if bundle.model.family == "encdec":
+            continue  # analytic model covers the decoder family only
+        est = bundle.model.param_count()["total"]
+        assert 0.4 * real < est < 2.5 * real, (arch_id, est, real)
