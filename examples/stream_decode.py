@@ -1,0 +1,67 @@
+"""Online decode of long-lived broadcast streams — the paper's '10^15
+bits/day of digital TV' scenario, done the way real receivers do it: a
+truncated-traceback sliding window emits bits a fixed lag behind the channel,
+in O(window) memory, and a continuous-batching scheduler multiplexes many
+independent stations through one jitted Pallas call.
+
+  PYTHONPATH=src python examples/stream_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CODE_K3_STD, bsc, encode, hard_branch_metrics
+from repro.core.viterbi import viterbi_decode
+from repro.stream import StreamScheduler, StreamSession, default_depth
+
+
+def main():
+    code = CODE_K3_STD
+    key = jax.random.PRNGKey(0)
+
+    # --- one unbounded stream, chunk by chunk ----------------------------- #
+    print("== single session: bits arrive in 64-step chunks ==")
+    T = 1024
+    info = jax.random.bernoulli(key, 0.5, (1, T - code.constraint + 1)).astype(jnp.int32)
+    rx = bsc(jax.random.fold_in(key, 1), encode(code, info), 0.02)
+    bm = hard_branch_metrics(code, rx)
+
+    sess = StreamSession(code, chunk=64, depth=default_depth(code))
+    decoded = []
+    for i in range(T // 64):
+        out = sess.push(bm[:, i * 64 : (i + 1) * 64])
+        decoded.append(np.asarray(out))
+        if i in (0, 1, 4):
+            print(f"  chunk {i}: emitted {out.shape[1]} bits (lag {sess.lag})")
+    rest, metric = sess.finish(terminated=True)
+    decoded.append(np.asarray(rest))
+    bits = np.concatenate(decoded, axis=1)
+    ber = float((bits[:, : info.shape[1]] != np.asarray(info)).mean())
+    print(f"  stream done: {bits.shape[1]} bits, metric {float(metric[0]):.1f}, BER {ber:.2e}")
+
+    # --- many stations through one scheduler ------------------------------ #
+    print("== continuous batching: 12 stations, 4 decode slots ==")
+    sched = StreamScheduler(code, n_slots=4, chunk=64, backend="fused")
+    truth = {}
+    for i in range(12):
+        k = jax.random.fold_in(key, 100 + i)
+        n = int(jax.random.randint(jax.random.fold_in(k, 0), (), 200, 500))
+        ib = jax.random.bernoulli(k, 0.5, (1, n)).astype(jnp.int32)
+        sbm = hard_branch_metrics(
+            code, bsc(jax.random.fold_in(k, 1), encode(code, ib), 0.01)
+        )
+        truth[f"station-{i}"] = (ib, sbm)
+        sched.submit(f"station-{i}", sbm[0])
+    results = sched.run()
+    exact = 0
+    for sid, (ib, sbm) in truth.items():
+        ref, _ = viterbi_decode(code, sbm)
+        exact += int((results[sid][0] == np.asarray(ref[0])).all())
+    s = sched.stats
+    print(f"  {s.streams_finished} streams drained in {s.ticks} ticks, "
+          f"{s.slot_claims} slot claims over {sched.n_slots} slots")
+    print(f"  {exact}/12 streams match the full-block decoder bit-for-bit")
+
+
+if __name__ == "__main__":
+    main()

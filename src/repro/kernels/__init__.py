@@ -10,12 +10,14 @@ from repro.kernels.ops import (
     minplus_matmul_op,
     texpand_op,
     viterbi_decode_fused,
+    viterbi_forward_chunk_op,
     viterbi_forward_op,
 )
 
 __all__ = [
     "texpand_op",
     "viterbi_forward_op",
+    "viterbi_forward_chunk_op",
     "viterbi_decode_fused",
     "minplus_matmul_op",
 ]

@@ -73,6 +73,36 @@ def viterbi_forward_op(
     return final_pm[:, :B].T, bps[:, :, :B].transpose(0, 2, 1)
 
 
+def viterbi_forward_chunk_op(
+    code: ConvCode,
+    pm: jnp.ndarray,
+    bm_chunk: jnp.ndarray,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked fused forward pass with carried path metrics — the streaming
+    entry point.  The caller owns the cross-chunk state (path metrics and a
+    traceback ring buffer, see stream/session.py); this op advances the path
+    metrics C steps through the VMEM-resident Pallas scan.
+
+    Args:
+      pm: (B, S) float32 path metrics entering the chunk.
+      bm_chunk: (B, C, M) branch-metric tables for the chunk.
+    Returns:
+      new_pm: (B, S) path metrics after the chunk.
+      bps: (C, B, S) int32 backpointer parities (traceback layout).
+    """
+    B, C, M = bm_chunk.shape
+    pm_k = pm.T  # (S, B)
+    bm_k = bm_chunk.transpose(1, 2, 0)  # (C, M, B)
+    block_b = 128 if B >= 128 else max(8, B)
+    pm_k, _ = _pad_to(pm_k, 1, block_b, NEG_UNREACHABLE)
+    bm_k, _ = _pad_to(bm_k, 2, block_b, 0.0)
+    new_pm, bps = _vscan.viterbi_scan_carry(
+        code, pm_k.astype(jnp.float32), bm_k.astype(jnp.float32), block_b, _use_interpret(interpret)
+    )
+    return new_pm[:, :B].T, bps[:, :, :B].transpose(0, 2, 1)
+
+
 def viterbi_decode_fused(
     code: ConvCode,
     bm_tables: jnp.ndarray,

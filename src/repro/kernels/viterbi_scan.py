@@ -48,6 +48,81 @@ def _viterbi_scan_kernel(
     out_pm_ref[...] = new_pm.astype(out_pm_ref.dtype)
 
 
+def _viterbi_scan_carry_kernel(
+    p0_ref, p1_ref, oh0_ref, oh1_ref, pm0_ref, bm_ref, out_bp_ref, out_pm_ref, pm_scratch
+):
+    """Like _viterbi_scan_kernel but seeded from carried path metrics.
+
+    The streaming subsystem calls this once per chunk: pm0 is the previous
+    chunk's final path metrics, so a stream of arbitrary length runs through
+    the same VMEM-resident scan without re-materializing history.
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        pm_scratch[...] = pm0_ref[...]
+
+    pm = pm_scratch[...]
+    bm = bm_ref[0].astype(jnp.float32)
+    hi = jax.lax.Precision.HIGHEST
+    cand0 = jax.lax.dot(p0_ref[...], pm, precision=hi) + jax.lax.dot(oh0_ref[...], bm, precision=hi)
+    cand1 = jax.lax.dot(p1_ref[...], pm, precision=hi) + jax.lax.dot(oh1_ref[...], bm, precision=hi)
+    take1 = cand1 < cand0
+    new_pm = jnp.where(take1, cand1, cand0)
+    new_pm = jnp.minimum(new_pm, NEG_UNREACHABLE)
+    pm_scratch[...] = new_pm
+    out_bp_ref[0] = take1.astype(out_bp_ref.dtype)
+    out_pm_ref[...] = new_pm.astype(out_pm_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def viterbi_scan_carry(
+    code: ConvCode,
+    pm0: jnp.ndarray,
+    bm_tables: jnp.ndarray,
+    block_b: int = 128,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked ACS scan with carried state: run C steps starting from ``pm0``.
+
+    Args:
+      pm0: (S, B) float32 path metrics entering the chunk.
+      bm_tables: (C, M, B) float32.  B must be a multiple of ``block_b``.
+    Returns:
+      final_pm: (S, B) float32; bps: (C, S, B) int32 backpointer parities.
+    """
+    C, M, B = bm_tables.shape
+    S = code.n_states
+    P0, P1 = code.select_matrices
+    OH0, OH1 = code.branch_onehot_pair
+    grid = (B // block_b, C)  # time innermost: scratch carries pm across t
+    tbl = lambda r, c: pl.BlockSpec((r, c), lambda b, t: (0, 0))  # noqa: E731
+    bps, final_pm = pl.pallas_call(
+        _viterbi_scan_carry_kernel,
+        grid=grid,
+        in_specs=[
+            tbl(S, S),
+            tbl(S, S),
+            tbl(S, M),
+            tbl(S, M),
+            pl.BlockSpec((S, block_b), lambda b, t: (0, b)),
+            pl.BlockSpec((1, M, block_b), lambda b, t: (t, 0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, block_b), lambda b, t: (t, 0, b)),
+            pl.BlockSpec((S, block_b), lambda b, t: (0, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, S, B), jnp.int32),
+            jax.ShapeDtypeStruct((S, B), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((S, block_b), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(P0), jnp.asarray(P1), jnp.asarray(OH0), jnp.asarray(OH1), pm0, bm_tables)
+    return final_pm, bps
+
+
 @functools.partial(jax.jit, static_argnums=(0, 2, 3))
 def viterbi_scan(
     code: ConvCode,

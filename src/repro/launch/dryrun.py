@@ -154,6 +154,8 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per computation
+            cost = cost[0] if cost else {}
         print(mem)
         print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
         hlo = compiled.as_text()

@@ -508,7 +508,7 @@ def softmax_xent(logits, labels, valid=None, z_weight: float = 0.0, mesh=None):
 
 def _xent_sharded(logits, labels, mesh):
     """Vocab-sharded NLL: returns (nll (B,S), lse (B,S)) f32."""
-    from jax import shard_map
+    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     V = logits.shape[-1]
@@ -540,7 +540,7 @@ def _xent_sharded(logits, labels, mesh):
         f, mesh=mesh,
         in_specs=(P(bspec, None, "model"), P(bspec, None)),
         out_specs=(P(bspec, None), P(bspec, None)),
-        check_vma=False,
+        check_rep=False,
     )(logits, labels)
 
 

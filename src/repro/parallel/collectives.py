@@ -23,7 +23,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.acs import acs_step
@@ -92,7 +92,7 @@ def viterbi_decode_seqparallel(
         shard_fn, mesh=mesh,
         in_specs=P(None, axis, None),
         out_specs=(P(axis, None, None), P()),
-        check_vma=False,
+        check_rep=False,
     )(bm_tables)
     # bps_loc concatenates shard-local (T/n, B, S) blocks along time
     bps = bps_loc  # (T, B, S) — shard_map stitches the sharded axis

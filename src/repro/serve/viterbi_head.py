@@ -14,6 +14,10 @@ Decoder selection:
   'parallel'     core.viterbi_decode_parallel ((min,+) associative scan)
   'seqparallel'  parallel.collectives.viterbi_decode_seqparallel
                  (shard_map across the 'model' mesh axis — for long streams)
+  'streaming'    stream.viterbi_decode_windowed (truncated-traceback sliding
+                 window over the chunked Pallas scan — O(depth) memory, the
+                 online path; see stream/ for sessions and the continuous-
+                 batching scheduler behind long-lived connections)
 
 An LM can be piped straight into the head: generate token bits, encode,
 push through a noisy channel, decode, and verify — see
@@ -43,10 +47,11 @@ from repro.kernels.ops import viterbi_decode_fused
 @dataclasses.dataclass
 class ViterbiHead:
     code: ConvCode = CODE_K3_STD
-    mode: str = "fused"  # fused | sequential | parallel | seqparallel
+    mode: str = "fused"  # fused | sequential | parallel | seqparallel | streaming
     soft: bool = False
     mesh: Optional[object] = None
     chunk: int = 64
+    stream_depth: Optional[int] = None  # traceback depth for 'streaming' (default 5K)
 
     # ------------------------- encode side ------------------------- #
 
@@ -87,6 +92,12 @@ class ViterbiHead:
 
             assert self.mesh is not None, "seqparallel needs a mesh"
             return viterbi_decode_seqparallel(self.code, bm_tables, self.mesh)
+        if self.mode == "streaming":
+            from repro.stream.window import viterbi_decode_windowed
+
+            return viterbi_decode_windowed(
+                self.code, bm_tables, depth=self.stream_depth, chunk=self.chunk
+            )
         raise KeyError(self.mode)
 
     # --------------------- end-to-end convenience --------------------- #

@@ -1,0 +1,30 @@
+"""Streaming Viterbi subsystem: online decode for unbounded bitstreams.
+
+window.py    — truncated-traceback sliding-window core (jittable)
+session.py   — stateful per-stream sessions, O(depth + chunk) memory
+scheduler.py — continuous batching of many streams into one jitted call
+"""
+from repro.stream.scheduler import SchedulerStats, StreamScheduler
+from repro.stream.session import StreamSession
+from repro.stream.window import (
+    StreamState,
+    chunk_forward_scan,
+    default_depth,
+    init_stream_state,
+    stream_flush,
+    stream_step,
+    viterbi_decode_windowed,
+)
+
+__all__ = [
+    "StreamState",
+    "StreamSession",
+    "StreamScheduler",
+    "SchedulerStats",
+    "chunk_forward_scan",
+    "default_depth",
+    "init_stream_state",
+    "stream_flush",
+    "stream_step",
+    "viterbi_decode_windowed",
+]

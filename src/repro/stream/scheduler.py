@@ -1,0 +1,255 @@
+"""Continuous-batching stream scheduler.
+
+Thousands of independent broadcast streams, one jitted Pallas call: every
+live stream is pinned to a slot of a fixed (n_slots, chunk) decode block —
+the same compile-once bucket discipline as serve/kv_cache.py — and each
+``step()`` tick advances ALL slots through one batched stream_step.  Streams
+join when a slot frees (FIFO admission), leave when their input drains (the
+tail + final traceback run per-slot, off the hot path), and their slot is
+recycled for the next pending stream: classic continuous batching, applied
+to trellis decode instead of token decode.
+
+The per-slot python bookkeeping (positions, commit counts) mirrors
+StreamSession; the batched StreamState lives in one pytree so the hot loop
+is a single dispatch regardless of how many streams are in flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trellis import ConvCode
+from repro.core.viterbi import _initial_pm
+from repro.serve.kv_cache import SlotAllocator
+from repro.stream import window as _w
+
+
+@dataclasses.dataclass
+class _Stream:
+    """Per-stream bookkeeping (host side)."""
+
+    stream_id: str
+    bm: np.ndarray  # (T, M) branch metrics still to be fed
+    terminated: bool
+    pos: int = 0  # steps fed to the kernel
+    committed: int = 0  # bits already emitted
+    out: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def remaining(self) -> int:
+        return self.bm.shape[0] - self.pos
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    ticks: int = 0
+    streams_submitted: int = 0
+    streams_finished: int = 0
+    slot_claims: int = 0
+    steps_decoded: int = 0  # trellis steps through the batched kernel (incl. idle slots)
+
+    def asdict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class StreamScheduler:
+    """Continuous batching of independent Viterbi streams.
+
+    Args:
+      code: convolutional code shared by all streams.
+      n_slots: decode-block batch size (compile-once; streams beyond this
+        queue FIFO until a slot frees).
+      chunk: trellis steps per tick per slot.
+      depth: truncated-traceback depth (default 5*K).
+      backend: 'fused' | 'scan' forward pass for the hot loop.
+
+    Usage:
+      sched.submit("tv-0", bm_tables)      # (T, M) per stream
+      while sched.pending_work():
+          emitted = sched.step()           # {stream_id: np bits} this tick
+      bits, metric = sched.result("tv-0")
+    """
+
+    def __init__(
+        self,
+        code: ConvCode,
+        n_slots: int = 64,
+        chunk: int = 64,
+        depth: Optional[int] = None,
+        backend: str = "fused",
+        normalize: bool = True,
+        interpret: Optional[bool] = None,
+    ):
+        self.code = code
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.depth = _w.default_depth(code) if depth is None else depth
+        self.backend = backend
+        self.state = _w.init_stream_state(code, n_slots, self.depth, chunk)
+        self.offset = jnp.zeros((n_slots,), dtype=jnp.float32)
+        self.alloc = SlotAllocator(n_slots)
+        self.active: Dict[int, _Stream] = {}
+        self.pending: Deque[_Stream] = deque()
+        self.results: Dict[str, Tuple[np.ndarray, float]] = {}
+        self.stats = SchedulerStats()
+        self._pm0_row = _initial_pm(code, ())  # (S,) fresh-slot path metrics
+        self._step_fn = _w.jitted_stream_step(
+            code, backend=backend, normalize=normalize, interpret=interpret
+        )
+
+    # ------------------------------ intake ------------------------------ #
+
+    def submit(self, stream_id: str, bm_tables, terminated: bool = True) -> None:
+        """Queue a stream.  bm_tables: (T, M) branch metrics (the serving
+        layer produces these from received bits/LLRs chunk by chunk; here the
+        whole table is handed over and the scheduler feeds it out in chunks)."""
+        bm = np.asarray(bm_tables, dtype=np.float32)
+        if bm.ndim != 2:
+            raise ValueError(f"bm_tables must be (T, M), got {bm.shape}")
+        if stream_id in self.results or any(
+            s.stream_id == stream_id for s in list(self.active.values()) + list(self.pending)
+        ):
+            raise KeyError(f"duplicate stream_id {stream_id!r}")
+        self.pending.append(_Stream(stream_id, bm, terminated))
+        self.stats.streams_submitted += 1
+        self._admit()
+
+    def evict(self, stream_id: str) -> Optional[np.ndarray]:
+        """Cancel a stream.  Returns the bits committed so far (or None if it
+        was still pending); the slot is recycled immediately."""
+        for i, s in enumerate(self.pending):
+            if s.stream_id == stream_id:
+                del self.pending[i]
+                return None
+        for slot, s in self.active.items():
+            if s.stream_id == stream_id:
+                partial = self._collect(s)
+                del self.active[slot]
+                self.alloc.release(slot)  # state is re-initialized at next claim
+                self._admit()
+                return partial
+        raise KeyError(stream_id)
+
+    # ------------------------------ ticking ------------------------------ #
+
+    def pending_work(self) -> bool:
+        return bool(self.active or self.pending)
+
+    def step(self) -> Dict[str, np.ndarray]:
+        """One scheduler tick: retire drained streams, admit pending ones,
+        then advance every live slot ``chunk`` steps through ONE jitted call.
+        Returns the bits each stream newly committed this tick."""
+        # 1. retire streams that cannot fill a full chunk (tail + flush run
+        #    per-slot with a lax.scan — off the batched hot path), re-admit,
+        #    and repeat: an admitted pending stream may itself be shorter
+        #    than a chunk and must retire before the packing loop sees it.
+        self._admit()
+        while True:
+            drained = [s for s, st in self.active.items() if st.remaining < self.chunk]
+            if not drained:
+                break
+            for slot in drained:
+                self._finish_slot(slot)
+            self._admit()
+        if not self.active:
+            return {}
+
+        # 2. pack the decode block; idle slots decode zeros (harmless: a
+        #    slot's state is re-initialized when a stream claims it).
+        M = self.code.n_symbols
+        bm_block = np.zeros((self.n_slots, self.chunk, M), dtype=np.float32)
+        for slot, st in self.active.items():
+            bm_block[slot] = st.bm[st.pos : st.pos + self.chunk]
+
+        # 3. the one jitted call for all live streams.
+        self.state, bits, delta = self._step_fn(self.state, jnp.asarray(bm_block))
+        self.offset = self.offset + delta
+        bits_np = np.asarray(bits)
+        self.stats.ticks += 1
+        self.stats.steps_decoded += self.n_slots * self.chunk
+
+        # 4. distribute newly-final bits.
+        emitted: Dict[str, np.ndarray] = {}
+        for slot, st in self.active.items():
+            st.pos += self.chunk
+            committable = max(0, st.pos - self.depth)
+            n_new = committable - st.committed
+            st.committed = committable
+            if n_new:
+                fresh = bits_np[slot, self.chunk - n_new :]
+                st.out.append(fresh)
+                emitted[st.stream_id] = fresh
+        return emitted
+
+    def run(self) -> Dict[str, Tuple[np.ndarray, float]]:
+        """Drain everything; returns {stream_id: (bits (T,), metric)}."""
+        while self.pending_work():
+            self.step()
+        return self.results
+
+    def result(self, stream_id: str) -> Tuple[np.ndarray, float]:
+        return self.results[stream_id]
+
+    def pop_result(self, stream_id: str) -> Tuple[np.ndarray, float]:
+        """result() + drop — long-lived servers must use this (or otherwise
+        prune ``results``) so finished-stream outputs don't accumulate
+        forever."""
+        return self.results.pop(stream_id)
+
+    def utilization(self) -> float:
+        return self.alloc.utilization()
+
+    # ------------------------------ internals ------------------------------ #
+
+    def _admit(self) -> None:
+        while self.pending and self.alloc.free:
+            st = self.pending.popleft()
+            slot = self.alloc.claim(st.stream_id)
+            # reset at CLAIM time, not release time: free slots keep being
+            # advanced with zero branch metrics every tick, which would
+            # otherwise erase the start-in-state-0 constraint (paper §IV-B)
+            # for the next stream.
+            self._reset_slot(slot)
+            self.active[slot] = st
+            self.stats.slot_claims += 1
+
+    def _collect(self, st: _Stream) -> np.ndarray:
+        return (
+            np.concatenate(st.out) if st.out else np.zeros((0,), dtype=np.int32)
+        ).astype(np.int32)
+
+    def _reset_slot(self, slot: int) -> None:
+        self.state = _w.StreamState(
+            pm=self.state.pm.at[slot].set(self._pm0_row),
+            ring=self.state.ring.at[:, slot].set(0),
+        )
+        self.offset = self.offset.at[slot].set(0.0)
+
+    def _finish_slot(self, slot: int) -> None:
+        """Tail-feed + final traceback for one drained stream, then recycle
+        its slot.  Runs on (1, ...) slices, off the batched hot path."""
+        st = self.active.pop(slot)
+        pm = self.state.pm[slot : slot + 1]
+        ring = self.state.ring[:, slot : slot + 1]
+        if st.remaining > 0:
+            tail = jnp.asarray(st.bm[st.pos :][None])  # (1, r, M)
+            r = tail.shape[1]
+            pm, bps = _w.jitted_chunk_forward(self.code)(pm, tail)
+            ring = jnp.concatenate([ring[r:], bps], axis=0)
+            st.pos += r
+        bits, metric = _w.jitted_stream_flush(self.code, terminated=st.terminated)(
+            _w.StreamState(pm=pm, ring=ring)
+        )
+        n_rest = st.pos - st.committed
+        if n_rest:
+            R = bits.shape[1]
+            st.out.append(np.asarray(bits[0, R - n_rest :]))
+        st.committed = st.pos
+        full = self._collect(st)
+        self.results[st.stream_id] = (full, float(metric[0] + self.offset[slot]))
+        self.stats.streams_finished += 1
+        self.alloc.release(slot)  # state is re-initialized at next claim

@@ -1,0 +1,149 @@
+"""Stateful streaming decode sessions.
+
+A StreamSession owns the carried StreamState for one (optionally batched)
+bitstream and the python-side bookkeeping that the jittable core cannot do:
+how many steps have been pushed, how many bits are already committed, and
+therefore which slice of each chunk's committed window is actually valid.
+Memory is O(depth + chunk) regardless of stream length; path metrics are
+renormalized every chunk so float32 never saturates, with the accumulated
+offset tracked so ``finish`` still reports the absolute path metric.
+
+Typical use:
+
+    sess = StreamSession(code, chunk=64)
+    for bm_chunk in channel:                  # (B, 64, M) each
+        emit(sess.push(bm_chunk))             # (B, <=64) newly-final bits
+    emit(*sess.finish(terminated=True))       # the last `depth` bits + metric
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.trellis import ConvCode
+from repro.stream import window as _w
+
+
+class StreamSession:
+    """Online Viterbi decoder for one stream (or a batch sharing timing).
+
+    Args:
+      code: the convolutional code.
+      batch: number of independent streams advanced in lock-step (one jitted
+        call decodes all of them; the scheduler uses this with batch=n_slots).
+      chunk: trellis steps consumed per push (fixed — one compiled shape).
+      depth: truncated-traceback depth D; bits commit D steps behind the
+        frontier.  Default 5*K (the textbook rule).
+      backend: 'fused' (Pallas) or 'scan' (jnp reference).
+      normalize: renormalize path metrics every chunk (required for streams
+        longer than ~1e30/bm_max steps; cheap, on by default).
+    """
+
+    def __init__(
+        self,
+        code: ConvCode,
+        batch: int = 1,
+        chunk: int = 64,
+        depth: Optional[int] = None,
+        backend: str = "fused",
+        normalize: bool = True,
+        interpret: Optional[bool] = None,
+    ):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.code = code
+        self.batch = batch
+        self.chunk = chunk
+        self.depth = _w.default_depth(code) if depth is None else depth
+        if self.depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.backend = backend
+        self.state = _w.init_stream_state(code, batch, self.depth, chunk)
+        self.offset = jnp.zeros((batch,), dtype=jnp.float32)
+        self.t = 0  # trellis steps pushed so far
+        self.committed = 0  # bits already handed to the caller
+        self.closed = False
+        self._step = _w.jitted_stream_step(
+            code, backend=backend, normalize=normalize, interpret=interpret
+        )
+
+    @property
+    def ring_size(self) -> int:
+        return self.depth + self.chunk
+
+    @property
+    def lag(self) -> int:
+        """Bits pushed but not yet committed (== depth at steady state)."""
+        return self.t - self.committed
+
+    def push(self, bm_chunk: jnp.ndarray) -> jnp.ndarray:
+        """Advance the stream by exactly ``chunk`` steps.
+
+        Args:
+          bm_chunk: (B, chunk, M) branch-metric tables.
+        Returns:
+          (B, n_new) newly-committed bits, n_new in [0, chunk] — 0 while the
+          window warms up, exactly ``chunk`` at steady state.
+        """
+        if self.closed:
+            raise RuntimeError("session is finished")
+        if bm_chunk.shape[:2] != (self.batch, self.chunk):
+            raise ValueError(
+                f"expected ({self.batch}, {self.chunk}, M) chunk, got {bm_chunk.shape}"
+            )
+        self.state, bits, delta = self._step(self.state, bm_chunk)
+        self.offset = self.offset + delta
+        self.t += self.chunk
+        committable = max(0, self.t - self.depth)
+        n_new = committable - self.committed
+        self.committed = committable
+        # the committed window covers positions [t-R, t-D); its valid tail
+        # (positions >= previous commit point) is the last n_new entries.
+        return bits[:, self.chunk - n_new :] if n_new else bits[:, :0]
+
+    def finish(
+        self,
+        bm_tail: Optional[jnp.ndarray] = None,
+        terminated: bool = True,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Consume an optional odd-length tail and flush the window.
+
+        Args:
+          bm_tail: (B, r, M) with 0 < r < chunk, or None.
+          terminated: the stream ends in state 0 (encoder flushed).
+        Returns:
+          bits: (B, lag) the remaining uncommitted bits.
+          metric: (B,) absolute winning path metric (normalization undone).
+        """
+        if self.closed:
+            raise RuntimeError("session is finished")
+        if bm_tail is not None and bm_tail.shape[1]:
+            r = bm_tail.shape[1]
+            if r >= self.chunk or bm_tail.shape[0] != self.batch:
+                raise ValueError(f"tail must be (B, <chunk, M), got {bm_tail.shape}")
+            new_pm, bps = _w.jitted_chunk_forward(self.code)(self.state.pm, bm_tail)
+            ring = jnp.concatenate([self.state.ring[r:], bps], axis=0)
+            self.state = _w.StreamState(pm=new_pm, ring=ring)
+            self.t += r
+        bits, metric = _w.jitted_stream_flush(self.code, terminated=terminated)(self.state)
+        n_rest = self.t - self.committed
+        self.committed = self.t
+        self.closed = True
+        R = bits.shape[1]
+        return bits[:, R - n_rest :] if n_rest else bits[:, :0], metric + self.offset
+
+    def decode_all(
+        self, bm_tables: jnp.ndarray, terminated: bool = True
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Push a full (B, T, M) block through this session and return the
+        complete (B, T) decode + metric.  Convenience for tests/benchmarks."""
+        B, T, M = bm_tables.shape
+        out = []
+        n_full = T // self.chunk
+        for i in range(n_full):
+            out.append(self.push(bm_tables[:, i * self.chunk : (i + 1) * self.chunk]))
+        tail = bm_tables[:, n_full * self.chunk :]
+        rest, metric = self.finish(tail if tail.shape[1] else None, terminated=terminated)
+        out.append(rest)
+        return jnp.concatenate(out, axis=1), metric

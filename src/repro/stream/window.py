@@ -1,0 +1,218 @@
+"""Truncated-traceback sliding-window Viterbi — the streaming core.
+
+Classic Viterbi hardware never materializes the full trellis: after D ≈ 5·K
+steps all survivor paths merge with overwhelming probability, so a decoder
+that traces back D steps from the current best state and commits everything
+older is (a) within noise of the full-block optimum and (b) O(D) memory for
+a stream of any length (Martina & Masera 2010, §Viterbi traceback units).
+
+This module is the jittable core shared by sessions and the scheduler:
+
+  StreamState     pytree carried across chunks: path metrics (B, S) and a
+                  backpointer ring buffer (R, B, S) with R = depth + chunk.
+  stream_step     advance C trellis steps (fused Pallas chunk scan or a
+                  lax.scan reference), shift the ring, traceback from the
+                  frontier, and commit the C oldest window positions.
+  stream_flush    final traceback over the whole ring at end of stream.
+  viterbi_decode_windowed
+                  offline (B, T, M) -> (B, T) decode through the streaming
+                  machinery — the equivalence oracle used by the tests.
+
+Exactness: when depth >= T nothing commits before the flush, the ring holds
+the whole history, and the flush traceback from the terminated state IS the
+full-block Viterbi traceback — bit-identical to core.viterbi.viterbi_decode.
+Away from that regime the committed prefix differs from the full-block
+decode only where survivor paths fail to merge within D steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.acs import acs_step
+from repro.core.trellis import NEG_UNREACHABLE, ConvCode
+from repro.core.viterbi import _initial_pm, _traceback
+
+BIG = jnp.float32(NEG_UNREACHABLE)
+
+DEPTH_MULTIPLIER = 5  # the textbook truncation rule: D = 5 * constraint
+
+
+def default_depth(code: ConvCode) -> int:
+    return DEPTH_MULTIPLIER * code.constraint
+
+
+class StreamState(NamedTuple):
+    """Carried decode state — everything a stream needs across chunks.
+
+    pm:   (B, S) float32 path metrics at the stream frontier (renormalized,
+          see stream_step).
+    ring: (R, B, S) int32 backpointer ring, R = depth + chunk; slot i holds
+          the backpointers of absolute step ``t - R + i`` (pre-stream slots
+          hold zeros and are never committed by the session bookkeeping).
+    """
+
+    pm: jnp.ndarray
+    ring: jnp.ndarray
+
+
+def init_stream_state(code: ConvCode, batch: int, depth: int, chunk: int) -> StreamState:
+    """Fresh state: paths start in state 0 (paper §IV-B), empty ring."""
+    ring = jnp.zeros((depth + chunk, batch, code.n_states), dtype=jnp.int32)
+    return StreamState(pm=_initial_pm(code, (batch,)), ring=ring)
+
+
+def chunk_forward_scan(
+    code: ConvCode, pm: jnp.ndarray, bm_chunk: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """lax.scan reference for the chunked forward pass (oracle for the fused
+    kernels.ops.viterbi_forward_chunk_op, and the path used for odd-length
+    stream tails).  pm: (B, S); bm_chunk: (B, C, M) -> (new_pm, bps (C, B, S)).
+    """
+
+    def step(pm, bm_t):
+        new_pm, bp = acs_step(code, pm, bm_t)
+        return jnp.minimum(new_pm, BIG), bp
+
+    return jax.lax.scan(step, pm, bm_chunk.swapaxes(0, 1))
+
+
+def stream_step(
+    code: ConvCode,
+    state: StreamState,
+    bm_chunk: jnp.ndarray,
+    backend: str = "fused",
+    normalize: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[StreamState, jnp.ndarray, jnp.ndarray]:
+    """One streaming update: advance C steps, commit the C oldest positions.
+
+    Args:
+      bm_chunk: (B, C, M) branch metrics for the next C trellis steps.
+      backend: 'fused' (Pallas chunk scan) or 'scan' (jnp reference).
+      normalize: subtract the per-stream min from the path metrics so an
+        unbounded stream never overflows float32; the subtracted offset is
+        returned so callers can reconstruct absolute metrics.
+
+    Returns:
+      new_state: state after the chunk (ring shifted by C).
+      committed: (B, C) decoded bits for the C oldest window positions —
+        positions [t - R, t - D) where t is the new frontier.  The caller
+        masks off any that predate the stream start (session bookkeeping).
+      offset_delta: (B,) the amount subtracted from the path metrics.
+    """
+    pm, ring = state
+    C = bm_chunk.shape[1]
+    if backend == "fused":
+        from repro.kernels.ops import viterbi_forward_chunk_op
+
+        new_pm, bps = viterbi_forward_chunk_op(code, pm, bm_chunk, interpret)
+    elif backend == "scan":
+        new_pm, bps = chunk_forward_scan(code, pm, bm_chunk)
+    else:
+        raise KeyError(backend)
+
+    ring = jnp.concatenate([ring[C:], bps], axis=0)
+
+    # truncated traceback: from the best frontier state back through the
+    # whole window; only the positions >= depth behind the frontier commit.
+    best = jnp.argmin(new_pm, axis=-1).astype(jnp.int32)
+    bits, _ = _traceback(code, ring, best)  # (B, R)
+    committed = bits[:, :C]
+
+    if normalize:
+        delta = new_pm.min(axis=-1)
+        new_pm = jnp.minimum(new_pm - delta[:, None], BIG)
+    else:
+        delta = jnp.zeros(new_pm.shape[:1], dtype=new_pm.dtype)
+    return StreamState(pm=new_pm, ring=ring), committed, delta
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_stream_step(
+    code: ConvCode,
+    backend: str = "fused",
+    normalize: bool = True,
+    interpret: Optional[bool] = None,
+):
+    """Compiled stream_step, cached on the static config so every session and
+    scheduler with the same (code, backend, flags) shares one executable per
+    (batch, chunk) shape instead of re-tracing per instance."""
+    return jax.jit(
+        functools.partial(
+            stream_step, code, backend=backend, normalize=normalize, interpret=interpret
+        )
+    )
+
+
+def stream_flush(
+    code: ConvCode,
+    state: StreamState,
+    terminated: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """End-of-stream traceback over the full ring.
+
+    Returns:
+      bits: (B, R) bits for every ring position (caller slices the still-
+        uncommitted tail).
+      metric: (B,) winning path metric at the frontier (relative — add the
+        session's accumulated normalization offset for the absolute value).
+    """
+    pm, ring = state
+    B = pm.shape[0]
+    if terminated:
+        final_state = jnp.zeros((B,), dtype=jnp.int32)
+        metric = pm[:, 0]
+    else:
+        final_state = jnp.argmin(pm, axis=-1).astype(jnp.int32)
+        metric = pm.min(axis=-1)
+    bits, _ = _traceback(code, ring, final_state)
+    return bits, metric
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_stream_flush(code: ConvCode, terminated: bool = True):
+    """Compiled stream_flush, cached per (code, terminated) — the scheduler
+    flushes drained slots one at a time, so this must not re-trace per slot."""
+    return jax.jit(functools.partial(stream_flush, code, terminated=terminated))
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_chunk_forward(code: ConvCode):
+    """Compiled chunk_forward_scan (odd-length stream tails; compiles once
+    per tail length, shared across slots and sessions)."""
+    return jax.jit(functools.partial(chunk_forward_scan, code))
+
+
+def viterbi_decode_windowed(
+    code: ConvCode,
+    bm_tables: jnp.ndarray,
+    depth: Optional[int] = None,
+    chunk: int = 64,
+    terminated: bool = True,
+    backend: str = "fused",
+    normalize: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Offline sliding-window decode of a full (B, T, M) block.
+
+    Drop-in shape-compatible with core.viterbi.viterbi_decode, but runs the
+    O(depth + chunk) streaming path: bit-identical when depth >= T, and
+    within truncation noise (vanishing for depth >~ 5K) otherwise.
+    """
+    from repro.stream.session import StreamSession
+
+    B = bm_tables.shape[0]
+    sess = StreamSession(
+        code,
+        batch=B,
+        chunk=chunk,
+        depth=depth,
+        backend=backend,
+        normalize=normalize,
+        interpret=interpret,
+    )
+    return sess.decode_all(bm_tables, terminated=terminated)

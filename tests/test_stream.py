@@ -1,0 +1,288 @@
+"""Streaming subsystem: sliding-window decode, sessions, scheduler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CODE_K3_STD,
+    CODE_K5_GSM,
+    bsc,
+    encode,
+    hard_branch_metrics,
+    viterbi_decode,
+)
+from repro.kernels.ops import viterbi_forward_chunk_op, viterbi_forward_op
+from repro.serve.viterbi_head import ViterbiHead
+from repro.stream import (
+    StreamScheduler,
+    StreamSession,
+    chunk_forward_scan,
+    default_depth,
+    init_stream_state,
+    viterbi_decode_windowed,
+)
+
+CODES = {"k3": CODE_K3_STD, "k5": CODE_K5_GSM}
+
+
+def _noisy_bm(code, key, batch, info_bits, flip):
+    bits = jax.random.bernoulli(key, 0.5, (batch, info_bits)).astype(jnp.int32)
+    coded = encode(code, bits, terminate=True)
+    rx = bsc(jax.random.fold_in(key, 1), coded, flip)
+    return bits, hard_branch_metrics(code, rx)
+
+
+# --------------------------------------------------------------------------- #
+# chunked forward op                                                           #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("code_name", sorted(CODES))
+def test_chunked_forward_matches_full_scan(code_name, rng):
+    """Composing carried-state chunk scans == one full-block forward pass."""
+    code = CODES[code_name]
+    _, bm = _noisy_bm(code, rng, 4, 61, 0.05)
+    full_pm, full_bps = viterbi_forward_op(code, bm)
+
+    pm = init_stream_state(code, 4, 1, 1).pm
+    bps_parts = []
+    C = 16
+    T = bm.shape[1]
+    for i in range(0, T, C):
+        chunk = bm[:, i : i + C]
+        if chunk.shape[1] == C:
+            pm, bps = viterbi_forward_chunk_op(code, pm, chunk)
+        else:  # odd tail goes through the scan reference
+            pm, bps = chunk_forward_scan(code, pm, chunk)
+        bps_parts.append(bps)
+    np.testing.assert_allclose(np.asarray(pm), np.asarray(full_pm), rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(b) for b in bps_parts]), np.asarray(full_bps)
+    )
+
+
+def test_chunk_op_matches_scan_reference(rng):
+    code = CODE_K3_STD
+    _, bm = _noisy_bm(code, rng, 8, 30, 0.1)
+    pm0 = init_stream_state(code, 8, 1, 1).pm
+    pm_f, bps_f = viterbi_forward_chunk_op(code, pm0, bm)
+    pm_s, bps_s = chunk_forward_scan(code, pm0, bm)
+    np.testing.assert_allclose(np.asarray(pm_f), np.asarray(pm_s), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(bps_f), np.asarray(bps_s))
+
+
+# --------------------------------------------------------------------------- #
+# (a) windowed == full-block when D >= T                                       #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("code_name", sorted(CODES))
+@pytest.mark.parametrize("backend", ["scan", "fused"])
+def test_windowed_bit_exact_when_depth_covers_block(code_name, backend, rng):
+    code = CODES[code_name]
+    _, bm = _noisy_bm(code, rng, 4, 96 - (code.constraint - 1), 0.04)
+    ref_bits, ref_metric = viterbi_decode(code, bm)
+    T = bm.shape[1]
+    bits, metric = viterbi_decode_windowed(
+        code, bm, depth=T, chunk=32, backend=backend
+    )
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(ref_bits))
+    np.testing.assert_allclose(np.asarray(metric), np.asarray(ref_metric), rtol=1e-5)
+
+
+def test_windowed_handles_odd_tail(rng):
+    """T not a multiple of chunk: the remainder flows through finish()."""
+    code = CODE_K3_STD
+    _, bm = _noisy_bm(code, rng, 2, 83, 0.02)
+    ref_bits, _ = viterbi_decode(code, bm)
+    bits, _ = viterbi_decode_windowed(code, bm, depth=bm.shape[1], chunk=32)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(ref_bits))
+
+
+# --------------------------------------------------------------------------- #
+# (b) BER parity at D = 5K on a noisy channel                                  #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("code_name", sorted(CODES))
+def test_windowed_ber_parity_at_truncation_depth(code_name, rng):
+    code = CODES[code_name]
+    info, bm = _noisy_bm(code, rng, 8, 512, 0.02)
+    ref_bits, _ = viterbi_decode(code, bm)
+    bits, _ = viterbi_decode_windowed(
+        code, bm, depth=default_depth(code), chunk=64, backend="scan"
+    )
+    n = info.shape[1]
+    ber_ref = float((np.asarray(ref_bits)[:, :n] != np.asarray(info)).mean())
+    ber_win = float((np.asarray(bits)[:, :n] != np.asarray(info)).mean())
+    assert abs(ber_win - ber_ref) <= 1e-3
+
+
+# --------------------------------------------------------------------------- #
+# (c) session chunk-boundary invariance                                        #
+# --------------------------------------------------------------------------- #
+
+
+def test_session_chunk_boundary_invariance(rng):
+    """One 4096-step stream decoded in 64-step chunks == one-shot decode."""
+    code = CODE_K3_STD
+    T = 4096
+    info, bm = _noisy_bm(code, rng, 1, T - (code.constraint - 1), 0.01)
+    ref_bits, ref_metric = viterbi_decode(code, bm)
+
+    sess = StreamSession(code, batch=1, chunk=64, depth=40, backend="scan")
+    parts = []
+    for i in range(T // 64):
+        parts.append(np.asarray(sess.push(bm[:, i * 64 : (i + 1) * 64])))
+    rest, metric = sess.finish(terminated=True)
+    parts.append(np.asarray(rest))
+    bits = np.concatenate(parts, axis=1)
+    assert bits.shape == ref_bits.shape
+    np.testing.assert_array_equal(bits, np.asarray(ref_bits))
+    np.testing.assert_allclose(np.asarray(metric), np.asarray(ref_metric), rtol=1e-5)
+
+
+def test_session_emission_bookkeeping(rng):
+    """Commit lag: nothing before depth steps, chunk bits at steady state,
+    the final `lag` bits on finish."""
+    code = CODE_K3_STD
+    sess = StreamSession(code, batch=2, chunk=16, depth=24, backend="scan")
+    _, bm = _noisy_bm(code, rng, 2, 62, 0.0)
+    counts = []
+    for i in range(4):
+        counts.append(sess.push(bm[:, i * 16 : (i + 1) * 16]).shape[1])
+    assert counts == [0, 8, 16, 16]  # t=16,32,48,64 vs depth 24
+    assert sess.lag == 24
+    rest, _ = sess.finish(terminated=True)
+    assert rest.shape[1] == 24
+    with pytest.raises(RuntimeError):
+        sess.push(bm[:, :16])
+
+
+def test_session_normalization_keeps_metrics_bounded(rng):
+    """A long stream with per-chunk renorm: path metrics stay O(chunk) while
+    the reconstructed absolute metric still matches the block decoder."""
+    code = CODE_K3_STD
+    _, bm = _noisy_bm(code, rng, 1, 1022, 0.05)
+    ref_bits, ref_metric = viterbi_decode(code, bm)
+    sess = StreamSession(code, batch=1, chunk=64, depth=1024, backend="scan")
+    bits, metric = sess.decode_all(bm)
+    assert float(sess.state.pm.min()) == 0.0  # renormalized every chunk
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(ref_bits))
+    np.testing.assert_allclose(np.asarray(metric), np.asarray(ref_metric), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# (d) scheduler: continuous batching + slot reuse                              #
+# --------------------------------------------------------------------------- #
+
+
+def test_scheduler_slot_reuse_across_completions(rng):
+    """More streams than slots, staggered lengths: every stream decodes
+    exactly, and slots turn over (claims > n_slots)."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=4, chunk=16, depth=30, backend="scan")
+    refs = {}
+    for i in range(10):
+        k = jax.random.fold_in(rng, i)
+        T = (96, 130, 64, 200)[i % 4]
+        _, bm = _noisy_bm(code, k, 1, T, 0.01)
+        rb, rm = viterbi_decode(code, bm)
+        refs[f"s{i}"] = (np.asarray(rb[0]), float(rm[0]))
+        sched.submit(f"s{i}", bm[0])
+    out = sched.run()
+    assert sched.stats.streams_finished == 10
+    assert sched.stats.slot_claims == 10 > sched.n_slots  # slots were recycled
+    assert sched.utilization() == 0.0
+    for sid, (rb, rm) in refs.items():
+        bits, metric = out[sid]
+        np.testing.assert_array_equal(bits, rb)
+        assert abs(metric - rm) < 1e-3 * max(1.0, abs(rm))
+
+
+def test_scheduler_single_jitted_call_per_tick(rng):
+    """The hot loop traces once: many ticks with many live streams reuse one
+    compiled stream_step."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=8, chunk=16, depth=15, backend="scan")
+    traces = {"n": 0}
+    orig = sched._step_fn
+
+    def counting(state, bm):
+        traces["n"] += 1
+        return orig(state, bm)
+
+    sched._step_fn = counting
+    for i in range(8):
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, 94, 0.0)
+        sched.submit(f"s{i}", bm[0])
+    sched.run()
+    assert traces["n"] == sched.stats.ticks  # one batched dispatch per tick
+
+
+def test_scheduler_short_stream_admitted_mid_run(rng):
+    """A stream shorter than one chunk that queues behind a full slot must
+    retire cleanly when admitted mid-run (regression: it used to crash the
+    packing loop)."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=1, chunk=32, depth=15, backend="scan")
+    _, bm_long = _noisy_bm(code, rng, 1, 126, 0.0)
+    _, bm_short = _noisy_bm(code, jax.random.fold_in(rng, 1), 1, 10, 0.0)
+    ref_short, _ = viterbi_decode(code, bm_short)
+    sched.submit("long", bm_long[0])
+    sched.submit("short", bm_short[0])  # queues: T=12 < chunk
+    out = sched.run()
+    assert set(out) == {"long", "short"}
+    np.testing.assert_array_equal(out["short"][0], np.asarray(ref_short[0]))
+
+
+def test_scheduler_slot_state_reset_after_idle_ticks(rng):
+    """A slot that sat free (and was advanced with zero branch metrics for
+    several ticks) must be re-initialized when a later stream claims it
+    (regression: drifted path metrics erased the start-in-state-0
+    constraint)."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=2, chunk=16, depth=30, backend="scan")
+    _, bm_a = _noisy_bm(code, rng, 1, 158, 0.01)
+    sched.submit("a", bm_a[0])
+    for _ in range(4):  # slot 1 idles through real ticks
+        sched.step()
+    # noisy enough that an un-reset (drifted, all-zero) initial pm would
+    # decode different bits and understate the metric
+    _, bm_b = _noisy_bm(code, jax.random.fold_in(rng, 7), 1, 94, 0.12)
+    ref_b, ref_mb = viterbi_decode(code, bm_b)
+    sched.submit("b", bm_b[0])
+    out = sched.run()
+    bits_b, metric_b = out["b"]
+    np.testing.assert_array_equal(bits_b, np.asarray(ref_b[0]))
+    assert abs(metric_b - float(ref_mb[0])) < 1e-3
+
+
+def test_scheduler_evict(rng):
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=2, chunk=16, depth=15, backend="scan")
+    for i in range(3):
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, 158, 0.0)
+        sched.submit(f"s{i}", bm[0])
+    sched.step()
+    assert sched.evict("s2") is None  # still pending
+    partial = sched.evict("s0")  # active: returns committed prefix
+    assert partial is not None
+    out = sched.run()
+    assert set(out) == {"s1"}
+    with pytest.raises(KeyError):
+        sched.evict("nope")
+
+
+# --------------------------------------------------------------------------- #
+# serving head integration                                                     #
+# --------------------------------------------------------------------------- #
+
+
+def test_viterbi_head_streaming_mode(rng):
+    head = ViterbiHead(mode="streaming", chunk=32)
+    bits = jax.random.bernoulli(rng, 0.5, (4, 94)).astype(jnp.int32)
+    dec, ber, exact = head.roundtrip(jax.random.fold_in(rng, 1), bits, flip_prob=0.01)
+    assert dec.shape == bits.shape
+    assert float(ber) < 0.05
