@@ -13,7 +13,6 @@ import jax.numpy as jnp
 from benchmarks import paper_model as pm
 from repro.core import CODE_K3_STD, bsc, encode, hard_branch_metrics, viterbi_decode
 from repro.core.acs import acs_step_unfused
-from repro.kernels.ops import viterbi_decode_fused
 
 BITS = (12, 24, 36, 48, 60)
 

@@ -26,35 +26,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CODE_K3_STD, bsc, encode, hard_branch_metrics
+from repro.configs.paper_viterbi import DECODE_SPEC, STREAM
 from repro.core.viterbi import viterbi_decode
-from repro.kernels.ops import viterbi_decode_fused
-from repro.stream import StreamScheduler, default_depth, viterbi_decode_windowed
+from repro.decode import DecodeContext, get_decoder
+from repro.stream import StreamScheduler, viterbi_decode_windowed
 
 RESULTS = Path(__file__).resolve().parent / "results"
 
 
-def make_workload(code, key, n_streams, info_bits, flip):
+def make_workload(spec, key, n_streams, info_bits, flip):
     info = jax.random.bernoulli(key, 0.5, (n_streams, info_bits)).astype(jnp.int32)
-    coded = encode(code, info, terminate=True)
-    rx = bsc(jax.random.fold_in(key, 1), coded, flip)
-    return info, hard_branch_metrics(code, rx)
+    coded = spec.encode(info)
+    rx = spec.channel(jax.random.fold_in(key, 1), coded, flip_prob=flip)
+    return info, spec.branch_metrics(rx)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--sessions", type=int, default=64)
+    ap.add_argument("--sessions", type=int, default=STREAM.n_slots)
     ap.add_argument("--steps", type=int, default=512, help="trellis steps per stream")
-    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=STREAM.chunk)
     ap.add_argument("--flip", type=float, default=0.02)
     ap.add_argument("--backend", default="fused", choices=("fused", "scan"))
     args = ap.parse_args()
 
-    code = CODE_K3_STD
-    depth = default_depth(code)
+    spec = DECODE_SPEC
+    code = spec.code
+    depth = STREAM.depth(code)
     key = jax.random.PRNGKey(0)
-    info_bits = args.steps - (code.constraint - 1)
-    info, bm = make_workload(code, key, args.sessions, info_bits, args.flip)
+    info_bits = args.steps - spec.n_flush
+    info, bm = make_workload(spec, key, args.sessions, info_bits, args.flip)
     ref_bits, _ = viterbi_decode(code, bm)
 
     # ---------------- correctness gates ---------------- #
@@ -75,7 +76,7 @@ def main():
     # ---------------- streaming scheduler ---------------- #
     def run_sched():
         sched = StreamScheduler(
-            code, n_slots=args.sessions, chunk=args.chunk, depth=depth,
+            spec, n_slots=args.sessions, chunk=args.chunk, depth=depth,
             backend=args.backend,
         )
         for i in range(args.sessions):
@@ -100,7 +101,9 @@ def main():
           f"bit mismatches vs block decode: {mismatches}/{total_bits}")
 
     # ---------------- block baseline ---------------- #
-    dec = jax.jit(lambda t: viterbi_decode_fused(code, t))
+    fused = get_decoder("fused")
+    ctx = DecodeContext(chunk=args.chunk)
+    dec = jax.jit(lambda t: fused(spec, t, ctx=ctx).bits)
     jax.block_until_ready(dec(bm))  # warm
     t0 = time.perf_counter()
     jax.block_until_ready(dec(bm))

@@ -12,6 +12,7 @@ Roofline of the fused ACS step (K=3, batch B lane-resident):
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 from typing import Dict, List
@@ -19,18 +20,17 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-from repro.configs.paper_viterbi import ARCH, CODES
-from repro.core import bsc, encode, hard_branch_metrics, viterbi_decode, viterbi_decode_parallel
-from repro.kernels.ops import viterbi_decode_fused
+from repro.configs.paper_viterbi import ARCH, CODES, DECODE_SPEC
+from repro.decode import DecodeContext, get_decoder, plan_decode
 from repro.roofline.analysis import HW
 
 
-def _mk_inputs(code, info_bits, batch, seed=0):
+def _mk_inputs(spec, info_bits, batch, seed=0):
     key = jax.random.PRNGKey(seed)
     bits = jax.random.bernoulli(key, 0.5, (batch, info_bits)).astype(jnp.int32)
-    coded = encode(code, bits, terminate=True)
-    rx = bsc(jax.random.fold_in(key, 1), coded, 0.02)
-    return bits, hard_branch_metrics(code, rx)
+    coded = spec.encode(bits)
+    rx = spec.channel(jax.random.fold_in(key, 1), coded, flip_prob=0.02)
+    return bits, spec.branch_metrics(rx)
 
 
 def _timeit(fn, *args, iters=3) -> float:
@@ -53,27 +53,34 @@ def tpu_bound_bits_per_s(code, batch) -> float:
 
 def run(quick: bool = True) -> Dict:
     rows: List[Dict] = []
+    spec = DECODE_SPEC
+    code = spec.code
+    ctx = DecodeContext(chunk=64)
     shapes = [s for s in ARCH.shapes if s.batch >= 128] if quick else ARCH.shapes
     for shape in shapes:
         if quick and shape.batch * shape.n_info_bits > 3e6:
             continue  # CPU-container friendly
-        code = ARCH.code
-        bits, bm = _mk_inputs(code, shape.n_info_bits, shape.batch)
-        t_seq = _timeit(jax.jit(lambda b: viterbi_decode(code, b)[1]), bm)
-        t_par = _timeit(
-            jax.jit(lambda b: viterbi_decode_parallel(code, b, chunk=64)[1]), bm)
-        total_bits = shape.batch * shape.n_info_bits
-        rows.append({
+        bits, bm = _mk_inputs(spec, shape.n_info_bits, shape.batch)
+        row = {
             "shape": shape.name, "batch": shape.batch, "bits": shape.n_info_bits,
-            "sequential_Mbit_per_s": total_bits / t_seq / 1e6,
-            "parallel_scan_Mbit_per_s": total_bits / t_par / 1e6,
-            "tpu_v5e_roofline_Gbit_per_s": tpu_bound_bits_per_s(code, shape.batch) / 1e9,
-        })
-    # BER sanity at the GSM code
-    code = CODES["k5_gsm"]
-    bits, bm = _mk_inputs(code, 185, 256)
-    dec, _ = viterbi_decode_fused(code, bm)
-    ber = float((dec[:, :185] != bits).mean())
+        }
+        total_bits = shape.batch * shape.n_info_bits
+        # time the registry backends head-to-head on identical tables
+        for backend in ("sequential", "parallel"):
+            fn = get_decoder(backend)
+            t = _timeit(
+                jax.jit(lambda b, fn=fn: fn(spec, b, ctx=ctx).path_metric), bm)
+            row[f"{backend}_Mbit_per_s"] = total_bits / t / 1e6
+        row["tpu_v5e_roofline_Gbit_per_s"] = (
+            tpu_bound_bits_per_s(code, shape.batch) / 1e9)
+        row["planned_backend"] = plan_decode(
+            spec, bm.shape, ctx=ctx).backend
+        rows.append(row)
+    # BER sanity at the GSM code, through the fused registry backend
+    gsm_spec = dataclasses.replace(spec, code=CODES["k5_gsm"])
+    bits, bm = _mk_inputs(gsm_spec, 185, 256)
+    res = get_decoder("fused")(gsm_spec, bm, ctx=ctx)
+    ber = float((res.info_bits != bits).mean())
     return {"throughput": rows, "gsm_k5_ber_at_2pct_flips": ber,
             "paper_context_bits_per_day_target": 1e15}
 

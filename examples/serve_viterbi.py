@@ -1,17 +1,25 @@
 """The paper's serving scenario, end to end: an LM generates tokens, the
 bitstream is convolutionally encoded, corrupted by a noisy channel, and
-recovered by the fused Viterbi head — the '10^15 bits/day digital TV'
+recovered through the unified decode API — the '10^15 bits/day digital TV'
 pipeline with a modern source.
+
+The codec and packing constants come from configs/paper_viterbi.py (the same
+spec the benchmarks use); the backend is chosen by repro.decode.plan_decode.
 
   PYTHONPATH=src python examples/serve_viterbi.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_smoke_arch
+from repro.configs.paper_viterbi import (
+    DECODE_SPEC,
+    DECODE_SPEC_SOFT,
+    SERVE_BITS_PER_TOKEN,
+)
+from repro.decode import DecodeRequest, decode
 from repro.models.model_zoo import build
 from repro.serve.engine import ServeEngine
-from repro.serve.viterbi_head import ViterbiHead, bits_to_tokens, tokens_to_bits
+from repro.serve.viterbi_head import bits_to_tokens, tokens_to_bits
 
 
 def main():
@@ -23,21 +31,31 @@ def main():
     toks = engine.generate(prompts, max_new_tokens=32, seed=7)["tokens"]
     print(f"LM emitted {toks.shape[0]}x{toks.shape[1]} tokens")
 
-    # --- transport: conv-encode, noisy channel, Viterbi decode ------------- #
-    bits = tokens_to_bits(toks, bits_per_token=9)  # vocab 512 -> 9 bits
-    head = ViterbiHead(mode="fused")
-    for flip in (0.0, 0.01, 0.03):
-        dec, ber, exact = head.roundtrip(jax.random.PRNGKey(2), bits,
-                                         flip_prob=flip)
-        status = "EXACT" if exact else f"BER={float(ber):.4f}"
+    # --- transport: conv-encode, noisy channel, planned decode ------------- #
+    bits = tokens_to_bits(toks, bits_per_token=SERVE_BITS_PER_TOKEN)
+    spec = DECODE_SPEC
+    coded = spec.encode(bits)
+    for i, flip in enumerate((0.0, 0.01, 0.03)):
+        rx = spec.channel(jax.random.fold_in(jax.random.PRNGKey(2), i),
+                          coded, flip_prob=flip)
+        res = decode(DecodeRequest(spec, received=rx))
+        if i == 0:
+            print(res.plan.explain())
+        exact = bool((res.info_bits == bits).all())
+        ber = float((res.info_bits != bits).mean())
+        status = "EXACT" if exact else f"BER={ber:.4f}"
         print(f"channel flip={flip:5.2f}: decode {status}")
         if exact:
-            rec = bits_to_tokens(dec, 9)
+            rec = bits_to_tokens(res.info_bits, SERVE_BITS_PER_TOKEN)
             assert (rec == toks).all()
+
     # soft-decision variant over an AWGN channel
-    soft_head = ViterbiHead(mode="fused", soft=True)
-    dec, ber, exact = soft_head.roundtrip(jax.random.PRNGKey(3), bits, snr_db=3.0)
-    print(f"AWGN 3dB soft decode: {'EXACT' if exact else f'BER={float(ber):.4f}'}")
+    spec_soft = DECODE_SPEC_SOFT
+    rx = spec_soft.channel(jax.random.PRNGKey(3), spec_soft.encode(bits), snr_db=3.0)
+    res = decode(DecodeRequest(spec_soft, received=rx))
+    ber = float((res.info_bits != bits).mean())
+    exact = bool((res.info_bits == bits).all())
+    print(f"AWGN 3dB soft decode: {'EXACT' if exact else f'BER={ber:.4f}'}")
 
 
 if __name__ == "__main__":

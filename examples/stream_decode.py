@@ -4,36 +4,42 @@ truncated-traceback sliding window emits bits a fixed lag behind the channel,
 in O(window) memory, and a continuous-batching scheduler multiplexes many
 independent stations through one jitted Pallas call.
 
+The codec and stream shapes (chunk, depth rule) come from
+configs/paper_viterbi.py — the same spec the serve example and the
+benchmarks use.
+
   PYTHONPATH=src python examples/stream_decode.py
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CODE_K3_STD, bsc, encode, hard_branch_metrics
+from repro.configs.paper_viterbi import DECODE_SPEC, STREAM
 from repro.core.viterbi import viterbi_decode
-from repro.stream import StreamScheduler, StreamSession, default_depth
+from repro.stream import StreamScheduler, StreamSession
 
 
 def main():
-    code = CODE_K3_STD
+    spec = DECODE_SPEC
+    code = spec.code
+    chunk = STREAM.chunk
     key = jax.random.PRNGKey(0)
 
     # --- one unbounded stream, chunk by chunk ----------------------------- #
-    print("== single session: bits arrive in 64-step chunks ==")
+    print(f"== single session: bits arrive in {chunk}-step chunks ==")
     T = 1024
-    info = jax.random.bernoulli(key, 0.5, (1, T - code.constraint + 1)).astype(jnp.int32)
-    rx = bsc(jax.random.fold_in(key, 1), encode(code, info), 0.02)
-    bm = hard_branch_metrics(code, rx)
+    info = jax.random.bernoulli(key, 0.5, (1, T - spec.n_flush)).astype(jnp.int32)
+    rx = spec.channel(jax.random.fold_in(key, 1), spec.encode(info), flip_prob=0.02)
+    bm = spec.branch_metrics(rx)
 
-    sess = StreamSession(code, chunk=64, depth=default_depth(code))
+    sess = StreamSession(spec, chunk=chunk, depth=STREAM.depth(code))
     decoded = []
-    for i in range(T // 64):
-        out = sess.push(bm[:, i * 64 : (i + 1) * 64])
+    for i in range(T // chunk):
+        out = sess.push(bm[:, i * chunk : (i + 1) * chunk])
         decoded.append(np.asarray(out))
         if i in (0, 1, 4):
             print(f"  chunk {i}: emitted {out.shape[1]} bits (lag {sess.lag})")
-    rest, metric = sess.finish(terminated=True)
+    rest, metric = sess.finish()  # terminated per the spec
     decoded.append(np.asarray(rest))
     bits = np.concatenate(decoded, axis=1)
     ber = float((bits[:, : info.shape[1]] != np.asarray(info)).mean())
@@ -41,14 +47,14 @@ def main():
 
     # --- many stations through one scheduler ------------------------------ #
     print("== continuous batching: 12 stations, 4 decode slots ==")
-    sched = StreamScheduler(code, n_slots=4, chunk=64, backend="fused")
+    sched = StreamScheduler(spec, n_slots=4, chunk=chunk, backend="fused")
     truth = {}
     for i in range(12):
         k = jax.random.fold_in(key, 100 + i)
         n = int(jax.random.randint(jax.random.fold_in(k, 0), (), 200, 500))
         ib = jax.random.bernoulli(k, 0.5, (1, n)).astype(jnp.int32)
-        sbm = hard_branch_metrics(
-            code, bsc(jax.random.fold_in(k, 1), encode(code, ib), 0.01)
+        sbm = spec.branch_metrics(
+            spec.channel(jax.random.fold_in(k, 1), spec.encode(ib), flip_prob=0.01)
         )
         truth[f"station-{i}"] = (ib, sbm)
         sched.submit(f"station-{i}", sbm[0])

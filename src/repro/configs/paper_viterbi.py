@@ -6,6 +6,7 @@ import dataclasses
 from typing import Tuple
 
 from repro.core.trellis import CODE_K3_PAPER, CODE_K3_STD, CODE_K5_GSM, CODE_K7_NASA, ConvCode
+from repro.decode.spec import CodecSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,3 +44,36 @@ CODES = {
     "k5_gsm": CODE_K5_GSM,
     "k7_nasa": CODE_K7_NASA,
 }
+
+# ---------------------------------------------------------------------------- #
+# The ONE decode configuration examples and benchmarks share: codec specs for  #
+# the paper workload and the streaming-subsystem shape defaults.  Example and  #
+# benchmark scripts must source these instead of re-stating literals.          #
+# ---------------------------------------------------------------------------- #
+
+#: Hard-decision rate-1/2 K=3 spec — the paper's baseline workload.
+DECODE_SPEC = CodecSpec(code=CODE_K3_STD, metric="hard")
+#: Soft-decision variant of the same code (BPSK + AWGN channels).
+DECODE_SPEC_SOFT = CodecSpec(code=CODE_K3_STD, metric="soft")
+
+#: LM-source demos pack tokens from a 512-word vocab into 9-bit symbols.
+SERVE_BITS_PER_TOKEN = 9
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamDefaults:
+    """Shared shape defaults for the streaming subsystem (sessions,
+    scheduler, stream benchmarks): chunk per tick and the continuous-batching
+    decode-block size."""
+
+    chunk: int = 64
+    n_slots: int = 64
+
+    def depth(self, code: ConvCode) -> int:
+        """The subsystem's single depth rule (stream.window.default_depth)."""
+        from repro.stream.window import default_depth
+
+        return default_depth(code)
+
+
+STREAM = StreamDefaults()

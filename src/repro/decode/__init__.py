@@ -1,0 +1,57 @@
+"""Unified decode API — the single public decode surface.
+
+  CodecSpec        what is decoded: code + metric kind + puncturing +
+                   termination (spec.py)
+  DecoderRegistry  who decodes it: every backend behind one normalized
+                   ``decode(spec, bm_tables, *, ctx)`` signature with a
+                   capability record (registry.py, backends.py)
+  plan_decode      which backend runs: shape-aware auto-selection with
+                   explicit override and ``explain()`` (planner.py)
+  decode           one-shot convenience: plan + execute
+
+Quickstart::
+
+    from repro.decode import CodecSpec, DecodeRequest, decode
+
+    spec = CodecSpec(code=CODE_K3_STD, metric="hard")
+    coded = spec.encode(bits)                      # (B, T, n_out)
+    rx = spec.channel(key, coded, flip_prob=0.02)
+    res = decode(DecodeRequest(spec, received=rx))
+    res.info_bits, res.path_metric, res.plan.explain()
+
+The old ``serve.viterbi_head.ViterbiHead(mode=...)`` string dispatch is a
+deprecated shim over this package.
+"""
+from repro.decode import backends as _backends  # noqa: F401  (registers the backends)
+from repro.decode.planner import LONG_BLOCK_T, DecodePlan, decode, plan_decode
+from repro.decode.registry import (
+    REGISTRY,
+    BackendCapabilities,
+    DecoderBackend,
+    DecoderRegistry,
+    RegisteredDecoder,
+    get_decoder,
+    list_decoders,
+    register_decoder,
+)
+from repro.decode.request import DecodeContext, DecodeRequest, DecodeResult
+from repro.decode.spec import CodecSpec
+
+__all__ = [
+    "BackendCapabilities",
+    "CodecSpec",
+    "DecodeContext",
+    "DecodePlan",
+    "DecodeRequest",
+    "DecodeResult",
+    "DecoderBackend",
+    "DecoderRegistry",
+    "LONG_BLOCK_T",
+    "REGISTRY",
+    "RegisteredDecoder",
+    "decode",
+    "get_decoder",
+    "list_decoders",
+    "plan_decode",
+    "register_decoder",
+]

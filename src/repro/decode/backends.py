@@ -1,0 +1,102 @@
+"""The five decode backends, re-homed onto the DecoderRegistry.
+
+Each backend is a thin adapter from the normalized
+``decode(spec, bm_tables, *, ctx) -> DecodeResult`` signature onto the
+existing implementation it wraps; the implementations themselves stay where
+they live (core/, kernels/, parallel/, stream/).  Importing this module
+(which ``repro.decode`` does) populates the registry.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.viterbi import viterbi_decode, viterbi_decode_parallel
+from repro.decode.registry import BackendCapabilities, register_decoder
+from repro.decode.request import DecodeContext, DecodeResult
+from repro.decode.spec import CodecSpec
+
+#: Largest trellis the VMEM-resident fused scan keeps on-chip comfortably:
+#: path metrics + the (S, S) select matmuls stay within one VMEM working set
+#: up to K=13 (4096 states); beyond that the planner falls back to the
+#: lax.scan decoders, which spill to HBM gracefully.
+FUSED_MAX_STATES = 4096
+
+
+def _result(spec: CodecSpec, bits: jnp.ndarray, metric: jnp.ndarray, **diag) -> DecodeResult:
+    return DecodeResult(bits=bits, path_metric=metric, spec=spec, diagnostics=diag)
+
+
+@register_decoder(
+    "fused",
+    capabilities=BackendCapabilities(max_states=FUSED_MAX_STATES),
+)
+def decode_fused(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+    """Pallas Texpand scan with VMEM-resident path metrics (the paper's
+    custom instruction) — the default block decoder."""
+    from repro.kernels.ops import viterbi_decode_fused
+
+    bits, metric = viterbi_decode_fused(
+        spec.code, bm_tables, terminated=spec.terminated, interpret=ctx.interpret
+    )
+    return _result(spec, bits, metric, backend="fused")
+
+
+@register_decoder("sequential", capabilities=BackendCapabilities())
+def decode_sequential(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+    """lax.scan reference decoder — the oracle every other backend is tested
+    against."""
+    bits, metric = viterbi_decode(spec.code, bm_tables, terminated=spec.terminated)
+    return _result(spec, bits, metric, backend="sequential")
+
+
+@register_decoder("parallel", capabilities=BackendCapabilities())
+def decode_parallel(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+    """(min,+) associative scan over chunk transfer matrices — log-depth in
+    the number of chunks, the single-device long-block decoder."""
+    bits, metric = viterbi_decode_parallel(
+        spec.code, bm_tables, chunk=ctx.chunk, terminated=spec.terminated
+    )
+    return _result(spec, bits, metric, backend="parallel", chunk=ctx.chunk)
+
+
+@register_decoder(
+    "seqparallel",
+    capabilities=BackendCapabilities(supports_mesh=True, requires_mesh=True),
+)
+def decode_seqparallel(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+    """shard_map sequence-parallel decoder: the time axis is split across the
+    mesh, chunk transfer matrices are all-gathered (n·S² floats, independent
+    of T)."""
+    from repro.parallel.collectives import viterbi_decode_seqparallel
+
+    if ctx.mesh is None:
+        raise ValueError("seqparallel backend needs ctx.mesh")
+    bits, metric = viterbi_decode_seqparallel(
+        spec.code, bm_tables, ctx.mesh, axis=ctx.mesh_axis, terminated=spec.terminated
+    )
+    return _result(
+        spec, bits, metric, backend="seqparallel",
+        mesh_axis=ctx.mesh_axis, mesh_size=int(ctx.mesh.shape[ctx.mesh_axis]),
+    )
+
+
+@register_decoder(
+    "streaming",
+    capabilities=BackendCapabilities(supports_streaming=True),
+)
+def decode_streaming(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+    """Truncated-traceback sliding window over the chunked Pallas scan —
+    O(depth + chunk) memory, the online path behind sessions and the
+    continuous-batching scheduler (stream/)."""
+    from repro.stream.window import default_depth, viterbi_decode_windowed
+
+    depth = ctx.stream_depth if ctx.stream_depth is not None else default_depth(spec.code)
+    bits, metric = viterbi_decode_windowed(
+        spec.code,
+        bm_tables,
+        depth=depth,
+        chunk=ctx.chunk,
+        terminated=spec.terminated,
+        interpret=ctx.interpret,
+    )
+    return _result(spec, bits, metric, backend="streaming", depth=depth, chunk=ctx.chunk)

@@ -1,0 +1,191 @@
+"""Shape-aware decode planner.
+
+``plan_decode(spec, shape)`` picks a backend from the problem shape
+(B, T, S), the device kind, and mesh presence — the auto-selection the old
+``ViterbiHead(mode=...)`` string forced onto every caller.  The choice is a
+pure function of its inputs (deterministic), can always be overridden with
+``backend=...``, and every plan carries an ``explain()`` string for
+debuggability.
+
+Selection policy (each branch has a planner unit test):
+
+  * explicit ``backend=`` override wins (validated against capabilities);
+  * a streaming context (``ctx.streaming``) -> ``streaming``;
+  * long blocks (T >= LONG_BLOCK_T) -> ``seqparallel`` when a mesh is
+    present and T divides across it, else ``parallel``;
+  * everything else (short batched blocks) -> ``fused``, falling back to
+    ``parallel`` for trellises too large for the VMEM-resident scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.core.trellis import ConvCode
+from repro.decode import backends as _backends  # noqa: F401  (populates the registry)
+from repro.decode.registry import RegisteredDecoder, get_decoder
+from repro.decode.request import DecodeContext, DecodeRequest, DecodeResult
+from repro.decode.spec import CodecSpec
+
+#: Above this many trellis steps the log-depth chunk decoders beat the
+#: sequential-scan forward pass (the scan's T-deep dependency chain stops
+#: fitting latency budgets long before memory runs out).
+LONG_BLOCK_T = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """A resolved decode: spec + shape + backend choice + why."""
+
+    spec: CodecSpec
+    backend: str
+    batch: int
+    steps: int
+    ctx: DecodeContext
+    reason: str
+    device_kind: str
+
+    @property
+    def decoder(self) -> RegisteredDecoder:
+        return get_decoder(self.backend)
+
+    def explain(self) -> str:
+        caps = self.decoder.capabilities
+        return (
+            f"plan: backend={self.backend!r} for shape (B={self.batch}, T={self.steps}, "
+            f"S={self.spec.code.n_states}) on {self.device_kind}\n"
+            f"  spec: {self.spec.describe()}\n"
+            f"  why:  {self.reason}\n"
+            f"  caps: mesh={caps.supports_mesh} streaming={caps.supports_streaming} "
+            f"max_states={caps.max_states} needs_terminated={caps.needs_terminated}"
+        )
+
+    def execute(self, bm_tables) -> DecodeResult:
+        """Run the planned backend on (B, T, M) branch-metric tables."""
+        result = self.decoder(self.spec, bm_tables, ctx=self.ctx)
+        result.plan = self
+        return result
+
+
+def _normalize_shape(shape: Sequence[int]) -> Tuple[int, int]:
+    """Accept (B, T) or a full (B, T, M) bm-table shape."""
+    if len(shape) == 2:
+        return int(shape[0]), int(shape[1])
+    if len(shape) == 3:
+        return int(shape[0]), int(shape[1])
+    raise ValueError(f"shape must be (B, T) or (B, T, M), got {tuple(shape)}")
+
+
+def _validate(decoder: RegisteredDecoder, spec: CodecSpec, ctx: DecodeContext) -> None:
+    caps = decoder.capabilities
+    S = spec.code.n_states
+    if caps.requires_mesh and ctx.mesh is None:
+        raise ValueError(f"backend {decoder.name!r} requires a mesh (pass mesh=/ctx.mesh)")
+    if caps.max_states is not None and S > caps.max_states:
+        raise ValueError(
+            f"backend {decoder.name!r} handles at most {caps.max_states} states, "
+            f"spec has {S}"
+        )
+    if caps.needs_terminated and not spec.terminated:
+        raise ValueError(f"backend {decoder.name!r} only decodes terminated trellises")
+
+
+def plan_decode(
+    spec: Union[CodecSpec, ConvCode],
+    shape: Sequence[int],
+    *,
+    mesh: Optional[object] = None,
+    backend: Optional[str] = None,
+    ctx: Optional[DecodeContext] = None,
+) -> DecodePlan:
+    """Pick (or validate) a decode backend for a (B, T[, M]) problem.
+
+    Args:
+      spec: the CodecSpec (a bare ConvCode is promoted with defaults).
+      shape: (B, T) or the full (B, T, M) branch-metric table shape.
+      mesh: convenience override for ``ctx.mesh``.
+      backend: explicit registry name — skips auto-selection (still
+        capability-validated).
+      ctx: execution context (chunking, stream depth, streaming flag, ...).
+
+    Returns:
+      DecodePlan; ``plan.execute(bm_tables)`` runs it, ``plan.explain()``
+      says why.
+    """
+    spec = CodecSpec.of(spec)
+    B, T = _normalize_shape(shape)
+    ctx = ctx or DecodeContext()
+    if mesh is not None:
+        ctx = dataclasses.replace(ctx, mesh=mesh)
+    device_kind = jax.devices()[0].platform
+    S = spec.code.n_states
+
+    if backend is not None:
+        choice, reason = backend, f"explicit backend={backend!r} override"
+    elif ctx.streaming:
+        choice = "streaming"
+        reason = "session context given -> windowed online decode (O(depth+chunk) memory)"
+    elif T >= LONG_BLOCK_T:
+        n = int(ctx.mesh.shape.get(ctx.mesh_axis, 0)) if ctx.mesh is not None else 0
+        if n and T % n == 0:
+            choice = "seqparallel"
+            reason = (
+                f"long block (T={T} >= {LONG_BLOCK_T}) with a mesh "
+                f"({ctx.mesh_axis}={n}, T divisible) -> shard the time axis"
+            )
+        else:
+            choice = "parallel"
+            if ctx.mesh is None:
+                why_not = "no mesh"
+            elif not n:
+                why_not = f"mesh lacks axis {ctx.mesh_axis!r}"
+            else:
+                why_not = f"T % {ctx.mesh_axis}={n} != 0"
+            reason = (
+                f"long block (T={T} >= {LONG_BLOCK_T}), {why_not} -> "
+                "single-device (min,+) associative scan"
+            )
+    else:
+        fused_max = get_decoder("fused").capabilities.max_states
+        if fused_max is not None and S > fused_max:
+            choice = "parallel"
+            reason = (
+                f"short block but S={S} exceeds the fused VMEM budget "
+                f"({fused_max}) -> chunked scan"
+            )
+        else:
+            choice = "fused"
+            reason = (
+                f"short batched block (T={T} < {LONG_BLOCK_T}) -> "
+                "VMEM-resident Pallas scan"
+            )
+
+    decoder = get_decoder(choice)
+    _validate(decoder, spec, ctx)
+    return DecodePlan(
+        spec=spec, backend=choice, batch=B, steps=T, ctx=ctx,
+        reason=reason, device_kind=device_kind,
+    )
+
+
+def decode(
+    request: Union[DecodeRequest, CodecSpec],
+    received=None,
+    *,
+    mesh: Optional[object] = None,
+    backend: Optional[str] = None,
+    ctx: Optional[DecodeContext] = None,
+) -> DecodeResult:
+    """One-shot decode: plan + execute.
+
+    Either ``decode(DecodeRequest(spec, received=rx))`` or the shorthand
+    ``decode(spec, rx)``.  Returns a DecodeResult whose ``info_bits`` has
+    flush bits stripped per the spec.
+    """
+    if not isinstance(request, DecodeRequest):
+        request = DecodeRequest(spec=CodecSpec.of(request), received=received)
+    bm = request.metrics()
+    plan = plan_decode(request.spec, bm.shape, mesh=mesh, backend=backend, ctx=ctx)
+    return plan.execute(bm)

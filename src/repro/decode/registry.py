@@ -1,0 +1,124 @@
+"""DecoderBackend protocol + DecoderRegistry.
+
+Every decoder in the repo implements ONE normalized signature
+
+    decode(spec: CodecSpec, bm_tables: (B, T, M), *, ctx: DecodeContext)
+        -> DecodeResult
+
+and registers itself with a capability record:
+
+    @register_decoder("fused", capabilities=BackendCapabilities(...))
+    def _fused(spec, bm_tables, *, ctx): ...
+
+The registry replaces the old string ``if/elif`` dispatch chain in
+serve/viterbi_head.py: adding a backend (a ROADMAP item like sharded
+streaming or adaptive depth) is a registry entry, not a chain edit.  The
+planner (planner.py) reads the capability records to auto-select.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterator, Optional, Protocol, Tuple
+
+from repro.decode.request import DecodeContext, DecodeResult
+from repro.decode.spec import CodecSpec
+
+
+class DecoderBackend(Protocol):
+    """The one normalized decode signature every backend implements."""
+
+    def __call__(self, spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a backend can run — the planner's selection input.
+
+    Attributes:
+      supports_mesh: can shard the decode across a device mesh (and, if
+        ``requires_mesh``, must be given one).
+      requires_mesh: refuses to run without ``ctx.mesh``.
+      supports_streaming: windowed/online decode — bounded memory for
+        unbounded streams, bits emitted a fixed lag behind the channel.
+      max_states: largest trellis (n_states) the backend handles, or None
+        for unlimited.
+      needs_terminated: only decodes terminated trellises.
+    """
+
+    supports_mesh: bool = False
+    requires_mesh: bool = False
+    supports_streaming: bool = False
+    max_states: Optional[int] = None
+    needs_terminated: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisteredDecoder:
+    name: str
+    fn: DecoderBackend
+    capabilities: BackendCapabilities
+    summary: str = ""
+
+    def __call__(self, spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+        return self.fn(spec, bm_tables, ctx=ctx)
+
+
+class DecoderRegistry:
+    """Name -> RegisteredDecoder mapping with decorator-style registration."""
+
+    def __init__(self):
+        self._decoders: Dict[str, RegisteredDecoder] = {}
+
+    def register(
+        self,
+        name: str,
+        *,
+        capabilities: Optional[BackendCapabilities] = None,
+        summary: str = "",
+    ) -> Callable[[DecoderBackend], DecoderBackend]:
+        def deco(fn: DecoderBackend) -> DecoderBackend:
+            if name in self._decoders:
+                raise KeyError(f"decoder {name!r} already registered")
+            doc = summary
+            if not doc and fn.__doc__:
+                doc = fn.__doc__.strip().splitlines()[0]
+            self._decoders[name] = RegisteredDecoder(
+                name=name,
+                fn=fn,
+                capabilities=capabilities or BackendCapabilities(),
+                summary=doc,
+            )
+            return fn
+
+        return deco
+
+    def get(self, name: str) -> RegisteredDecoder:
+        try:
+            return self._decoders[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown decoder {name!r}; registered: {', '.join(self.names())}"
+            ) from None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._decoders))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._decoders
+
+    def __iter__(self) -> Iterator[RegisteredDecoder]:
+        return iter(self._decoders.values())
+
+    def items(self):
+        return self._decoders.items()
+
+
+#: The process-wide registry the five built-in backends are re-homed onto.
+REGISTRY = DecoderRegistry()
+register_decoder = REGISTRY.register
+get_decoder = REGISTRY.get
+
+
+def list_decoders() -> Tuple[str, ...]:
+    return REGISTRY.names()

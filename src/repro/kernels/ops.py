@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.trellis import NEG_UNREACHABLE, ConvCode
-from repro.core.viterbi import _initial_pm, _traceback
+from repro.core.viterbi import _traceback
 from repro.kernels import minplus as _minplus
 from repro.kernels import texpand as _texpand
 from repro.kernels import viterbi_scan as _vscan

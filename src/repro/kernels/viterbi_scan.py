@@ -30,7 +30,6 @@ def _viterbi_scan_kernel(
     @pl.when(t == 0)
     def _init():
         # paths start in state 0 (paper §IV-B): pm = [0, +inf, ...]
-        S = pm_scratch.shape[0]
         row = jax.lax.broadcasted_iota(jnp.int32, pm_scratch.shape, 0)
         pm_scratch[...] = jnp.where(row == 0, 0.0, NEG_UNREACHABLE)
 

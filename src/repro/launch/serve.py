@@ -1,7 +1,8 @@
-"""Serving launcher: batched generation + the Viterbi decode head.
+"""Serving launcher: batched generation + the Viterbi decode path.
 
   python -m repro.launch.serve --arch qwen2_5_3b --smoke --tokens 32
-  python -m repro.launch.serve --viterbi --bits 256 --batch 64 --mode fused
+  python -m repro.launch.serve --viterbi --bits 256 --batch 64 --backend fused
+  python -m repro.launch.serve --viterbi --backend auto   # planner picks
 """
 from __future__ import annotations
 
@@ -18,11 +19,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
-    # Viterbi head
+    # Viterbi decode path
     ap.add_argument("--viterbi", action="store_true")
     ap.add_argument("--bits", type=int, default=256)
-    ap.add_argument("--mode", default="fused",
-                    choices=("fused", "sequential", "parallel"))
+    ap.add_argument("--backend", "--mode", dest="backend", default="auto",
+                    help="registry backend name, or 'auto' for the planner")
     ap.add_argument("--flip-prob", type=float, default=0.02)
     args = ap.parse_args()
 
@@ -30,18 +31,24 @@ def main():
     import jax.numpy as jnp
 
     if args.viterbi:
-        from repro.serve.viterbi_head import ViterbiHead
+        from repro.configs.paper_viterbi import DECODE_SPEC
+        from repro.decode import DecodeRequest, decode
 
-        head = ViterbiHead(mode=args.mode)
+        spec = DECODE_SPEC
+        backend = None if args.backend == "auto" else args.backend
         key = jax.random.PRNGKey(0)
         bits = jax.random.bernoulli(key, 0.5, (args.batch, args.bits)).astype(jnp.int32)
+        coded = spec.encode(bits)
+        rx = spec.channel(jax.random.PRNGKey(1), coded, flip_prob=args.flip_prob)
         t0 = time.perf_counter()
-        dec, ber, exact = head.roundtrip(jax.random.PRNGKey(1), bits,
-                                         flip_prob=args.flip_prob)
+        res = decode(DecodeRequest(spec, received=rx), backend=backend)
+        jax.block_until_ready(res.bits)
         dt = time.perf_counter() - t0
+        ber = float((res.info_bits != bits).mean())
+        print(res.plan.explain())
         print(json.dumps({
-            "mode": args.mode, "batch": args.batch, "bits": args.bits,
-            "ber": float(ber), "exact": exact,
+            "backend": res.plan.backend, "batch": args.batch, "bits": args.bits,
+            "ber": ber, "exact": bool((res.info_bits == bits).all()),
             "throughput_bits_per_s": args.batch * args.bits / dt,
         }, indent=1))
         return

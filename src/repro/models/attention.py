@@ -321,7 +321,6 @@ def self_attention_decode(
     """Single-token decode: update cache at ``positions``, attend over it."""
     cd = jnp.dtype(cfg.compute_dtype)
     hd = cfg.resolved_head_dim
-    B = x.shape[0]
     q = cm.dense(params["wq"], x, "...d,dhk->...hk", cd)  # (B,1,H,hd)
     k_new = cm.dense(params["wk"], x, "...d,dhk->...hk", cd)
     v_new = cm.dense(params["wv"], x, "...d,dhk->...hk", cd)

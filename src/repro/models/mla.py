@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
-from repro.models.attention import NEG_INF, _softcap, chunked_attention
+from repro.models.attention import NEG_INF, chunked_attention
 
 
 def mla_specs(cfg, stack: int):
@@ -92,7 +92,6 @@ def mla_attention_decode(
     cd = jnp.dtype(cfg.compute_dtype)
     m = cfg.mla
     B = x.shape[0]
-    H = cfg.n_heads
     dn, dr, dv, r = m.nope_head_dim, m.rope_head_dim, m.v_head_dim, m.kv_lora_rank
     q_nope, q_rope = _q_proj(params, cfg, x, cd)  # (B,1,H,dn/(dr))
     c_new = cm.dense(params["kv_down"], x, "...d,dr->...r", cd)

@@ -7,7 +7,7 @@ checkpointing and the launchers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -157,7 +157,6 @@ class Model:
         every leaf is batch (except nothing else needs sharding)."""
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        r = self._rules(rules)
         batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
 
         def shard_leaf(leaf):

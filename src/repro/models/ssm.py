@@ -17,7 +17,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import common as cm
 
@@ -63,7 +62,6 @@ def _ssm_scan_chunked(xc, dt, Bm, Cm, A, h0, chunk: int):
     Returns y (B, S, D) float32 and the final state.
     """
     B, S, D = xc.shape
-    N = A.shape[1]
     chunk = min(chunk, S)
     while S % chunk:  # largest divisor <= requested chunk
         chunk -= 1
@@ -145,7 +143,6 @@ def ssm_decode(
     """Single-token recurrence.  x: (B, 1, d)."""
     cd = jnp.dtype(cfg.compute_dtype)
     s = cfg.ssm
-    B = x.shape[0]
     d_in = s.expand * cfg.d_model
     N = s.d_state
     dtr = _dt_rank(cfg)
@@ -153,7 +150,6 @@ def ssm_decode(
     xz = cm.dense(params["in_proj"], x, "...d,df->...f", cd)[:, 0]
     xi, z = xz[..., :d_in], xz[..., d_in:]
     w = params["conv_w"].astype(cd)  # (K, d_in)
-    K = w.shape[0]
     window = jnp.concatenate([cache["conv"].astype(cd), xi[:, None]], axis=1)  # (B,K,d_in)
     conv = jnp.einsum("bkf,kf->bf", window, w) + params["conv_b"].astype(cd)
     xc = jax.nn.silu(conv)

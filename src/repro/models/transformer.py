@@ -13,8 +13,7 @@ decode step scans over (params, caches) jointly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -25,10 +24,7 @@ from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.attention import (
-    _masked_decode,
     attention_specs,
-    chunked_attention,
-    flash_decode_sharded,
     self_attention,
     self_attention_decode,
 )

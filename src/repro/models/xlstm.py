@@ -12,7 +12,6 @@ the honest TPU mapping (documented in DESIGN.md).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -166,7 +165,6 @@ def mlstm_decode(params, cfg, x, *, cache):
     up = cm.dense(params["up_proj"], x, "...d,df->...f", cd)[:, 0]
     xm, z = up[..., :d_in], up[..., d_in:]
     w = params["conv_w"].astype(cd)
-    K = w.shape[0]
     window = jnp.concatenate([cache["conv"].astype(cd), xm[:, None]], axis=1)
     conv = jax.nn.silu(jnp.einsum("bkf,kf->bf", window, w) + params["conv_b"].astype(cd))
     q = cm.dense(params["wq"], conv, "...f,fg->...g", cd).reshape(B, H, dh) * (dh ** -0.5)

@@ -18,8 +18,7 @@ parallel to other independent instructions" future-work note.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.acs import acs_step
 from repro.core.trellis import NEG_UNREACHABLE, ConvCode
 from repro.core.viterbi import _traceback, minplus_matmul
+from repro.decode.spec import CodecSpec
 
 
 def _local_transfer_and_bps(code: ConvCode, bm_local: jnp.ndarray):
@@ -49,14 +49,20 @@ def _local_transfer_and_bps(code: ConvCode, bm_local: jnp.ndarray):
 
 
 def viterbi_decode_seqparallel(
-    code: ConvCode,
+    code: Union[ConvCode, CodecSpec],
     bm_tables: jnp.ndarray,
     mesh,
     axis: str = "model",
-    terminated: bool = True,
+    terminated: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sequence-parallel Viterbi.  bm_tables: (B, T, M) with T divisible by
-    the mesh axis size.  Matches the sequential decoder's metric exactly."""
+    the mesh axis size.  Matches the sequential decoder's metric exactly.
+    ``code`` may be a bare ConvCode or a CodecSpec (whose ``terminated`` flag
+    is the default when the ``terminated`` argument is omitted)."""
+    spec = CodecSpec.of(code)
+    code = spec.code
+    if terminated is None:
+        terminated = spec.terminated
     n = mesh.shape[axis]
     B, T, M = bm_tables.shape
     S = code.n_states

@@ -20,9 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

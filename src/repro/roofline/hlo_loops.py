@@ -21,7 +21,7 @@ Byte convention per op kind (ring-algorithm lower bounds, n = group size):
 from __future__ import annotations
 
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%([^\s(]+)\s*\(")
 _WHILE_RE = re.compile(

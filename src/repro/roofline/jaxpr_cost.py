@@ -23,7 +23,6 @@ from typing import Dict
 
 import jax
 import numpy as np
-from jax import core as jcore
 
 # layout-only ops: no flops, no HBM traffic of their own after fusion
 _LAYOUT_PRIMS = {

@@ -9,7 +9,7 @@ flash-decode) — the same shardings the dry-run proves out.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

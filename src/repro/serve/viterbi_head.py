@@ -1,104 +1,121 @@
-"""Viterbi serving head — the paper's technique as a first-class serving
-feature.
+"""DEPRECATED Viterbi serving head — a thin shim over ``repro.decode``.
 
-Decodes convolutionally-encoded bit streams (the paper's "10^15 bits/day of
-digital TV" use case) behind one object:
+The string ``mode`` dispatch this module used to own is gone: every decoder
+backend now lives behind ``repro.decode``'s DecoderRegistry with one
+normalized ``decode(spec, bm_tables, *, ctx)`` signature, and
+``repro.decode.plan_decode`` auto-selects a backend from the problem shape.
+``ViterbiHead(mode=...)`` maps the mode string to a registry lookup
+(``repro.decode.get_decoder(mode)``) and warns once per process.
 
-  encode-side:  bits -> conv encode -> (optional channel sim)
-  decode-side:  received bits/LLRs -> branch metrics -> fused Viterbi
-                (Pallas Texpand kernels) -> info bits
+Migrate::
 
-Decoder selection:
-  'fused'        kernels.viterbi_decode_fused (VMEM-resident Pallas scan)
-  'sequential'   core.viterbi_decode (jnp lax.scan reference)
-  'parallel'     core.viterbi_decode_parallel ((min,+) associative scan)
-  'seqparallel'  parallel.collectives.viterbi_decode_seqparallel
-                 (shard_map across the 'model' mesh axis — for long streams)
-  'streaming'    stream.viterbi_decode_windowed (truncated-traceback sliding
-                 window over the chunked Pallas scan — O(depth) memory, the
-                 online path; see stream/ for sessions and the continuous-
-                 batching scheduler behind long-lived connections)
+    # old
+    head = ViterbiHead(code=code, mode="fused", soft=True)
+    bits, metric = head.decode(rx)
 
-An LM can be piped straight into the head: generate token bits, encode,
-push through a noisy channel, decode, and verify — see
-examples/serve_viterbi.py.
+    # new
+    from repro.decode import CodecSpec, DecodeRequest, decode
+    spec = CodecSpec(code=code, metric="soft")
+    res = decode(DecodeRequest(spec, received=rx))   # planner picks a backend
+    res.info_bits, res.path_metric
+
+The token<->bit helpers (``tokens_to_bits`` / ``bits_to_tokens``) are not
+deprecated and stay here.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.channel import (
-    awgn,
-    bpsk_modulate,
-    bsc,
-    hard_branch_metrics,
-    soft_branch_metrics,
-)
-from repro.core.encoder import encode
 from repro.core.trellis import CODE_K3_STD, ConvCode
-from repro.core.viterbi import viterbi_decode, viterbi_decode_parallel
-from repro.kernels.ops import viterbi_decode_fused
+from repro.decode import CodecSpec, DecodeContext, plan_decode
+
+_DEPRECATION_WARNED = False
+
+
+def _warn_once() -> None:
+    global _DEPRECATION_WARNED
+    if not _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED = True
+        warnings.warn(
+            "ViterbiHead is deprecated: use repro.decode (CodecSpec + "
+            "plan_decode/decode); mode strings map to registry backends.",
+            DeprecationWarning,
+            stacklevel=3,
+        )
 
 
 @dataclasses.dataclass
 class ViterbiHead:
+    """Deprecated shim: ``mode`` is a DecoderRegistry name, everything else
+    is folded into a CodecSpec/DecodeContext pair (see ``spec``/``ctx``)."""
+
     code: ConvCode = CODE_K3_STD
-    mode: str = "fused"  # fused | sequential | parallel | seqparallel | streaming
+    mode: Optional[str] = None  # registry backend name; None -> planner auto-select
     soft: bool = False
     mesh: Optional[object] = None
     chunk: int = 64
     stream_depth: Optional[int] = None  # traceback depth for 'streaming' (default 5K)
+    terminated: bool = True
+
+    def __post_init__(self):
+        _warn_once()
+
+    @property
+    def spec(self) -> CodecSpec:
+        return CodecSpec(
+            code=self.code,
+            metric="soft" if self.soft else "hard",
+            terminated=self.terminated,
+        )
+
+    @property
+    def ctx(self) -> DecodeContext:
+        return DecodeContext(
+            mesh=self.mesh,
+            chunk=self.chunk,
+            stream_depth=self.stream_depth,
+            streaming=self.mode == "streaming",
+        )
 
     # ------------------------- encode side ------------------------- #
 
     def encode_bits(self, bits: jnp.ndarray) -> jnp.ndarray:
-        """(B, T) info bits -> (B, T+K-1, n_out) coded bits (terminated)."""
-        return encode(self.code, bits, terminate=True)
+        """(B, T) info bits -> (B, T + n_flush, n_out) coded bits."""
+        return self.spec.encode(bits)
 
     def channel(self, key, coded_bits, *, flip_prob=0.0, snr_db=None):
         """Hard (BSC) or soft (BPSK+AWGN) channel simulation."""
         if snr_db is not None:
+            from repro.core.channel import awgn, bpsk_modulate
+
             return awgn(key, bpsk_modulate(coded_bits), snr_db)
+        from repro.core.channel import bsc
+
         return bsc(key, coded_bits, flip_prob)
 
     # ------------------------- decode side ------------------------- #
 
     def branch_metrics(self, received) -> jnp.ndarray:
-        if self.soft:
-            return soft_branch_metrics(self.code, received)
-        return hard_branch_metrics(self.code, received)
+        return self.spec.branch_metrics(received)
 
     def decode(self, received) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """received: (B, T, n_out) hard bits or soft values.
-        Returns (info_bits (B, T-(K-1)), path_metric (B,))."""
+        Returns (info_bits, path_metric (B,)); flush bits are stripped only
+        for terminated specs."""
         bm = self.branch_metrics(received)
-        bits, metric = self.decode_from_metrics(bm)
-        K = self.code.constraint
-        return bits[:, : bits.shape[1] - (K - 1)], metric  # drop flush bits
+        result = self._plan(bm.shape).execute(bm)
+        return result.info_bits, result.path_metric
 
     def decode_from_metrics(self, bm_tables) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        if self.mode == "fused":
-            return viterbi_decode_fused(self.code, bm_tables)
-        if self.mode == "sequential":
-            return viterbi_decode(self.code, bm_tables)
-        if self.mode == "parallel":
-            return viterbi_decode_parallel(self.code, bm_tables, chunk=self.chunk)
-        if self.mode == "seqparallel":
-            from repro.parallel.collectives import viterbi_decode_seqparallel
+        result = self._plan(bm_tables.shape).execute(bm_tables)
+        return result.bits, result.path_metric
 
-            assert self.mesh is not None, "seqparallel needs a mesh"
-            return viterbi_decode_seqparallel(self.code, bm_tables, self.mesh)
-        if self.mode == "streaming":
-            from repro.stream.window import viterbi_decode_windowed
-
-            return viterbi_decode_windowed(
-                self.code, bm_tables, depth=self.stream_depth, chunk=self.chunk
-            )
-        raise KeyError(self.mode)
+    def _plan(self, shape):
+        return plan_decode(self.spec, shape, backend=self.mode, ctx=self.ctx)
 
     # --------------------- end-to-end convenience --------------------- #
 

@@ -17,13 +17,14 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.trellis import ConvCode
 from repro.core.viterbi import _initial_pm
+from repro.decode.spec import CodecSpec
 from repro.serve.kv_cache import SlotAllocator
 from repro.stream import window as _w
 
@@ -60,7 +61,8 @@ class StreamScheduler:
     """Continuous batching of independent Viterbi streams.
 
     Args:
-      code: convolutional code shared by all streams.
+      spec: CodecSpec shared by all streams (a bare ConvCode is promoted);
+        its ``terminated`` flag is the per-stream default for ``submit``.
       n_slots: decode-block batch size (compile-once; streams beyond this
         queue FIFO until a slot frees).
       chunk: trellis steps per tick per slot.
@@ -76,7 +78,7 @@ class StreamScheduler:
 
     def __init__(
         self,
-        code: ConvCode,
+        spec: Union[CodecSpec, ConvCode],
         n_slots: int = 64,
         chunk: int = 64,
         depth: Optional[int] = None,
@@ -84,6 +86,8 @@ class StreamScheduler:
         normalize: bool = True,
         interpret: Optional[bool] = None,
     ):
+        self.spec = CodecSpec.of(spec)
+        code = self.spec.code
         self.code = code
         self.n_slots = n_slots
         self.chunk = chunk
@@ -103,10 +107,13 @@ class StreamScheduler:
 
     # ------------------------------ intake ------------------------------ #
 
-    def submit(self, stream_id: str, bm_tables, terminated: bool = True) -> None:
+    def submit(self, stream_id: str, bm_tables, terminated: Optional[bool] = None) -> None:
         """Queue a stream.  bm_tables: (T, M) branch metrics (the serving
         layer produces these from received bits/LLRs chunk by chunk; here the
-        whole table is handed over and the scheduler feeds it out in chunks)."""
+        whole table is handed over and the scheduler feeds it out in chunks).
+        ``terminated`` defaults to the scheduler spec's flag."""
+        if terminated is None:
+            terminated = self.spec.terminated
         bm = np.asarray(bm_tables, dtype=np.float32)
         if bm.ndim != 2:
             raise ValueError(f"bm_tables must be (T, M), got {bm.shape}")
@@ -144,16 +151,16 @@ class StreamScheduler:
         then advance every live slot ``chunk`` steps through ONE jitted call.
         Returns the bits each stream newly committed this tick."""
         # 1. retire streams that cannot fill a full chunk (tail + flush run
-        #    per-slot with a lax.scan — off the batched hot path), re-admit,
-        #    and repeat: an admitted pending stream may itself be shorter
-        #    than a chunk and must retire before the packing loop sees it.
+        #    batched over all slots retiring this tick — off the hot path),
+        #    re-admit, and repeat: an admitted pending stream may itself be
+        #    shorter than a chunk and must retire before the packing loop
+        #    sees it.
         self._admit()
         while True:
             drained = [s for s, st in self.active.items() if st.remaining < self.chunk]
             if not drained:
                 break
-            for slot in drained:
-                self._finish_slot(slot)
+            self._finish_slots(drained)
             self._admit()
         if not self.active:
             return {}
@@ -229,27 +236,80 @@ class StreamScheduler:
         )
         self.offset = self.offset.at[slot].set(0.0)
 
-    def _finish_slot(self, slot: int) -> None:
-        """Tail-feed + final traceback for one drained stream, then recycle
-        its slot.  Runs on (1, ...) slices, off the batched hot path."""
-        st = self.active.pop(slot)
-        pm = self.state.pm[slot : slot + 1]
-        ring = self.state.ring[:, slot : slot + 1]
-        if st.remaining > 0:
-            tail = jnp.asarray(st.bm[st.pos :][None])  # (1, r, M)
-            r = tail.shape[1]
-            pm, bps = _w.jitted_chunk_forward(self.code)(pm, tail)
-            ring = jnp.concatenate([ring[r:], bps], axis=0)
-            st.pos += r
-        bits, metric = _w.jitted_stream_flush(self.code, terminated=st.terminated)(
-            _w.StreamState(pm=pm, ring=ring)
-        )
-        n_rest = st.pos - st.committed
-        if n_rest:
-            R = bits.shape[1]
-            st.out.append(np.asarray(bits[0, R - n_rest :]))
-        st.committed = st.pos
-        full = self._collect(st)
-        self.results[st.stream_id] = (full, float(metric[0] + self.offset[slot]))
-        self.stats.streams_finished += 1
-        self.alloc.release(slot)  # state is re-initialized at next claim
+    def _finish_slots(self, slots: Sequence[int]) -> None:
+        """Tail-feed + final traceback for every drained stream retiring this
+        tick, then recycle the slots.  Tails are fed grouped by length (one
+        jitted_chunk_forward per distinct tail length) and the final
+        traceback over all retirees runs as ONE batched jitted_stream_flush
+        per termination kind — not one dispatch per slot.  Every batched call
+        is padded to ``n_slots`` rows so cohort size never creates a new
+        compiled shape (padded rows decode garbage that is sliced away)."""
+        streams = [(slot, self.active.pop(slot)) for slot in slots]
+        M = self.code.n_symbols
+
+        def pad_rows(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+            extra = self.n_slots - x.shape[axis]
+            if extra <= 0:
+                return x
+            widths = [(0, 0)] * x.ndim
+            widths[axis] = (0, extra)
+            return jnp.pad(x, widths)
+
+        # tail-feed, grouped by tail length r (each group one batched call)
+        by_r: Dict[int, List[Tuple[int, _Stream]]] = {}
+        for slot, st in streams:
+            by_r.setdefault(st.remaining, []).append((slot, st))
+        ordered: List[Tuple[int, _Stream]] = []
+        pm_parts: List[jnp.ndarray] = []
+        ring_parts: List[jnp.ndarray] = []
+        for r, group in sorted(by_r.items()):
+            n = len(group)
+            idx = jnp.asarray([slot for slot, _ in group])
+            pm_g = self.state.pm[idx]  # (n, S)
+            ring_g = self.state.ring[:, idx]  # (R, n, S)
+            if r > 0:
+                tails = np.zeros((self.n_slots, r, M), dtype=np.float32)
+                for k, (_, st) in enumerate(group):
+                    tails[k] = st.bm[st.pos :]
+                pm_p, bps = _w.jitted_chunk_forward(self.code)(
+                    pad_rows(pm_g, 0), jnp.asarray(tails)
+                )
+                pm_g = pm_p[:n]
+                ring_g = jnp.concatenate([ring_g[r:], bps[:, :n]], axis=0)
+                for _, st in group:
+                    st.pos += r
+            ordered.extend(group)
+            pm_parts.append(pm_g)
+            ring_parts.append(ring_g)
+        pm_all = jnp.concatenate(pm_parts, axis=0)  # (n_total, S)
+        ring_all = jnp.concatenate(ring_parts, axis=1)  # (R, n_total, S)
+
+        # one flush per termination kind (a single call in the common case
+        # of uniformly-terminated streams)
+        flushed: Dict[int, Tuple[np.ndarray, float]] = {}
+        for term in (True, False):
+            rows = [i for i, (_, st) in enumerate(ordered) if st.terminated == term]
+            if not rows:
+                continue
+            sel = jnp.asarray(rows)
+            bits, metric = _w.jitted_stream_flush(self.code, terminated=term)(
+                _w.StreamState(
+                    pm=pad_rows(pm_all[sel], 0), ring=pad_rows(ring_all[:, sel], 1)
+                )
+            )
+            bits_np, metric_np = np.asarray(bits), np.asarray(metric)
+            for k, i in enumerate(rows):
+                flushed[i] = (bits_np[k], float(metric_np[k]))
+
+        R = self.state.ring.shape[0]
+        for i, (slot, st) in enumerate(ordered):
+            bits_i, metric_i = flushed[i]
+            n_rest = st.pos - st.committed
+            if n_rest:
+                st.out.append(bits_i[R - n_rest :])
+            st.committed = st.pos
+            self.results[st.stream_id] = (
+                self._collect(st), metric_i + float(self.offset[slot])
+            )
+            self.stats.streams_finished += 1
+            self.alloc.release(slot)  # state is re-initialized at next claim

@@ -17,11 +17,12 @@ Typical use:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax.numpy as jnp
 
 from repro.core.trellis import ConvCode
+from repro.decode.spec import CodecSpec
 from repro.stream import window as _w
 
 
@@ -29,7 +30,8 @@ class StreamSession:
     """Online Viterbi decoder for one stream (or a batch sharing timing).
 
     Args:
-      code: the convolutional code.
+      spec: a CodecSpec (or a bare ConvCode, promoted with defaults) — its
+        ``terminated`` flag is the default for ``finish``/``decode_all``.
       batch: number of independent streams advanced in lock-step (one jitted
         call decodes all of them; the scheduler uses this with batch=n_slots).
       chunk: trellis steps consumed per push (fixed — one compiled shape).
@@ -42,7 +44,7 @@ class StreamSession:
 
     def __init__(
         self,
-        code: ConvCode,
+        spec: Union[CodecSpec, ConvCode],
         batch: int = 1,
         chunk: int = 64,
         depth: Optional[int] = None,
@@ -52,6 +54,8 @@ class StreamSession:
     ):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
+        self.spec = CodecSpec.of(spec)
+        code = self.spec.code
         self.code = code
         self.batch = batch
         self.chunk = chunk
@@ -105,19 +109,22 @@ class StreamSession:
     def finish(
         self,
         bm_tail: Optional[jnp.ndarray] = None,
-        terminated: bool = True,
+        terminated: Optional[bool] = None,
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Consume an optional odd-length tail and flush the window.
 
         Args:
           bm_tail: (B, r, M) with 0 < r < chunk, or None.
-          terminated: the stream ends in state 0 (encoder flushed).
+          terminated: the stream ends in state 0 (encoder flushed); defaults
+            to the spec's ``terminated`` flag.
         Returns:
           bits: (B, lag) the remaining uncommitted bits.
           metric: (B,) absolute winning path metric (normalization undone).
         """
         if self.closed:
             raise RuntimeError("session is finished")
+        if terminated is None:
+            terminated = self.spec.terminated
         if bm_tail is not None and bm_tail.shape[1]:
             r = bm_tail.shape[1]
             if r >= self.chunk or bm_tail.shape[0] != self.batch:
@@ -134,7 +141,7 @@ class StreamSession:
         return bits[:, R - n_rest :] if n_rest else bits[:, :0], metric + self.offset
 
     def decode_all(
-        self, bm_tables: jnp.ndarray, terminated: bool = True
+        self, bm_tables: jnp.ndarray, terminated: Optional[bool] = None
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Push a full (B, T, M) block through this session and return the
         complete (B, T) decode + metric.  Convenience for tests/benchmarks."""

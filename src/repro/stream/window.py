@@ -175,8 +175,10 @@ def stream_flush(
 
 @functools.lru_cache(maxsize=None)
 def jitted_stream_flush(code: ConvCode, terminated: bool = True):
-    """Compiled stream_flush, cached per (code, terminated) — the scheduler
-    flushes drained slots one at a time, so this must not re-trace per slot."""
+    """Compiled stream_flush, cached per (code, terminated).  Callers with a
+    varying number of retiring streams (the scheduler's batched slot flush)
+    pad the batch dimension to a fixed size so this compiles once per shape
+    instead of once per cohort size."""
     return jax.jit(functools.partial(stream_flush, code, terminated=terminated))
 
 
@@ -192,7 +194,7 @@ def viterbi_decode_windowed(
     bm_tables: jnp.ndarray,
     depth: Optional[int] = None,
     chunk: int = 64,
-    terminated: bool = True,
+    terminated: Optional[bool] = None,
     backend: str = "fused",
     normalize: bool = True,
     interpret: Optional[bool] = None,
@@ -202,6 +204,8 @@ def viterbi_decode_windowed(
     Drop-in shape-compatible with core.viterbi.viterbi_decode, but runs the
     O(depth + chunk) streaming path: bit-identical when depth >= T, and
     within truncation noise (vanishing for depth >~ 5K) otherwise.
+    ``code`` may be a bare ConvCode or a full decode.CodecSpec;
+    ``terminated`` defaults to the spec's flag (True for a bare code).
     """
     from repro.stream.session import StreamSession
 

@@ -55,7 +55,6 @@ def elastic_mesh(prefer_shape, axes, devices=None):
     import numpy as np
 
     devices = list(devices if devices is not None else jax.devices())
-    want = int(np.prod(prefer_shape))
     shape = list(prefer_shape)
     while shape[0] > 1 and int(np.prod(shape)) > len(devices):
         shape[0] //= 2

@@ -8,7 +8,7 @@ not special code).  Adafactor keeps factored second moments: O(n+m) state per
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -140,7 +140,6 @@ def adafactor(decay=0.8, eps=1e-30, clip_threshold=1.0, weight_decay=0.0,
                 u = u + weight_decay * p.astype(jnp.float32)
             return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
 
-        is_v = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)  # noqa: E731
         out = jax.tree_util.tree_map(
             upd, grads, state["v"], params, is_leaf=lambda x: isinstance(x, jnp.ndarray))
         istup = lambda x: isinstance(x, tuple)  # noqa: E731

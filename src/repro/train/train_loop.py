@@ -17,7 +17,6 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.parallel.sharding import shard_batch_tree
 from repro.train.optimizer import Optimizer, cosine_warmup, get_optimizer
 
 

@@ -79,7 +79,6 @@ def test_crf_marginals_sum_to_one(rng):
 def test_crf_trains(rng):
     """Gradient descent on the CRF NLL fits a noisy tagging problem."""
     S, B, T = 3, 16, 10
-    true_trans = jnp.array([[2.0, -1, -1], [-1, 2.0, -1], [-1, -1, 2.0]])
     k = jax.random.fold_in(rng, 7)
     tags = jax.random.randint(k, (B, T), 0, S)
     emis_obs = jax.nn.one_hot(tags, S) * 2.0 + \

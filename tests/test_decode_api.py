@@ -1,0 +1,310 @@
+"""Unified decode API: CodecSpec, DecoderRegistry, shape-aware planner,
+backend-equivalence golden grid, and the deprecated ViterbiHead shim.
+
+The golden grid is the acceptance gate for the registry re-home: every
+registered backend must agree bit-exactly with core.viterbi.viterbi_decode
+over (code K3/K7 x punctured/unpunctured x hard/soft x terminated/open).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CODE_K3_STD, CODE_K7_NASA, viterbi_decode
+from repro.core.puncture import PUNCTURE_2_3
+from repro.decode import (
+    LONG_BLOCK_T,
+    CodecSpec,
+    DecodeContext,
+    DecodeRequest,
+    DecoderRegistry,
+    decode,
+    get_decoder,
+    list_decoders,
+    plan_decode,
+)
+from repro.serve import viterbi_head as vh
+from repro.serve.viterbi_head import ViterbiHead
+
+GRID_CODES = {"k3": CODE_K3_STD, "k7": CODE_K7_NASA}
+EXPECTED_BACKENDS = ("fused", "parallel", "seqparallel", "sequential", "streaming")
+
+
+def _quiet_head(**kw) -> ViterbiHead:
+    """Construct the deprecated shim without tripping -W error legs."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return ViterbiHead(**kw)
+
+
+def _grid_tables(spec: CodecSpec, key, batch=2, n_info=30):
+    """bits + branch-metric tables for one golden-grid cell."""
+    bits = jax.random.bernoulli(key, 0.5, (batch, n_info)).astype(jnp.int32)
+    coded = spec.encode(bits)
+    if spec.soft:
+        rx = spec.channel(jax.random.fold_in(key, 1), coded, snr_db=4.0)
+    else:
+        rx = spec.channel(jax.random.fold_in(key, 1), coded, flip_prob=0.03)
+    return bits, spec.branch_metrics(rx)
+
+
+# --------------------------------------------------------------------------- #
+# CodecSpec                                                                    #
+# --------------------------------------------------------------------------- #
+
+
+def test_codec_spec_is_hashable_and_normalizes_patterns():
+    a = CodecSpec(code=CODE_K3_STD, puncture=PUNCTURE_2_3)
+    b = CodecSpec(code=CODE_K3_STD, puncture=((1, 1), (1, 0)))
+    assert a == b and hash(a) == hash(b)
+    assert isinstance(a.puncture, tuple)
+    np.testing.assert_array_equal(a.puncture_array, PUNCTURE_2_3)
+    assert {a: "ok"}[b] == "ok"
+
+
+def test_codec_spec_validation():
+    with pytest.raises(ValueError):
+        CodecSpec(metric="llr2")
+    with pytest.raises(ValueError):
+        CodecSpec(puncture=((1, 1),))  # wrong n_out rows
+    with pytest.raises(TypeError):
+        CodecSpec.of("k3")
+
+
+def test_codec_spec_flush_accounting(rng):
+    spec = CodecSpec(code=CODE_K3_STD, terminated=True)
+    open_spec = dataclasses.replace(spec, terminated=False)
+    bits = jax.random.bernoulli(rng, 0.5, (2, 10)).astype(jnp.int32)
+    assert spec.encode(bits).shape == (2, 12, 2)  # K-1 flush steps
+    assert open_spec.encode(bits).shape == (2, 10, 2)
+    assert spec.n_flush == 2 and open_spec.n_flush == 0
+    assert spec.strip_flush(jnp.zeros((2, 12))).shape == (2, 10)
+    assert open_spec.strip_flush(jnp.zeros((2, 10))).shape == (2, 10)
+
+
+def test_codec_spec_soft_channel_needs_snr(rng):
+    spec = CodecSpec(metric="soft")
+    with pytest.raises(ValueError):
+        spec.channel(rng, jnp.zeros((1, 4, 2)))
+
+
+# --------------------------------------------------------------------------- #
+# registry                                                                     #
+# --------------------------------------------------------------------------- #
+
+
+def test_all_five_backends_registered():
+    assert list_decoders() == tuple(sorted(EXPECTED_BACKENDS))
+    for name in EXPECTED_BACKENDS:
+        dec = get_decoder(name)
+        assert dec.name == name and dec.summary
+
+
+def test_registry_rejects_duplicates_and_unknown():
+    reg = DecoderRegistry()
+
+    @reg.register("x", summary="first")
+    def _x(spec, bm, *, ctx):
+        return None
+
+    with pytest.raises(KeyError):
+
+        @reg.register("x")
+        def _x2(spec, bm, *, ctx):
+            return None
+
+    with pytest.raises(KeyError, match="registered"):
+        reg.get("nope")
+    with pytest.raises(KeyError, match="fused"):
+        get_decoder("no-such-backend")
+
+
+def test_capability_records():
+    assert get_decoder("seqparallel").capabilities.requires_mesh
+    assert get_decoder("streaming").capabilities.supports_streaming
+    assert get_decoder("fused").capabilities.max_states is not None
+
+
+# --------------------------------------------------------------------------- #
+# golden grid: every backend == core.viterbi_decode, bit-exact                 #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("code_name", sorted(GRID_CODES))
+@pytest.mark.parametrize("punctured", [False, True], ids=["unpunct", "punct23"])
+@pytest.mark.parametrize("metric", ["hard", "soft"])
+@pytest.mark.parametrize("terminated", [True, False], ids=["term", "open"])
+def test_backend_equivalence_grid(code_name, punctured, metric, terminated,
+                                  mesh11, rng):
+    code = GRID_CODES[code_name]
+    spec = CodecSpec(
+        code=code,
+        metric=metric,
+        puncture=PUNCTURE_2_3 if punctured else None,
+        terminated=terminated,
+    )
+    # deterministic per-cell fold (hash(spec) would vary with PYTHONHASHSEED)
+    cell = (
+        code.constraint * 8 + punctured * 4 + (metric == "soft") * 2 + terminated
+    )
+    key = jax.random.fold_in(rng, cell)
+    _, bm = _grid_tables(spec, key)
+    T = bm.shape[1]
+    ref_bits, ref_metric = viterbi_decode(code, bm, terminated=terminated)
+
+    for name in list_decoders():
+        ctx = DecodeContext(
+            mesh=mesh11 if name == "seqparallel" else None,
+            chunk=16,
+            stream_depth=T,  # window covers the block -> exactness regime
+        )
+        res = get_decoder(name)(spec, bm, ctx=ctx)
+        np.testing.assert_array_equal(
+            np.asarray(res.bits), np.asarray(ref_bits),
+            err_msg=f"backend {name!r} diverged on {spec.describe()}",
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.path_metric), np.asarray(ref_metric), rtol=1e-5,
+            err_msg=f"backend {name!r} metric diverged on {spec.describe()}",
+        )
+        assert res.spec == spec
+        assert res.diagnostics["backend"] == name
+
+
+# --------------------------------------------------------------------------- #
+# planner                                                                      #
+# --------------------------------------------------------------------------- #
+
+
+def test_planner_picks_fused_for_short_batched_blocks():
+    plan = plan_decode(CodecSpec(), (32, 256))
+    assert plan.backend == "fused"
+    assert "short batched block" in plan.reason
+
+
+def test_planner_picks_parallel_for_long_blocks_without_mesh():
+    plan = plan_decode(CodecSpec(), (4, LONG_BLOCK_T))
+    assert plan.backend == "parallel"
+    assert "no mesh" in plan.reason
+
+
+def test_planner_picks_seqparallel_for_long_blocks_on_mesh(mesh11):
+    plan = plan_decode(CodecSpec(), (4, 2 * LONG_BLOCK_T), mesh=mesh11)
+    assert plan.backend == "seqparallel"
+
+
+def test_planner_falls_back_when_mesh_lacks_axis():
+    """A data-parallel-only mesh (no 'model' axis) must fall back to
+    'parallel', not crash on the axis lookup."""
+    mesh = jax.make_mesh((1,), ("data",))
+    plan = plan_decode(CodecSpec(), (4, 2 * LONG_BLOCK_T), mesh=mesh)
+    assert plan.backend == "parallel"
+    assert "lacks axis" in plan.reason
+
+
+def test_windowed_decode_defaults_terminated_from_spec(rng):
+    """viterbi_decode_windowed given an open CodecSpec must trace back from
+    the best frontier state by default, not silently force state 0."""
+    from repro.stream import viterbi_decode_windowed
+
+    spec = CodecSpec(terminated=False)
+    bits = jax.random.bernoulli(rng, 0.5, (2, 50)).astype(jnp.int32)
+    bm = spec.branch_metrics(spec.encode(bits))  # noiseless open block
+    ref_bits, ref_metric = viterbi_decode(spec.code, bm, terminated=False)
+    got_bits, got_metric = viterbi_decode_windowed(spec, bm, depth=bm.shape[1])
+    np.testing.assert_array_equal(np.asarray(got_bits), np.asarray(ref_bits))
+    np.testing.assert_allclose(np.asarray(got_metric), np.asarray(ref_metric))
+
+
+def test_planner_picks_streaming_for_session_context():
+    plan = plan_decode(CodecSpec(), (1, 10_000_000),
+                       ctx=DecodeContext(streaming=True, stream_depth=15))
+    assert plan.backend == "streaming"
+
+
+def test_planner_override_and_validation(mesh11):
+    plan = plan_decode(CodecSpec(), (4, 2 * LONG_BLOCK_T), backend="sequential")
+    assert plan.backend == "sequential" and "override" in plan.reason
+    with pytest.raises(KeyError):
+        plan_decode(CodecSpec(), (4, 64), backend="no-such-backend")
+    with pytest.raises(ValueError, match="mesh"):
+        plan_decode(CodecSpec(), (4, 64), backend="seqparallel")  # no mesh given
+    plan_decode(CodecSpec(), (4, 64), backend="seqparallel", mesh=mesh11)  # fine
+
+
+def test_planner_is_deterministic_and_explains():
+    a = plan_decode(CodecSpec(), (8, 512), ctx=DecodeContext(chunk=32))
+    b = plan_decode(CodecSpec(), (8, 512), ctx=DecodeContext(chunk=32))
+    assert a == b
+    text = a.explain()
+    assert a.backend in text and "why:" in text and "caps:" in text
+
+
+def test_decode_one_shot_roundtrip(rng):
+    spec = CodecSpec()
+    bits = jax.random.bernoulli(rng, 0.5, (4, 48)).astype(jnp.int32)
+    rx = spec.channel(jax.random.fold_in(rng, 1), spec.encode(bits), flip_prob=0.01)
+    res = decode(DecodeRequest(spec, received=rx))
+    assert res.plan is not None and res.plan.backend == "fused"
+    assert res.info_bits.shape == bits.shape
+    assert float((res.info_bits != bits).mean()) < 0.05
+    # shorthand form: decode(spec, rx)
+    res2 = decode(spec, rx, backend="sequential")
+    np.testing.assert_array_equal(np.asarray(res.bits), np.asarray(res2.bits))
+
+
+# --------------------------------------------------------------------------- #
+# deprecated ViterbiHead shim                                                  #
+# --------------------------------------------------------------------------- #
+
+
+def test_shim_warns_once_then_stays_quiet():
+    vh._DEPRECATION_WARNED = False
+    with pytest.warns(DeprecationWarning, match="ViterbiHead is deprecated"):
+        ViterbiHead()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ViterbiHead()
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+
+def test_shim_mode_maps_to_registry(rng):
+    _, bm = _grid_tables(CodecSpec(), rng)
+    ref_bits, ref_metric = viterbi_decode(CODE_K3_STD, bm)
+    for mode in ("fused", "sequential", "parallel"):
+        head = _quiet_head(mode=mode)
+        bits, metric = head.decode_from_metrics(bm)
+        np.testing.assert_array_equal(np.asarray(bits), np.asarray(ref_bits))
+    with pytest.raises(KeyError):
+        _quiet_head(mode="nope").decode_from_metrics(bm)
+
+
+def test_shim_auto_mode_uses_planner(rng):
+    head = _quiet_head()  # mode=None -> planner auto-select
+    bits = jax.random.bernoulli(rng, 0.5, (4, 40)).astype(jnp.int32)
+    dec, ber, exact = head.roundtrip(jax.random.fold_in(rng, 1), bits,
+                                     flip_prob=0.0)
+    assert exact and dec.shape == bits.shape
+
+
+def test_shim_plumbs_terminated_end_to_end(rng):
+    """ViterbiHead used to hardcode the terminated path; terminated=False now
+    flows spec -> encoder (no flush bits) -> backend -> traceback."""
+    head = _quiet_head(mode="sequential", terminated=False)
+    bits = jax.random.bernoulli(rng, 0.5, (4, 40)).astype(jnp.int32)
+    coded = head.encode_bits(bits)
+    assert coded.shape == (4, 40, 2)  # no flush steps appended
+    bm = head.branch_metrics(coded)
+    dec, metric = head.decode(coded)
+    assert dec.shape == bits.shape  # nothing stripped for open trellises
+    ref_bits, ref_metric = viterbi_decode(CODE_K3_STD, bm, terminated=False)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(ref_bits))
+    np.testing.assert_allclose(np.asarray(metric), np.asarray(ref_metric), rtol=1e-6)
+    # terminated head on the same noiseless block: flush stripped, exact
+    term = _quiet_head(mode="sequential", terminated=True)
+    dec_t, _ = term.decode(term.encode_bits(bits))
+    assert dec_t.shape == bits.shape
+    np.testing.assert_array_equal(np.asarray(dec_t), np.asarray(bits))

@@ -1,10 +1,8 @@
 """MoE dispatch invariants."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import MoEConfig, ModelConfig
 from repro.models.common import init_params

@@ -1,7 +1,6 @@
 """Serving engine + Viterbi head end-to-end."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import get_smoke_arch
@@ -85,7 +84,7 @@ def test_kv_cache_utils():
     assert b > 0
     alloc = SlotAllocator(2)
     s0 = alloc.claim("a")
-    s1 = alloc.claim("b")
+    alloc.claim("b")
     assert alloc.claim("c") is None
     alloc.release(s0)
     assert alloc.claim("c") is not None

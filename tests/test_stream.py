@@ -259,6 +259,55 @@ def test_scheduler_slot_state_reset_after_idle_ticks(rng):
     assert abs(metric_b - float(ref_mb[0])) < 1e-3
 
 
+def test_scheduler_batched_slot_flush(rng, monkeypatch):
+    """All slots retiring in the same tick flush through ONE batched
+    traceback call (grouped tail-feeds), not one dispatch per slot — and the
+    batched path stays bit-exact, including distinct odd tail lengths."""
+    from repro.stream import window as _w
+
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=4, chunk=16, depth=90, backend="scan")
+    flush_factory = _w.jitted_stream_flush
+    calls = {"n": 0}
+
+    def counting_flush(code_, terminated=True):
+        calls["n"] += 1
+        return flush_factory(code_, terminated=terminated)
+
+    monkeypatch.setattr(_w, "jitted_stream_flush", counting_flush)
+    refs = {}
+    for i, T in enumerate((80, 83, 87, 83)):  # same tick out, 3 tail lengths
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, T, 0.02)
+        rb, rm = viterbi_decode(code, bm)
+        refs[f"s{i}"] = (np.asarray(rb[0]), float(rm[0]))
+        sched.submit(f"s{i}", bm[0])
+    out = sched.run()
+    assert sched.stats.streams_finished == 4
+    assert calls["n"] == 1  # one flush for the whole retiring cohort
+    for sid, (rb, rm) in refs.items():
+        bits, metric = out[sid]
+        np.testing.assert_array_equal(bits, rb)
+        assert abs(metric - rm) < 1e-3 * max(1.0, abs(rm))
+
+
+def test_scheduler_accepts_codec_spec(rng):
+    """The scheduler consumes a CodecSpec; submit() inherits its terminated
+    flag (here: open trellis -> traceback from the best frontier state)."""
+    from repro.decode import CodecSpec
+
+    code = CODE_K3_STD
+    spec = CodecSpec(code=code, terminated=False)
+    sched = StreamScheduler(spec, n_slots=2, chunk=16, depth=200, backend="scan")
+    bits = jax.random.bernoulli(rng, 0.5, (1, 90)).astype(jnp.int32)
+    bm = spec.branch_metrics(
+        bsc(jax.random.fold_in(rng, 1), spec.encode(bits), 0.01)
+    )
+    ref, _ = viterbi_decode(code, bm, terminated=False)
+    sched.submit("open-stream", bm[0])  # terminated defaults from the spec
+    out = sched.run()
+    np.testing.assert_array_equal(out["open-stream"][0], np.asarray(ref[0]))
+
+
 def test_scheduler_evict(rng):
     code = CODE_K3_STD
     sched = StreamScheduler(code, n_slots=2, chunk=16, depth=15, backend="scan")
