@@ -1,10 +1,12 @@
 """Streaming vs. block Viterbi throughput.
 
 Drives the continuous-batching StreamScheduler with >= 64 concurrent decode
-sessions multiplexed through ONE jitted chunked Pallas call per tick, and
-reports sustained decoded bits/s against the full-block fused decoder on the
-same workload.  Also re-checks the two correctness gates the streaming path
-promises:
+sessions multiplexed through ONE jitted chunked Pallas call per tick —
+comparing the unpacked ``fused`` hot loop against the ``fused_packed``
+pipeline (bit-packed survivor ring + on-device traceback, device-resident
+input arena) — and reports sustained decoded bits/s against the full-block
+fused decoder on the same workload.  Also re-checks the two correctness
+gates the streaming path promises:
 
   * depth >= T      -> bit-identical to core.viterbi.viterbi_decode
   * depth  = 5K     -> BER within 1e-3 of the full-block decoder
@@ -12,8 +14,10 @@ promises:
   PYTHONPATH=src python benchmarks/stream_throughput.py [--sessions 64]
       [--steps 512] [--chunk 64] [--flip 0.02] [--backend fused]
 
-Numbers from the CPU container are interpret-mode (shape parity only); on a
-real TPU the same code runs the compiled kernels.
+Results land in ``results/stream_throughput.json`` and are merged into the
+machine-readable ``results/BENCH_viterbi.json`` perf baseline (``stream``
+section).  Numbers from the CPU container are interpret-mode (shape parity
+only); on a real TPU the same code runs the compiled kernels.
 """
 from __future__ import annotations
 
@@ -23,7 +27,6 @@ import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_viterbi import DECODE_SPEC, STREAM
@@ -32,13 +35,29 @@ from repro.decode import DecodeContext, get_decoder
 from repro.stream import StreamScheduler, viterbi_decode_windowed
 
 RESULTS = Path(__file__).resolve().parent / "results"
+BENCH_JSON = RESULTS / "BENCH_viterbi.json"
 
 
 def make_workload(spec, key, n_streams, info_bits, flip):
-    info = jax.random.bernoulli(key, 0.5, (n_streams, info_bits)).astype(jnp.int32)
+    info = jax.random.bernoulli(key, 0.5, (n_streams, info_bits)).astype(np.int32)
     coded = spec.encode(info)
     rx = spec.channel(jax.random.fold_in(key, 1), coded, flip_prob=flip)
     return info, spec.branch_metrics(rx)
+
+
+def run_scheduler(spec, bm, n_slots, chunk, depth, backend):
+    """Drain all streams through one scheduler; returns (elapsed_s, stats,
+    results, total_bits)."""
+    sched = StreamScheduler(
+        spec, n_slots=n_slots, chunk=chunk, depth=depth, backend=backend
+    )
+    for i in range(bm.shape[0]):
+        sched.submit(f"s{i}", bm[i])
+    t0 = time.perf_counter()
+    out = sched.run()
+    elapsed = time.perf_counter() - t0
+    total_bits = sum(len(b) for b, _ in out.values())
+    return elapsed, sched.stats, out, total_bits
 
 
 def main():
@@ -47,7 +66,8 @@ def main():
     ap.add_argument("--steps", type=int, default=512, help="trellis steps per stream")
     ap.add_argument("--chunk", type=int, default=STREAM.chunk)
     ap.add_argument("--flip", type=float, default=0.02)
-    ap.add_argument("--backend", default="fused", choices=("fused", "scan"))
+    ap.add_argument("--backend", default="fused",
+                    choices=("fused", "fused_packed", "scan"))
     args = ap.parse_args()
 
     spec = DECODE_SPEC
@@ -62,7 +82,7 @@ def main():
     wide, _ = viterbi_decode_windowed(
         code, bm[:4], depth=args.steps, chunk=args.chunk, backend="scan"
     )
-    exact = bool((wide == ref_bits[:4]).all())
+    exact = bool((np.asarray(wide) == np.asarray(ref_bits[:4])).all())
     trunc, _ = viterbi_decode_windowed(
         code, bm, depth=depth, chunk=args.chunk, backend="scan"
     )
@@ -73,59 +93,69 @@ def main():
           f"(|diff| {abs(ber_win - ber_ref):.2e} <= 1e-3: {abs(ber_win - ber_ref) <= 1e-3})")
     assert exact and abs(ber_win - ber_ref) <= 1e-3
 
-    # ---------------- streaming scheduler ---------------- #
-    def run_sched():
-        sched = StreamScheduler(
-            spec, n_slots=args.sessions, chunk=args.chunk, depth=depth,
-            backend=args.backend,
+    # ---------------- streaming scheduler: requested + packed ---------------- #
+    backends = [args.backend]
+    if "fused_packed" not in backends:
+        backends.append("fused_packed")
+    sched_rows = {}
+    for backend in backends:
+        run_scheduler(spec, bm, args.sessions, args.chunk, depth, backend)  # warm
+        t_stream, stats, out, total_bits = run_scheduler(
+            spec, bm, args.sessions, args.chunk, depth, backend
         )
-        for i in range(args.sessions):
-            sched.submit(f"s{i}", bm[i])
-        out = sched.run()
-        return sched, out
-
-    run_sched()  # warm the jitted stream_step
-    t0 = time.perf_counter()
-    sched, out = run_sched()
-    t_stream = time.perf_counter() - t0
-    total_bits = sum(len(b) for b, _ in out.values())
-    mismatches = sum(
-        int((out[f"s{i}"][0] != np.asarray(ref_bits[i])).sum()) for i in range(args.sessions)
-    )
-    s = sched.stats
-    print(f"\nscheduler: {args.sessions} concurrent sessions x {args.steps} steps, "
-          f"chunk {args.chunk}, depth {depth}, backend {args.backend}")
-    print(f"  {s.ticks} ticks (one jitted call each), {s.slot_claims} slot claims, "
-          f"{total_bits} bits decoded in {t_stream:.3f}s")
-    print(f"  sustained {total_bits / t_stream:,.0f} bits/s; "
-          f"bit mismatches vs block decode: {mismatches}/{total_bits}")
+        mismatches = sum(
+            int((out[f"s{i}"][0] != np.asarray(ref_bits[i])).sum())
+            for i in range(args.sessions)
+        )
+        sched_rows[backend] = {
+            "ticks": stats.ticks,
+            "bits_decoded": total_bits,
+            "stream_s": t_stream,
+            "stream_bits_per_s": total_bits / t_stream,
+            "mismatches_vs_block": mismatches,
+        }
+        print(f"\nscheduler[{backend}]: {args.sessions} sessions x {args.steps} "
+              f"steps, chunk {args.chunk}, depth {depth}")
+        print(f"  {stats.ticks} ticks (one jitted call each), {stats.slot_claims} "
+              f"slot claims, {total_bits} bits in {t_stream:.3f}s "
+              f"-> {total_bits / t_stream:,.0f} bits/s; "
+              f"mismatches vs block: {mismatches}/{total_bits}")
 
     # ---------------- block baseline ---------------- #
-    fused = get_decoder("fused")
+    fused = get_decoder("fused_packed")
     ctx = DecodeContext(chunk=args.chunk)
     dec = jax.jit(lambda t: fused(spec, t, ctx=ctx).bits)
     jax.block_until_ready(dec(bm))  # warm
     t0 = time.perf_counter()
     jax.block_until_ready(dec(bm))
     t_block = time.perf_counter() - t0
-    print(f"\nblock fused decode of the same (B={args.sessions}, T={args.steps}) "
-          f"workload: {t_block:.3f}s -> {total_bits / t_block:,.0f} bits/s")
+    total_bits = sched_rows[args.backend]["bits_decoded"]
+    print(f"\nblock fused_packed decode of the same (B={args.sessions}, "
+          f"T={args.steps}) workload: {t_block:.3f}s -> "
+          f"{total_bits / t_block:,.0f} bits/s")
+    t_stream = sched_rows[args.backend]["stream_s"]
     print(f"streaming/block time ratio: {t_stream / t_block:.2f}x "
           f"(streaming adds the sliding-window traceback per tick but needs "
           f"O(depth+chunk) memory instead of O(T))")
 
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "stream_throughput.json").write_text(json.dumps({
+    payload = {
         "sessions": args.sessions, "steps": args.steps, "chunk": args.chunk,
-        "depth": depth, "backend": args.backend, "ticks": s.ticks,
-        "bits_decoded": total_bits, "stream_s": t_stream, "block_s": t_block,
-        "stream_bits_per_s": total_bits / t_stream,
-        "block_bits_per_s": total_bits / t_block,
+        "depth": depth, "schedulers": sched_rows,
+        "block_s": t_block, "block_bits_per_s": total_bits / t_block,
         "bit_exact_wide_window": exact,
         "ber_block": ber_ref, "ber_windowed": ber_win,
-        "mismatches_at_5k_depth": mismatches,
-    }, indent=1))
+    }
+    (RESULTS / "stream_throughput.json").write_text(json.dumps(payload, indent=1))
     print(f"\nwrote {RESULTS / 'stream_throughput.json'}")
+
+    # merge into the shared perf baseline
+    bench = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else {
+        "schema": "bench_viterbi/v1", "generated_by": "benchmarks/stream_throughput.py",
+    }
+    bench["stream"] = payload
+    BENCH_JSON.write_text(json.dumps(bench, indent=1))
+    print(f"merged stream section into {BENCH_JSON}")
 
 
 if __name__ == "__main__":

@@ -32,10 +32,14 @@ def main():
     rx = spec.channel(jax.random.fold_in(key, 1), spec.encode(info), flip_prob=0.02)
     bm = spec.branch_metrics(rx)
 
-    sess = StreamSession(spec, chunk=chunk, depth=STREAM.depth(code))
+    # fused_packed + inputs="received": raw channel symbols go straight into
+    # the kernel (in-kernel branch metrics, bit-packed survivor ring,
+    # on-device traceback) — no bm tables on the session hot path.
+    sess = StreamSession(spec, chunk=chunk, depth=STREAM.depth(code),
+                         backend="fused_packed", inputs="received")
     decoded = []
     for i in range(T // chunk):
-        out = sess.push(bm[:, i * chunk : (i + 1) * chunk])
+        out = sess.push(rx[:, i * chunk : (i + 1) * chunk])
         decoded.append(np.asarray(out))
         if i in (0, 1, 4):
             print(f"  chunk {i}: emitted {out.shape[1]} bits (lag {sess.lag})")
@@ -47,7 +51,7 @@ def main():
 
     # --- many stations through one scheduler ------------------------------ #
     print("== continuous batching: 12 stations, 4 decode slots ==")
-    sched = StreamScheduler(spec, n_slots=4, chunk=chunk, backend="fused")
+    sched = StreamScheduler(spec, n_slots=4, chunk=chunk, backend="fused_packed")
     truth = {}
     for i in range(12):
         k = jax.random.fold_in(key, 100 + i)

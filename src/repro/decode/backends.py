@@ -1,4 +1,4 @@
-"""The five decode backends, re-homed onto the DecoderRegistry.
+"""The decode backends, re-homed onto the DecoderRegistry.
 
 Each backend is a thin adapter from the normalized
 ``decode(spec, bm_tables, *, ctx) -> DecodeResult`` signature onto the
@@ -39,6 +39,40 @@ def decode_fused(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeRes
         spec.code, bm_tables, terminated=spec.terminated, interpret=ctx.interpret
     )
     return _result(spec, bits, metric, backend="fused")
+
+
+def _fused_packed_from_received(
+    spec: CodecSpec, received, *, ctx: DecodeContext
+) -> DecodeResult:
+    """Raw-symbol entry: branch metrics computed in-kernel — the (B, T, M)
+    bm table never exists, in HBM or on the host."""
+    from repro.kernels.metrics import fused_metric_plan
+    from repro.kernels.ops import viterbi_decode_fused_packed
+
+    plan = fused_metric_plan(spec.code, spec.metric, spec.puncture_array)
+    bits, metric = viterbi_decode_fused_packed(
+        plan, received, terminated=spec.terminated, interpret=ctx.interpret
+    )
+    return _result(spec, bits, metric, backend="fused_packed", metrics="in-kernel")
+
+
+@register_decoder(
+    "fused_packed",
+    capabilities=BackendCapabilities(
+        max_states=FUSED_MAX_STATES, accepts_received=True
+    ),
+    from_received=_fused_packed_from_received,
+)
+def decode_fused_packed(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+    """Memory-lean Pallas pipeline: VMEM-resident scan with bit-packed
+    survivors (32× smaller than ``fused``'s) + on-device packed traceback;
+    given raw symbols it also computes branch metrics in-kernel."""
+    from repro.kernels.ops import viterbi_decode_packed
+
+    bits, metric = viterbi_decode_packed(
+        spec.code, bm_tables, terminated=spec.terminated, interpret=ctx.interpret
+    )
+    return _result(spec, bits, metric, backend="fused_packed", metrics="table")
 
 
 @register_decoder("sequential", capabilities=BackendCapabilities())

@@ -13,8 +13,10 @@ Selection policy (each branch has a planner unit test):
   * a streaming context (``ctx.streaming``) -> ``streaming``;
   * long blocks (T >= LONG_BLOCK_T) -> ``seqparallel`` when a mesh is
     present and T divides across it, else ``parallel``;
-  * everything else (short batched blocks) -> ``fused``, falling back to
-    ``parallel`` for trellises too large for the VMEM-resident scan.
+  * everything else (short batched blocks) -> ``fused_packed`` (bit-packed
+    survivors + on-device traceback; in-kernel branch metrics when the
+    request carries raw symbols), falling back to ``parallel`` for
+    trellises too large for the VMEM-resident scan.
 """
 from __future__ import annotations
 
@@ -67,6 +69,24 @@ class DecodePlan:
         result = self.decoder(self.spec, bm_tables, ctx=self.ctx)
         result.plan = self
         return result
+
+    def execute_request(self, request: "DecodeRequest") -> DecodeResult:
+        """Run the plan on a DecodeRequest, routing raw channel output to
+        the backend's in-kernel-metric entry when it has one — the bm table
+        is only materialized for backends that need it.  Precomputed
+        ``bm_tables`` take precedence over ``received`` (the DecodeRequest
+        contract), so callers with custom tables never get them recomputed."""
+        if (
+            request.bm_tables is None
+            and request.received is not None
+            and self.decoder.from_received is not None
+        ):
+            result = self.decoder.decode_received(
+                self.spec, request.received, ctx=self.ctx
+            )
+            result.plan = self
+            return result
+        return self.execute(request.metrics())
 
 
 def _normalize_shape(shape: Sequence[int]) -> Tuple[int, int]:
@@ -148,7 +168,7 @@ def plan_decode(
                 "single-device (min,+) associative scan"
             )
     else:
-        fused_max = get_decoder("fused").capabilities.max_states
+        fused_max = get_decoder("fused_packed").capabilities.max_states
         if fused_max is not None and S > fused_max:
             choice = "parallel"
             reason = (
@@ -156,10 +176,11 @@ def plan_decode(
                 f"({fused_max}) -> chunked scan"
             )
         else:
-            choice = "fused"
+            choice = "fused_packed"
             reason = (
                 f"short batched block (T={T} < {LONG_BLOCK_T}) -> "
-                "VMEM-resident Pallas scan"
+                "VMEM-resident Pallas scan with packed survivors + "
+                "on-device traceback"
             )
 
     decoder = get_decoder(choice)
@@ -182,10 +203,13 @@ def decode(
 
     Either ``decode(DecodeRequest(spec, received=rx))`` or the shorthand
     ``decode(spec, rx)``.  Returns a DecodeResult whose ``info_bits`` has
-    flush bits stripped per the spec.
+    flush bits stripped per the spec.  When the request carries raw channel
+    output and the planned backend computes metrics in-kernel
+    (``accepts_received``), the symbols go straight to the kernel — no
+    (B, T, M) bm table is built.
     """
     if not isinstance(request, DecodeRequest):
         request = DecodeRequest(spec=CodecSpec.of(request), received=received)
-    bm = request.metrics()
-    plan = plan_decode(request.spec, bm.shape, mesh=mesh, backend=backend, ctx=ctx)
-    return plan.execute(bm)
+    shape = request.shape()
+    plan = plan_decode(request.spec, shape, mesh=mesh, backend=backend, ctx=ctx)
+    return plan.execute_request(request)

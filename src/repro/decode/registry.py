@@ -44,6 +44,10 @@ class BackendCapabilities:
       max_states: largest trellis (n_states) the backend handles, or None
         for unlimited.
       needs_terminated: only decodes terminated trellises.
+      accepts_received: the backend has a raw-symbol entry (``from_received``)
+        that computes branch metrics in-kernel — the planner's ``decode``
+        routes channel output straight to it, skipping the host-side
+        (B, T, M) bm-table materialization entirely.
     """
 
     supports_mesh: bool = False
@@ -51,6 +55,7 @@ class BackendCapabilities:
     supports_streaming: bool = False
     max_states: Optional[int] = None
     needs_terminated: bool = False
+    accepts_received: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,9 +64,17 @@ class RegisteredDecoder:
     fn: DecoderBackend
     capabilities: BackendCapabilities
     summary: str = ""
+    #: optional raw-symbol entry: (spec, received (B, T, n_out), *, ctx) ->
+    #: DecodeResult with branch metrics computed in-kernel.
+    from_received: Optional[Callable] = None
 
     def __call__(self, spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
         return self.fn(spec, bm_tables, ctx=ctx)
+
+    def decode_received(self, spec: CodecSpec, received, *, ctx: DecodeContext) -> DecodeResult:
+        if self.from_received is None:
+            raise ValueError(f"backend {self.name!r} has no raw-symbol entry")
+        return self.from_received(spec, received, ctx=ctx)
 
 
 class DecoderRegistry:
@@ -76,6 +89,7 @@ class DecoderRegistry:
         *,
         capabilities: Optional[BackendCapabilities] = None,
         summary: str = "",
+        from_received: Optional[Callable] = None,
     ) -> Callable[[DecoderBackend], DecoderBackend]:
         def deco(fn: DecoderBackend) -> DecoderBackend:
             if name in self._decoders:
@@ -88,6 +102,7 @@ class DecoderRegistry:
                 fn=fn,
                 capabilities=capabilities or BackendCapabilities(),
                 summary=doc,
+                from_received=from_received,
             )
             return fn
 

@@ -54,6 +54,14 @@ class DecodeRequest:
     received: Optional[jnp.ndarray] = None
     bm_tables: Optional[jnp.ndarray] = None
 
+    def shape(self):
+        """(B, T) problem shape for the planner — derivable from either
+        input form without building branch metrics."""
+        src = self.bm_tables if self.bm_tables is not None else self.received
+        if src is None:
+            raise ValueError("DecodeRequest needs received or bm_tables")
+        return src.shape[:2]
+
     def metrics(self) -> jnp.ndarray:
         """Branch-metric tables for this request (built from ``received``
         through the spec unless precomputed tables were handed in)."""

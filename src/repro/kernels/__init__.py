@@ -1,23 +1,48 @@
 """Pallas TPU kernels for the paper's compute hot-spot (trellis ACS).
 
 texpand.py      — the paper's custom instruction: one fused ACS step
-viterbi_scan.py — full-T decode with VMEM-resident path metrics
+viterbi_scan.py — full-T / chunked scan with VMEM-resident path metrics, one
+                  parameterized body: table or in-kernel branch metrics,
+                  unpacked or bit-packed survivors
+survivors.py    — survivor memory unit: 32-per-uint32 pack/unpack helpers +
+                  the Pallas traceback kernel over packed words
+metrics.py      — affine in-kernel branch-metric plans (hard/soft/punctured)
 minplus.py      — (min,+) matmul for block-parallel / HMM Viterbi
 ops.py          — jit'd public wrappers (layout, padding, interpret switch)
 ref.py          — pure-jnp oracles
+common.py       — shared interpret auto-detection + padding helpers
 """
+from repro.kernels.metrics import FusedMetricPlan, fused_metric_plan
 from repro.kernels.ops import (
     minplus_matmul_op,
     texpand_op,
     viterbi_decode_fused,
+    viterbi_decode_fused_packed,
+    viterbi_decode_packed,
     viterbi_forward_chunk_op,
+    viterbi_forward_fused_op,
     viterbi_forward_op,
+    viterbi_forward_packed_op,
+    viterbi_forward_weighted_op,
+    viterbi_traceback_op,
 )
+from repro.kernels.survivors import pack_survivors, traceback_packed, unpack_survivors
 
 __all__ = [
-    "texpand_op",
-    "viterbi_forward_op",
-    "viterbi_forward_chunk_op",
-    "viterbi_decode_fused",
+    "FusedMetricPlan",
+    "fused_metric_plan",
     "minplus_matmul_op",
+    "pack_survivors",
+    "texpand_op",
+    "traceback_packed",
+    "unpack_survivors",
+    "viterbi_decode_fused",
+    "viterbi_decode_fused_packed",
+    "viterbi_decode_packed",
+    "viterbi_forward_chunk_op",
+    "viterbi_forward_fused_op",
+    "viterbi_forward_op",
+    "viterbi_forward_packed_op",
+    "viterbi_forward_weighted_op",
+    "viterbi_traceback_op",
 ]

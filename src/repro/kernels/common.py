@@ -1,0 +1,42 @@
+"""Shared helpers for the Pallas kernel entry points.
+
+Lives below ops.py so the raw kernel modules (viterbi_scan, texpand, minplus,
+survivors) can share interpret-mode auto-detection without importing ops
+(which imports them).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: Survivor bits packed per word along the time axis (uint32 words).
+PACK_BITS = 32
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Pallas interpret-mode policy: explicit override wins, otherwise run
+    compiled on a real TPU and interpreted everywhere else (CPU containers,
+    CI).  Public kernel entry points default to ``interpret=None`` so calling
+    them directly on a TPU never silently runs interpret mode."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def pad_axis_to(x: jnp.ndarray, axis: int, mult: int, value) -> Tuple[jnp.ndarray, int]:
+    """Pad ``axis`` of ``x`` up to a multiple of ``mult`` with ``value``."""
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), pad
+
+
+def lane_block(batch: int, block_b: int = 128) -> int:
+    """Lane-axis block size: full 128-lane tiles when the batch fills them,
+    a small padded tile otherwise (ops.py pads the batch up to this)."""
+    return block_b if batch >= block_b else max(8, batch)

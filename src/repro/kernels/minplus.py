@@ -12,6 +12,7 @@ VPU kernel with MXU-friendly tile shapes (multiples of 8×128).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +20,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.trellis import NEG_UNREACHABLE
+from repro.kernels.common import resolve_interpret
 
 
 def _minplus_kernel(a_ref, b_ref, out_ref, acc_ref):
@@ -46,12 +48,13 @@ def minplus_matmul(
     block_i: int = 128,
     block_j: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Batched (min,+) matmul.  a: (N, I, K), b: (N, K, J) -> (N, I, J).
 
     Dims must be multiples of the block sizes (ops.py pads with the
     semiring's +inf identity, which is correct for min-reduction).
+    ``interpret=None`` auto-detects: compiled on TPU, interpreted elsewhere.
     """
     N, I, K = a.shape
     _, _, J = b.shape
@@ -66,6 +69,6 @@ def minplus_matmul(
         out_specs=pl.BlockSpec((1, block_i, block_j), lambda n, i, j, k: (n, i, j)),
         out_shape=jax.ShapeDtypeStruct((N, I, J), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_i, block_j), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, b)
     return out

@@ -2,37 +2,31 @@
 
 Handle layout conversion ((B, S) user layout <-> (S, B) kernel layout),
 lane/sublane padding, interpret-mode selection (CPU container -> interpret;
-real TPU -> compiled), and compose the full fused decoder (kernel forward
-pass + traceback).
+real TPU -> compiled), and compose the full fused decoders:
+
+  classic      viterbi_decode_fused: bm tables in, unpacked (T, S, B) int32
+               survivors out, XLA scan-of-gathers traceback.
+  packed       viterbi_decode_packed: bm tables in, 32×-smaller packed
+               survivors out, Pallas traceback kernel — the survivors never
+               exist unpacked in HBM.
+  fused+packed viterbi_decode_fused_packed: raw received symbols in, branch
+               metrics computed in-kernel (kernels/metrics.py), packed
+               survivors, Pallas traceback — the full memory-lean hot path.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.trellis import NEG_UNREACHABLE, ConvCode
 from repro.core.viterbi import _traceback
 from repro.kernels import minplus as _minplus
+from repro.kernels import survivors as _surv
 from repro.kernels import texpand as _texpand
 from repro.kernels import viterbi_scan as _vscan
-
-
-def _use_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
-
-
-def _pad_to(x: jnp.ndarray, axis: int, mult: int, value) -> Tuple[jnp.ndarray, int]:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x, 0
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value), pad
+from repro.kernels.common import lane_block, pad_axis_to
+from repro.kernels.metrics import FusedMetricPlan
 
 
 def texpand_op(
@@ -45,11 +39,11 @@ def texpand_op(
     B = pm.shape[0]
     pm_k = pm.T  # (S, B)
     bm_k = bm_table.T  # (M, B)
-    block_b = 128 if B >= 128 else max(8, B)
-    pm_k, _ = _pad_to(pm_k, 1, block_b, NEG_UNREACHABLE)
-    bm_k, _ = _pad_to(bm_k, 1, block_b, 0.0)
+    block_b = lane_block(B)
+    pm_k, _ = pad_axis_to(pm_k, 1, block_b, NEG_UNREACHABLE)
+    bm_k, _ = pad_axis_to(bm_k, 1, block_b, 0.0)
     new_pm, bp = _texpand.texpand(
-        code, pm_k.astype(jnp.float32), bm_k.astype(jnp.float32), block_b, _use_interpret(interpret)
+        code, pm_k.astype(jnp.float32), bm_k.astype(jnp.float32), block_b, interpret
     )
     return new_pm[:, :B].T, bp[:, :B].T
 
@@ -65,10 +59,10 @@ def viterbi_forward_op(
     """
     B, T, M = bm_tables.shape
     bm_k = bm_tables.transpose(1, 2, 0)  # (T, M, B)
-    block_b = 128 if B >= 128 else max(8, B)
-    bm_k, _ = _pad_to(bm_k, 2, block_b, 0.0)
+    block_b = lane_block(B)
+    bm_k, _ = pad_axis_to(bm_k, 2, block_b, 0.0)
     final_pm, bps = _vscan.viterbi_scan(
-        code, bm_k.astype(jnp.float32), block_b, _use_interpret(interpret)
+        code, bm_k.astype(jnp.float32), block_b, interpret
     )
     return final_pm[:, :B].T, bps[:, :, :B].transpose(0, 2, 1)
 
@@ -94,13 +88,111 @@ def viterbi_forward_chunk_op(
     B, C, M = bm_chunk.shape
     pm_k = pm.T  # (S, B)
     bm_k = bm_chunk.transpose(1, 2, 0)  # (C, M, B)
-    block_b = 128 if B >= 128 else max(8, B)
-    pm_k, _ = _pad_to(pm_k, 1, block_b, NEG_UNREACHABLE)
-    bm_k, _ = _pad_to(bm_k, 2, block_b, 0.0)
+    block_b = lane_block(B)
+    pm_k, _ = pad_axis_to(pm_k, 1, block_b, NEG_UNREACHABLE)
+    bm_k, _ = pad_axis_to(bm_k, 2, block_b, 0.0)
     new_pm, bps = _vscan.viterbi_scan_carry(
-        code, pm_k.astype(jnp.float32), bm_k.astype(jnp.float32), block_b, _use_interpret(interpret)
+        code, pm_k.astype(jnp.float32), bm_k.astype(jnp.float32), block_b, interpret
     )
     return new_pm[:, :B].T, bps[:, :, :B].transpose(0, 2, 1)
+
+
+# --------------------------------------------------------------------------- #
+# Packed-survivor pipeline: forward (+ optional in-kernel metrics), traceback. #
+# --------------------------------------------------------------------------- #
+
+
+def viterbi_forward_weighted_op(
+    code: ConvCode,
+    pm0: Optional[jnp.ndarray],
+    data_btf: jnp.ndarray,
+    weights: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Generic packed forward: any (b0, b1, rb) metric weights, optional
+    carried pm0 (None -> state-0 init).  data_btf: (B, T, F) user layout ->
+    final_pm (B, S), packed (W, B, S) traceback layout.  The streaming
+    subsystem calls this directly with its per-session weights."""
+    B, T, F = data_btf.shape
+    b0, b1, rb = weights
+    data = data_btf.transpose(1, 2, 0).astype(jnp.float32)  # (T, F, B)
+    block_b = lane_block(B)
+    data, _ = pad_axis_to(data, 2, block_b, 0.0)
+    if pm0 is None:
+        final_pm, packed = _vscan.viterbi_scan_packed(
+            code, data, b0, b1, rb, block_b, interpret
+        )
+    else:
+        pm_k, _ = pad_axis_to(pm0.T, 1, block_b, NEG_UNREACHABLE)
+        final_pm, packed = _vscan.viterbi_scan_packed_carry(
+            code, pm_k.astype(jnp.float32), data, b0, b1, rb, block_b, interpret
+        )
+    return final_pm[:, :B].T, packed[:, :, :B].transpose(0, 2, 1)
+
+
+def viterbi_forward_packed_op(
+    code: ConvCode,
+    bm_tables: jnp.ndarray,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward pass with bit-packed survivors from precomputed bm tables.
+
+    bm_tables: (B, T, M) -> final_pm (B, S), packed (ceil(T/32), B, S) uint32
+    — the survivor tensor is 32× smaller than viterbi_forward_op's.
+    """
+    return viterbi_forward_weighted_op(
+        code, None, bm_tables, _vscan.table_weights(code), interpret
+    )
+
+
+def viterbi_forward_fused_op(
+    plan: FusedMetricPlan,
+    received: jnp.ndarray,
+    t0: int = 0,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward pass with **in-kernel branch metrics** + packed survivors.
+
+    received: (B, T, n_out) raw channel symbols (hard bits or soft values);
+    the kernel streams these F-wide features instead of an M-wide bm table.
+    Returns final_pm (B, S), packed (ceil(T/32), B, S) uint32.
+    """
+    feats = plan.features(received, t0)
+    return viterbi_forward_weighted_op(plan.code, None, feats, plan.folded(), interpret)
+
+
+def viterbi_traceback_op(
+    code: ConvCode,
+    packed: jnp.ndarray,
+    final_state: jnp.ndarray,
+    T: int,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """On-device traceback over packed survivors.
+
+    packed: (W, B, S) uint32 (traceback layout); final_state: (B,) int32.
+    Returns bits (B, T) — the survivors are never unpacked in HBM.
+    """
+    W, B, S = packed.shape
+    pk = packed.transpose(0, 2, 1)  # (W, S, B)
+    block_b = lane_block(B)
+    pk, _ = pad_axis_to(pk, 2, block_b, 0)
+    fs, _ = pad_axis_to(final_state.reshape(1, B).astype(jnp.int32), 1, block_b, 0)
+    bits = _surv.traceback_packed(code, pk, fs, T, block_b, interpret)
+    return bits[:T, :B].T
+
+
+def _frontier(
+    final_pm: jnp.ndarray, terminated: bool
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Traceback start state + winning metric from (B, S) frontier metrics."""
+    if terminated:
+        final_state = jnp.zeros(final_pm.shape[:1], dtype=jnp.int32)
+        metric = final_pm[:, 0]
+    else:
+        final_state = jnp.argmin(final_pm, axis=-1).astype(jnp.int32)
+        metric = final_pm.min(axis=-1)
+    return final_state, metric
 
 
 def viterbi_decode_fused(
@@ -113,15 +205,43 @@ def viterbi_decode_fused(
 
     bm_tables: (B, T, M) -> (bits (B, T), metric (B,)).
     """
-    B = bm_tables.shape[0]
     final_pm, bps = viterbi_forward_op(code, bm_tables, interpret)
-    if terminated:
-        final_state = jnp.zeros((B,), dtype=jnp.int32)
-        metric = final_pm[:, 0]
-    else:
-        final_state = jnp.argmin(final_pm, axis=-1).astype(jnp.int32)
-        metric = final_pm.min(axis=-1)
+    final_state, metric = _frontier(final_pm, terminated)
     bits, _ = _traceback(code, bps, final_state)
+    return bits, metric
+
+
+def viterbi_decode_packed(
+    code: ConvCode,
+    bm_tables: jnp.ndarray,
+    terminated: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused decode with packed survivors + on-device traceback (bm tables
+    in).  Bit-exact vs viterbi_decode_fused; survivor HBM footprint is 32×
+    smaller and the traceback never leaves the device."""
+    T = bm_tables.shape[1]
+    final_pm, packed = viterbi_forward_packed_op(code, bm_tables, interpret)
+    final_state, metric = _frontier(final_pm, terminated)
+    bits = viterbi_traceback_op(code, packed, final_state, T, interpret)
+    return bits, metric
+
+
+def viterbi_decode_fused_packed(
+    plan: FusedMetricPlan,
+    received: jnp.ndarray,
+    terminated: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The full memory-lean hot path: raw received symbols in, branch
+    metrics computed in-kernel, bit-packed survivors, Pallas traceback.
+
+    received: (B, T, n_out) -> (bits (B, T), metric (B,)).
+    """
+    T = received.shape[1]
+    final_pm, packed = viterbi_forward_fused_op(plan, received, 0, interpret)
+    final_state, metric = _frontier(final_pm, terminated)
+    bits = viterbi_traceback_op(plan.code, packed, final_state, T, interpret)
     return bits, metric
 
 
@@ -135,14 +255,14 @@ def minplus_matmul_op(
     a2 = a.reshape((-1, I, K))
     b2 = b.reshape((-1, K, J))
     bi = min(128, max(8, I))
-    bj = 128 if J >= 128 else max(8, J)
+    bj = lane_block(J)
     bk = min(128, max(8, K))
-    a2, _ = _pad_to(a2, 1, bi, NEG_UNREACHABLE)
-    a2, _ = _pad_to(a2, 2, bk, NEG_UNREACHABLE)
-    b2, _ = _pad_to(b2, 1, bk, NEG_UNREACHABLE)
-    b2, _ = _pad_to(b2, 2, bj, NEG_UNREACHABLE)
+    a2, _ = pad_axis_to(a2, 1, bi, NEG_UNREACHABLE)
+    a2, _ = pad_axis_to(a2, 2, bk, NEG_UNREACHABLE)
+    b2, _ = pad_axis_to(b2, 1, bk, NEG_UNREACHABLE)
+    b2, _ = pad_axis_to(b2, 2, bj, NEG_UNREACHABLE)
     out = _minplus.minplus_matmul(
-        a2.astype(jnp.float32), b2.astype(jnp.float32), bi, bj, bk, _use_interpret(interpret)
+        a2.astype(jnp.float32), b2.astype(jnp.float32), bi, bj, bk, interpret
     )
     out = jnp.minimum(out, NEG_UNREACHABLE)  # padded lanes produced 2*BIG
     return out[:, :I, :J].reshape(batch_shape + (I, J))

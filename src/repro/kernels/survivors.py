@@ -1,0 +1,143 @@
+"""Bit-packed survivor memory: pack/unpack helpers + Pallas traceback kernel.
+
+Hardware Viterbi decoders never store survivors one-per-word — the survivor
+memory unit keeps one *bit* per (step, state) and the traceback unit walks it
+in place (the register-exchange / traceback units of the WIMAX decoder
+survey).  This module is that unit for the TPU pipeline:
+
+  pack_survivors / unpack_survivors
+      (T, ...) {0,1} backpointer parities <-> (ceil(T/32), ...) uint32 words,
+      32 steps per word along time (bit p of word w = step 32*w + p; tail
+      bits of a partial last word are zero).  Pure-jnp, layout-agnostic over
+      the trailing axes — the oracle the kernel formats are tested against.
+
+  traceback_packed
+      Pallas kernel that walks the packed words directly: grid is
+      (batch-tile, word) with the word axis time-reversed, the per-stream
+      state rides a VMEM scratch row across grid steps, and each word's 32
+      select bits are consumed by an in-register unrolled walk — the decoded
+      (T, B) bits are the only tensor that ever reaches HBM.  Replaces the
+      sequential XLA scan-of-gathers traceback for the fused decode path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.trellis import ConvCode
+from repro.kernels.common import PACK_BITS, resolve_interpret
+
+
+def n_words(T: int) -> int:
+    """Packed words needed for T trellis steps."""
+    return -(-T // PACK_BITS)
+
+
+def pack_survivors(bps: jnp.ndarray) -> jnp.ndarray:
+    """Pack {0,1} survivor parities 32-per-uint32 along leading (time) axis.
+
+    Args:
+      bps: (T, ...) integer 0/1 backpointer parities (any trailing layout).
+    Returns:
+      (ceil(T/32), ...) uint32; bit p of word w is step ``32*w + p``.
+    """
+    T = bps.shape[0]
+    W = n_words(T)
+    pad = W * PACK_BITS - T
+    b = bps.astype(jnp.uint32)
+    if pad:
+        b = jnp.pad(b, [(0, pad)] + [(0, 0)] * (b.ndim - 1))
+    b = b.reshape((W, PACK_BITS) + bps.shape[1:])
+    shifts = jnp.arange(PACK_BITS, dtype=jnp.uint32).reshape(
+        (1, PACK_BITS) + (1,) * (bps.ndim - 1)
+    )
+    # disjoint bit positions -> sum == bitwise or
+    return jnp.sum(b << shifts, axis=1, dtype=jnp.uint32)
+
+
+def unpack_survivors(packed: jnp.ndarray, T: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_survivors`: (W, ...) uint32 -> (T, ...) int32."""
+    shifts = jnp.arange(PACK_BITS, dtype=jnp.uint32).reshape(
+        (1, PACK_BITS) + (1,) * (packed.ndim - 1)
+    )
+    bits = (packed[:, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape((packed.shape[0] * PACK_BITS,) + packed.shape[1:])[:T].astype(
+        jnp.int32
+    )
+
+
+def _make_traceback_kernel(code: ConvCode, T: int):
+    """Traceback over packed survivor words for one (code, T)."""
+    K = code.constraint
+    half = code.n_states // 2
+
+    def kernel(packed_ref, fs_ref, out_ref, state_scratch):
+        i = pl.program_id(1)
+        W = pl.num_programs(1)
+
+        @pl.when(i == 0)
+        def _init():
+            state_scratch[...] = fs_ref[...]
+
+        w = W - 1 - i  # time-reversed word walk
+        word = packed_ref[0]  # (S, bB) uint32
+        state = state_scratch[...]  # (1, bB) int32
+        rows = jax.lax.broadcasted_iota(jnp.int32, word.shape, 0)
+        out_rows = []
+        for p in range(PACK_BITS - 1, -1, -1):
+            valid = w * PACK_BITS + p < T  # tail bits of a partial last word
+            # per-lane select of bit p at each lane's current state: a
+            # one-hot row mask + sum-reduce over states (no gathers)
+            onehot = rows == state
+            bit_p = ((word >> jnp.uint32(p)) & jnp.uint32(1)).astype(jnp.int32)
+            j = jnp.sum(jnp.where(onehot, bit_p, 0), axis=0, keepdims=True)
+            u = state >> (K - 2)  # input bit that produced this state
+            v = state & (half - 1) if half > 1 else jnp.zeros_like(state)
+            prev = 2 * v + j
+            out_rows.append(jnp.where(valid, u, 0))
+            state = jnp.where(valid, prev, state)
+        state_scratch[...] = state
+        out_ref[...] = jnp.concatenate(out_rows[::-1], axis=0)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
+def traceback_packed(
+    code: ConvCode,
+    packed: jnp.ndarray,
+    final_state: jnp.ndarray,
+    T: int,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Trace back through packed survivors entirely on-device.
+
+    Args:
+      packed: (W, S, B) uint32 survivor words (kernel layout), W = ceil(T/32).
+      final_state: (1, B) int32 state to start the walk from.
+      T: trellis steps actually encoded (T <= 32*W; tail bits ignored).
+    Returns:
+      bits: (32*W, B) int32 decoded input bits; rows >= T are zero padding —
+      callers slice ``[:T]``.
+    """
+    W, S, B = packed.shape
+    grid = (B // block_b, W)
+    bits = pl.pallas_call(
+        _make_traceback_kernel(code, T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, block_b), lambda b, i: (W - 1 - i, 0, b)),
+            pl.BlockSpec((1, block_b), lambda b, i: (0, b)),
+        ],
+        out_specs=pl.BlockSpec((PACK_BITS, block_b), lambda b, i: (W - 1 - i, b)),
+        out_shape=jax.ShapeDtypeStruct((W * PACK_BITS, B), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, block_b), jnp.int32)],
+        interpret=resolve_interpret(interpret),
+    )(packed, final_state)
+    return bits

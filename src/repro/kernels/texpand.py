@@ -17,13 +17,14 @@ Layout: (state, batch) — batch on the 128-wide lane axis, states on sublanes.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.trellis import ConvCode
+from repro.kernels.common import resolve_interpret
 
 
 def _texpand_kernel(p0_ref, p1_ref, oh0_ref, oh1_ref, pm_ref, bm_ref, out_pm_ref, out_bp_ref):
@@ -47,10 +48,11 @@ def texpand(
     pm: jnp.ndarray,
     bm_table: jnp.ndarray,
     block_b: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One fused ACS step.  pm: (S, B); bm_table: (M, B).  B must be a
-    multiple of ``block_b`` (ops.py handles padding)."""
+    multiple of ``block_b`` (ops.py handles padding).  ``interpret=None``
+    auto-detects: compiled on TPU, interpreted elsewhere."""
     S, B = pm.shape
     M = bm_table.shape[0]
     P0, P1 = code.select_matrices
@@ -76,6 +78,6 @@ def texpand(
             jax.ShapeDtypeStruct((S, B), pm.dtype),
             jax.ShapeDtypeStruct((S, B), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(P0), jnp.asarray(P1), jnp.asarray(OH0), jnp.asarray(OH1), pm, bm_table)
     return out_pm, out_bp

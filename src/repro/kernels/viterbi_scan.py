@@ -6,13 +6,35 @@ they never round-trip to HBM, exactly like the microcoded Texpand keeps its
 operands out of the fetch/decode path.  The grid iterates (batch-tile, time);
 TPU grid execution is sequential, so scratch carries state across time steps.
 
-Per grid step:   bm_t tile (M, bB) streams in;  bp tile (S, bB) streams out;
-                 pm (S, bB) lives in scratch.
+One parameterized kernel body (`_make_scan_kernel`) serves every variant —
+the old block/carry pair were byte-identical except for their init path:
+
+  init path      ``carry=False`` seeds pm = [0, +inf, ...] in-kernel (paper
+                 §IV-B, paths start in state 0); ``carry=True`` seeds from a
+                 pm0 input (the streaming chunk scan).
+  branch metrics the per-step input is a generic ``(F, bB)`` tile multiplied
+                 by an ``(S, F)`` weight pair plus an ``(S, 2)`` bias.  With
+                 weights = the branch one-hots and F = n_symbols this is the
+                 classic precomputed bm-table path; with weights = the folded
+                 metric matrices of kernels/metrics.py and F = n features the
+                 kernel computes hard/soft/punctured branch metrics from raw
+                 received symbols **in-kernel**, cutting the per-step HBM
+                 read from M·B to F·B floats (M = 2^n symbols vs F = n raw
+                 values per step).
+  survivors      ``pack=False`` emits one int32 per (t, state, stream) —
+                 one useful bit per 4 bytes.  ``pack=True`` accumulates the
+                 ACS select bits in a uint32 scratch word and emits
+                 ``(ceil(T/32), S, B)`` — a 32× smaller survivor tensor that
+                 kernels/survivors.py traces back without ever unpacking in
+                 HBM.
+
+Per grid step:  data tile (F, bB) streams in;  bp tile (S, bB) — or, packed,
+                1/32nd of one — streams out;  pm (S, bB) lives in scratch.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,106 +42,128 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.trellis import NEG_UNREACHABLE, ConvCode
+from repro.kernels.common import PACK_BITS, resolve_interpret
 
 
-def _viterbi_scan_kernel(
-    p0_ref, p1_ref, oh0_ref, oh1_ref, bm_ref, out_bp_ref, out_pm_ref, pm_scratch
-):
-    t = pl.program_id(1)
+def _make_scan_kernel(carry: bool, pack: bool):
+    """Build the ACS scan kernel for one (init path, survivor format) combo.
 
-    @pl.when(t == 0)
-    def _init():
-        # paths start in state 0 (paper §IV-B): pm = [0, +inf, ...]
-        row = jax.lax.broadcasted_iota(jnp.int32, pm_scratch.shape, 0)
-        pm_scratch[...] = jnp.where(row == 0, 0.0, NEG_UNREACHABLE)
-
-    pm = pm_scratch[...]
-    bm = bm_ref[0].astype(jnp.float32)
-    hi = jax.lax.Precision.HIGHEST
-    cand0 = jax.lax.dot(p0_ref[...], pm, precision=hi) + jax.lax.dot(oh0_ref[...], bm, precision=hi)
-    cand1 = jax.lax.dot(p1_ref[...], pm, precision=hi) + jax.lax.dot(oh1_ref[...], bm, precision=hi)
-    take1 = cand1 < cand0
-    new_pm = jnp.where(take1, cand1, cand0)
-    # clamp: unreachable-state metrics grow by BIG per matmul otherwise
-    new_pm = jnp.minimum(new_pm, NEG_UNREACHABLE)
-    pm_scratch[...] = new_pm
-    out_bp_ref[0] = take1.astype(out_bp_ref.dtype)
-    out_pm_ref[...] = new_pm.astype(out_pm_ref.dtype)
-
-
-def _viterbi_scan_carry_kernel(
-    p0_ref, p1_ref, oh0_ref, oh1_ref, pm0_ref, bm_ref, out_bp_ref, out_pm_ref, pm_scratch
-):
-    """Like _viterbi_scan_kernel but seeded from carried path metrics.
-
-    The streaming subsystem calls this once per chunk: pm0 is the previous
-    chunk's final path metrics, so a stream of arbitrary length runs through
-    the same VMEM-resident scan without re-materializing history.
+    Ref order: p0, p1, b0, b1, rb, [pm0], data, out_bp, out_pm, pm_scratch,
+    [pack_scratch].
     """
-    t = pl.program_id(1)
 
-    @pl.when(t == 0)
-    def _init():
-        pm_scratch[...] = pm0_ref[...]
+    def kernel(*refs):
+        if carry:
+            p0_ref, p1_ref, b0_ref, b1_ref, rb_ref, pm0_ref, data_ref = refs[:7]
+            refs = refs[7:]
+        else:
+            p0_ref, p1_ref, b0_ref, b1_ref, rb_ref, data_ref = refs[:6]
+            refs = refs[6:]
+        out_bp_ref, out_pm_ref, pm_scratch = refs[:3]
+        t = pl.program_id(1)
 
-    pm = pm_scratch[...]
-    bm = bm_ref[0].astype(jnp.float32)
-    hi = jax.lax.Precision.HIGHEST
-    cand0 = jax.lax.dot(p0_ref[...], pm, precision=hi) + jax.lax.dot(oh0_ref[...], bm, precision=hi)
-    cand1 = jax.lax.dot(p1_ref[...], pm, precision=hi) + jax.lax.dot(oh1_ref[...], bm, precision=hi)
-    take1 = cand1 < cand0
-    new_pm = jnp.where(take1, cand1, cand0)
-    new_pm = jnp.minimum(new_pm, NEG_UNREACHABLE)
-    pm_scratch[...] = new_pm
-    out_bp_ref[0] = take1.astype(out_bp_ref.dtype)
-    out_pm_ref[...] = new_pm.astype(out_pm_ref.dtype)
+        @pl.when(t == 0)
+        def _init():
+            if carry:
+                pm_scratch[...] = pm0_ref[...]
+            else:
+                # paths start in state 0 (paper §IV-B): pm = [0, +inf, ...]
+                row = jax.lax.broadcasted_iota(jnp.int32, pm_scratch.shape, 0)
+                pm_scratch[...] = jnp.where(row == 0, 0.0, NEG_UNREACHABLE)
+
+        pm = pm_scratch[...]
+        data = data_ref[0].astype(jnp.float32)
+        hi = jax.lax.Precision.HIGHEST
+        cand0 = (
+            jax.lax.dot(p0_ref[...], pm, precision=hi)
+            + jax.lax.dot(b0_ref[...], data, precision=hi)
+            + rb_ref[:, 0:1]
+        )
+        cand1 = (
+            jax.lax.dot(p1_ref[...], pm, precision=hi)
+            + jax.lax.dot(b1_ref[...], data, precision=hi)
+            + rb_ref[:, 1:2]
+        )
+        take1 = cand1 < cand0
+        new_pm = jnp.where(take1, cand1, cand0)
+        # clamp: unreachable-state metrics grow by BIG per matmul otherwise
+        new_pm = jnp.minimum(new_pm, NEG_UNREACHABLE)
+        pm_scratch[...] = new_pm
+        out_pm_ref[...] = new_pm.astype(out_pm_ref.dtype)
+
+        if pack:
+            pack_scratch = refs[3]
+            pos = (t % PACK_BITS).astype(jnp.uint32)
+            bit = take1.astype(jnp.uint32) << pos
+            # pos == 0 starts a fresh word (the masked read of uninitialized
+            # scratch on the first step is discarded by the where)
+            word = jnp.where(pos == 0, jnp.uint32(0), pack_scratch[...]) | bit
+            pack_scratch[...] = word
+            # the out tile stays VMEM-resident for 32 steps (its block index
+            # is t // 32); the value at the window's last visit — the fully
+            # packed word — is what lands in HBM.
+            out_bp_ref[0] = word
+        else:
+            out_bp_ref[0] = take1.astype(out_bp_ref.dtype)
+
+    return kernel
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4))
-def viterbi_scan_carry(
+def _scan_call(
     code: ConvCode,
-    pm0: jnp.ndarray,
-    bm_tables: jnp.ndarray,
-    block_b: int = 128,
-    interpret: bool = True,
+    pm0: Optional[jnp.ndarray],
+    data: jnp.ndarray,
+    b0: jnp.ndarray,
+    b1: jnp.ndarray,
+    rb: jnp.ndarray,
+    block_b: int,
+    interpret: Optional[bool],
+    pack: bool,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Chunked ACS scan with carried state: run C steps starting from ``pm0``.
-
-    Args:
-      pm0: (S, B) float32 path metrics entering the chunk.
-      bm_tables: (C, M, B) float32.  B must be a multiple of ``block_b``.
-    Returns:
-      final_pm: (S, B) float32; bps: (C, S, B) int32 backpointer parities.
-    """
-    C, M, B = bm_tables.shape
+    """Shared pallas_call plumbing for all four scan variants."""
+    T, F, B = data.shape
     S = code.n_states
     P0, P1 = code.select_matrices
-    OH0, OH1 = code.branch_onehot_pair
-    grid = (B // block_b, C)  # time innermost: scratch carries pm across t
+    carry = pm0 is not None
+    grid = (B // block_b, T)  # time innermost: scratch carries pm across t
     tbl = lambda r, c: pl.BlockSpec((r, c), lambda b, t: (0, 0))  # noqa: E731
+    in_specs = [tbl(S, S), tbl(S, S), tbl(S, F), tbl(S, F), tbl(S, 2)]
+    args = [jnp.asarray(P0), jnp.asarray(P1), b0, b1, rb]
+    if carry:
+        in_specs.append(pl.BlockSpec((S, block_b), lambda b, t: (0, b)))
+        args.append(pm0)
+    in_specs.append(pl.BlockSpec((1, F, block_b), lambda b, t: (t, 0, b)))
+    args.append(data)
+    if pack:
+        n_words = pl.cdiv(T, PACK_BITS)
+        bp_spec = pl.BlockSpec(
+            (1, S, block_b), lambda b, t: (t // PACK_BITS, 0, b)
+        )
+        bp_shape = jax.ShapeDtypeStruct((n_words, S, B), jnp.uint32)
+    else:
+        bp_spec = pl.BlockSpec((1, S, block_b), lambda b, t: (t, 0, b))
+        bp_shape = jax.ShapeDtypeStruct((T, S, B), jnp.int32)
+    scratch = [pltpu.VMEM((S, block_b), jnp.float32)]
+    if pack:
+        scratch.append(pltpu.VMEM((S, block_b), jnp.uint32))
     bps, final_pm = pl.pallas_call(
-        _viterbi_scan_carry_kernel,
+        _make_scan_kernel(carry, pack),
         grid=grid,
-        in_specs=[
-            tbl(S, S),
-            tbl(S, S),
-            tbl(S, M),
-            tbl(S, M),
-            pl.BlockSpec((S, block_b), lambda b, t: (0, b)),
-            pl.BlockSpec((1, M, block_b), lambda b, t: (t, 0, b)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, S, block_b), lambda b, t: (t, 0, b)),
-            pl.BlockSpec((S, block_b), lambda b, t: (0, b)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((C, S, B), jnp.int32),
-            jax.ShapeDtypeStruct((S, B), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((S, block_b), jnp.float32)],
-        interpret=interpret,
-    )(jnp.asarray(P0), jnp.asarray(P1), jnp.asarray(OH0), jnp.asarray(OH1), pm0, bm_tables)
+        in_specs=in_specs,
+        out_specs=[bp_spec, pl.BlockSpec((S, block_b), lambda b, t: (0, b))],
+        out_shape=[bp_shape, jax.ShapeDtypeStruct((S, B), jnp.float32)],
+        scratch_shapes=scratch,
+        interpret=resolve_interpret(interpret),
+    )(*args)
     return final_pm, bps
+
+
+def table_weights(code: ConvCode):
+    """Weights that make the generic kernel consume precomputed bm tables:
+    the branch one-hots select bm[c] per transition, bias contributes 0."""
+    OH0, OH1 = code.branch_onehot_pair
+    rb = jnp.zeros((code.n_states, 2), jnp.float32)
+    return jnp.asarray(OH0), jnp.asarray(OH1), rb
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 3))
@@ -127,7 +171,7 @@ def viterbi_scan(
     code: ConvCode,
     bm_tables: jnp.ndarray,
     block_b: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Run all T ACS steps with VMEM-resident path metrics.
 
@@ -136,31 +180,73 @@ def viterbi_scan(
     Returns:
       final_pm: (S, B) float32; bps: (T, S, B) int32 backpointer parities.
     """
-    T, M, B = bm_tables.shape
-    S = code.n_states
-    P0, P1 = code.select_matrices
-    OH0, OH1 = code.branch_onehot_pair
-    grid = (B // block_b, T)  # time innermost: scratch carries pm across t
-    tbl = lambda r, c: pl.BlockSpec((r, c), lambda b, t: (0, 0))  # noqa: E731
-    bps, final_pm = pl.pallas_call(
-        _viterbi_scan_kernel,
-        grid=grid,
-        in_specs=[
-            tbl(S, S),
-            tbl(S, S),
-            tbl(S, M),
-            tbl(S, M),
-            pl.BlockSpec((1, M, block_b), lambda b, t: (t, 0, b)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, S, block_b), lambda b, t: (t, 0, b)),
-            pl.BlockSpec((S, block_b), lambda b, t: (0, b)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((T, S, B), jnp.int32),
-            jax.ShapeDtypeStruct((S, B), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((S, block_b), jnp.float32)],
-        interpret=interpret,
-    )(jnp.asarray(P0), jnp.asarray(P1), jnp.asarray(OH0), jnp.asarray(OH1), bm_tables)
-    return final_pm, bps
+    b0, b1, rb = table_weights(code)
+    return _scan_call(code, None, bm_tables, b0, b1, rb, block_b, interpret, pack=False)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def viterbi_scan_carry(
+    code: ConvCode,
+    pm0: jnp.ndarray,
+    bm_tables: jnp.ndarray,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked ACS scan with carried state: run C steps starting from ``pm0``.
+
+    The streaming subsystem calls this once per chunk: pm0 is the previous
+    chunk's final path metrics, so a stream of arbitrary length runs through
+    the same VMEM-resident scan without re-materializing history.
+
+    Args:
+      pm0: (S, B) float32 path metrics entering the chunk.
+      bm_tables: (C, M, B) float32.  B must be a multiple of ``block_b``.
+    Returns:
+      final_pm: (S, B) float32; bps: (C, S, B) int32 backpointer parities.
+    """
+    b0, b1, rb = table_weights(code)
+    return _scan_call(code, pm0, bm_tables, b0, b1, rb, block_b, interpret, pack=False)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def viterbi_scan_packed(
+    code: ConvCode,
+    data: jnp.ndarray,
+    b0: jnp.ndarray,
+    b1: jnp.ndarray,
+    rb: jnp.ndarray,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward scan with bit-packed survivors and generic in-kernel metrics.
+
+    Args:
+      data: (T, F, B) per-step inputs — precomputed bm tables (F = M,
+        weights from ``table_weights``) or raw received symbols (F = n
+        features, weights from kernels/metrics.py folded through the branch
+        one-hots).  B must be a multiple of ``block_b``.
+      b0, b1: (S, F) float32 per-parity metric weights.
+      rb: (S, 2) float32 per-parity metric bias.
+    Returns:
+      final_pm: (S, B) float32.
+      packed: (ceil(T/32), S, B) uint32 — bit p of word w is the ACS select
+        of trellis step ``t = 32*w + p`` (tail bits of a partial last word
+        are zero).
+    """
+    return _scan_call(code, None, data, b0, b1, rb, block_b, interpret, pack=True)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6, 7))
+def viterbi_scan_packed_carry(
+    code: ConvCode,
+    pm0: jnp.ndarray,
+    data: jnp.ndarray,
+    b0: jnp.ndarray,
+    b1: jnp.ndarray,
+    rb: jnp.ndarray,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`viterbi_scan_packed` seeded from carried path metrics — the
+    streaming hot path (pm0: (S, B) float32 entering the chunk)."""
+    return _scan_call(code, pm0, data, b0, b1, rb, block_b, interpret, pack=True)

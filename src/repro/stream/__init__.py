@@ -11,6 +11,7 @@ from repro.stream.window import (
     chunk_forward_scan,
     default_depth,
     init_stream_state,
+    packed_depth,
     stream_flush,
     stream_step,
     viterbi_decode_windowed,
@@ -24,6 +25,7 @@ __all__ = [
     "chunk_forward_scan",
     "default_depth",
     "init_stream_state",
+    "packed_depth",
     "stream_flush",
     "stream_step",
     "viterbi_decode_windowed",

@@ -9,9 +9,19 @@ tail + final traceback run per-slot, off the hot path), and their slot is
 recycled for the next pending stream: classic continuous batching, applied
 to trellis decode instead of token decode.
 
+Per-stream input queues are **device-resident**: at admission a stream's
+remaining table is appended to one device arena, and each tick gathers the
+(n_slots, chunk, ·) decode block by slot offset in a single jitted take —
+no host-side numpy packing or per-tick H2D copy on the hot path (the arena
+is compacted off the hot path when retired segments dominate it).
+
 The per-slot python bookkeeping (positions, commit counts) mirrors
 StreamSession; the batched StreamState lives in one pytree so the hot loop
-is a single dispatch regardless of how many streams are in flight.
+is a single dispatch regardless of how many streams are in flight.  With
+``backend="fused_packed"`` the ring holds bit-packed survivor words and the
+per-tick traceback runs in the Pallas traceback kernel; with
+``inputs="received"`` the arena holds raw channel symbols (features) and
+branch metrics are computed in-kernel.
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -31,18 +42,21 @@ from repro.stream import window as _w
 
 @dataclasses.dataclass
 class _Stream:
-    """Per-stream bookkeeping (host side)."""
+    """Per-stream bookkeeping (host side; the table itself lives in the
+    device arena once the stream is admitted)."""
 
     stream_id: str
-    bm: np.ndarray  # (T, M) branch metrics still to be fed
+    bm: Optional[np.ndarray]  # (T, ·) input rows; dropped at admission
     terminated: bool
+    n_steps: int = 0  # total trellis steps in the stream
+    arena_start: int = 0  # arena row of stream step 0 (valid once admitted)
     pos: int = 0  # steps fed to the kernel
     committed: int = 0  # bits already emitted
     out: List[np.ndarray] = dataclasses.field(default_factory=list)
 
     @property
     def remaining(self) -> int:
-        return self.bm.shape[0] - self.pos
+        return self.n_steps - self.pos
 
 
 @dataclasses.dataclass
@@ -52,6 +66,7 @@ class SchedulerStats:
     streams_finished: int = 0
     slot_claims: int = 0
     steps_decoded: int = 0  # trellis steps through the batched kernel (incl. idle slots)
+    arena_compactions: int = 0
 
     def asdict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -66,8 +81,13 @@ class StreamScheduler:
       n_slots: decode-block batch size (compile-once; streams beyond this
         queue FIFO until a slot frees).
       chunk: trellis steps per tick per slot.
-      depth: truncated-traceback depth (default 5*K).
-      backend: 'fused' | 'scan' forward pass for the hot loop.
+      depth: truncated-traceback depth (default 5*K; rounded up to a
+        multiple of 32 for the packed backend).
+      backend: 'fused' | 'fused_packed' | 'scan' forward pass for the hot
+        loop ('fused_packed': bit-packed survivor ring + Pallas traceback).
+      inputs: 'bm' — submit takes (T, M) branch-metric tables; 'received'
+        (fused_packed only) — submit takes raw (T, n_out) channel symbols
+        and branch metrics are computed in-kernel.
 
     Usage:
       sched.submit("tv-0", bm_tables)      # (T, M) per stream
@@ -85,6 +105,7 @@ class StreamScheduler:
         backend: str = "fused",
         normalize: bool = True,
         interpret: Optional[bool] = None,
+        inputs: str = "bm",
     ):
         self.spec = CodecSpec.of(spec)
         code = self.spec.code
@@ -93,7 +114,16 @@ class StreamScheduler:
         self.chunk = chunk
         self.depth = _w.default_depth(code) if depth is None else depth
         self.backend = backend
-        self.state = _w.init_stream_state(code, n_slots, self.depth, chunk)
+        self.inputs = inputs
+        self.packed, self.depth, self._plan, self._weights = _w.resolve_stream_backend(
+            self.spec, chunk, self.depth, backend, inputs
+        )
+        self._width = (
+            self._plan.n_features if inputs == "received" else code.n_symbols
+        )
+        self.state = _w.init_stream_state(
+            code, n_slots, self.depth, chunk, packed=self.packed
+        )
         self.offset = jnp.zeros((n_slots,), dtype=jnp.float32)
         self.alloc = SlotAllocator(n_slots)
         self.active: Dict[int, _Stream] = {}
@@ -101,27 +131,47 @@ class StreamScheduler:
         self.results: Dict[str, Tuple[np.ndarray, float]] = {}
         self.stats = SchedulerStats()
         self._pm0_row = _initial_pm(code, ())  # (S,) fresh-slot path metrics
+        self._interpret = interpret
         self._step_fn = _w.jitted_stream_step(
             code, backend=backend, normalize=normalize, interpret=interpret
+        )
+        # device-resident input arena: rows [0, chunk) are zeros — the read
+        # target for idle slots — and each admitted stream appends its rows.
+        # Capacity grows geometrically (so the jitted gather sees a handful
+        # of shapes over a server's life, not one per admission) and the
+        # used prefix is compacted when retired rows exceed _compact_ratio x
+        # the live rows (past _compact_floor, so toy workloads never bother).
+        self._arena = jnp.zeros((chunk, self._width), dtype=jnp.float32)
+        self._arena_len = chunk  # used rows; rows beyond stay zero
+        self._compact_ratio = 4
+        self._compact_floor = 4096
+        self._gather = jax.jit(
+            lambda arena, offs: jnp.take(
+                arena, offs[:, None] + jnp.arange(chunk)[None, :], axis=0
+            )
         )
 
     # ------------------------------ intake ------------------------------ #
 
     def submit(self, stream_id: str, bm_tables, terminated: Optional[bool] = None) -> None:
-        """Queue a stream.  bm_tables: (T, M) branch metrics (the serving
-        layer produces these from received bits/LLRs chunk by chunk; here the
-        whole table is handed over and the scheduler feeds it out in chunks).
+        """Queue a stream.  bm_tables: (T, M) branch metrics — or raw
+        (T, n_out) received symbols for ``inputs='received'``.
         ``terminated`` defaults to the scheduler spec's flag."""
         if terminated is None:
             terminated = self.spec.terminated
         bm = np.asarray(bm_tables, dtype=np.float32)
-        if bm.ndim != 2:
-            raise ValueError(f"bm_tables must be (T, M), got {bm.shape}")
+        expected = self.code.n_out if self.inputs == "received" else self.code.n_symbols
+        kind = "received symbols" if self.inputs == "received" else "bm tables"
+        if bm.ndim != 2 or bm.shape[1] != expected:
+            raise ValueError(
+                f"{self.inputs!r} streams take {kind} shaped (T, {expected}), "
+                f"got {bm.shape}"
+            )
         if stream_id in self.results or any(
             s.stream_id == stream_id for s in list(self.active.values()) + list(self.pending)
         ):
             raise KeyError(f"duplicate stream_id {stream_id!r}")
-        self.pending.append(_Stream(stream_id, bm, terminated))
+        self.pending.append(_Stream(stream_id, bm, terminated, n_steps=bm.shape[0]))
         self.stats.streams_submitted += 1
         self._admit()
 
@@ -153,8 +203,7 @@ class StreamScheduler:
         # 1. retire streams that cannot fill a full chunk (tail + flush run
         #    batched over all slots retiring this tick — off the hot path),
         #    re-admit, and repeat: an admitted pending stream may itself be
-        #    shorter than a chunk and must retire before the packing loop
-        #    sees it.
+        #    shorter than a chunk and must retire before the gather sees it.
         self._admit()
         while True:
             drained = [s for s, st in self.active.items() if st.remaining < self.chunk]
@@ -165,15 +214,19 @@ class StreamScheduler:
         if not self.active:
             return {}
 
-        # 2. pack the decode block; idle slots decode zeros (harmless: a
-        #    slot's state is re-initialized when a stream claims it).
-        M = self.code.n_symbols
-        bm_block = np.zeros((self.n_slots, self.chunk, M), dtype=np.float32)
+        # 2. gather the decode block from the device arena by slot offset;
+        #    idle slots read the zero rows (harmless: a slot's state is
+        #    re-initialized when a stream claims it).
+        offs = np.zeros((self.n_slots,), dtype=np.int32)
         for slot, st in self.active.items():
-            bm_block[slot] = st.bm[st.pos : st.pos + self.chunk]
+            offs[slot] = st.arena_start + st.pos
+        block = self._gather(self._arena, jnp.asarray(offs))  # (n_slots, chunk, ·)
 
         # 3. the one jitted call for all live streams.
-        self.state, bits, delta = self._step_fn(self.state, jnp.asarray(bm_block))
+        if self.packed:
+            self.state, bits, delta = self._step_fn(self.state, block, self._weights)
+        else:
+            self.state, bits, delta = self._step_fn(self.state, block)
         self.offset = self.offset + delta
         bits_np = np.asarray(bits)
         self.stats.ticks += 1
@@ -221,8 +274,60 @@ class StreamScheduler:
             # otherwise erase the start-in-state-0 constraint (paper §IV-B)
             # for the next stream.
             self._reset_slot(slot)
+            # move the stream's input rows into the device arena (features
+            # are built once here — phase 0 is the stream start, so any
+            # later window of them is correctly puncture-phased).
+            rows = jnp.asarray(st.bm)
+            if self.inputs == "received":
+                rows = self._plan.features(rows, t0=0)
+            st.arena_start = self._append_rows(rows)
+            st.bm = None
             self.active[slot] = st
             self.stats.slot_claims += 1
+        self._maybe_compact()
+
+    def _append_rows(self, rows: jnp.ndarray) -> int:
+        """Write rows into the arena's used prefix, doubling capacity as
+        needed; returns the start row."""
+        start = self._arena_len
+        need = start + rows.shape[0]
+        cap = self._arena.shape[0]
+        if need > cap:
+            new_cap = max(2 * cap, need)
+            self._arena = jnp.concatenate(
+                [self._arena, jnp.zeros((new_cap - cap, self._width), jnp.float32)]
+            )
+        self._arena = jax.lax.dynamic_update_slice(
+            self._arena, rows.astype(jnp.float32), (start, 0)
+        )
+        self._arena_len = need
+        return start
+
+    def _maybe_compact(self) -> None:
+        """Rebuild the arena's used prefix from the live segments when
+        retired rows dominate it (off the hot path; keeps long-lived servers
+        bounded).  Capacity is kept when the live rows fit, so the gather's
+        compiled shape survives the compaction."""
+        live = sum(st.remaining for st in self.active.values()) + sum(
+            st.n_steps for st in self.pending
+        )
+        if self._arena_len <= max(
+            self._compact_ratio * (live + self.chunk), self._compact_floor
+        ):
+            return
+        parts = [jnp.zeros((self.chunk, self._width), dtype=jnp.float32)]
+        cursor = self.chunk
+        for st in self.active.values():
+            seg = self._arena[st.arena_start + st.pos : st.arena_start + st.n_steps]
+            # keep arena_start meaning "row of stream step 0"
+            st.arena_start = cursor - st.pos
+            parts.append(seg)
+            cursor += seg.shape[0]
+        cap = self._arena.shape[0]
+        parts.append(jnp.zeros((max(cap - cursor, 0), self._width), jnp.float32))
+        self._arena = jnp.concatenate(parts, axis=0)
+        self._arena_len = cursor
+        self.stats.arena_compactions += 1
 
     def _collect(self, st: _Stream) -> np.ndarray:
         return (
@@ -236,6 +341,14 @@ class StreamScheduler:
         )
         self.offset = self.offset.at[slot].set(0.0)
 
+    def _tail_rows(self, st: _Stream) -> jnp.ndarray:
+        """(r, M) bm tables for a stream's remaining odd tail, sliced from
+        the device arena (raw features go through the metric plan)."""
+        seg = self._arena[st.arena_start + st.pos : st.arena_start + st.n_steps]
+        if self.inputs == "received":
+            return self._plan.bm_from_features(seg)
+        return seg
+
     def _finish_slots(self, slots: Sequence[int]) -> None:
         """Tail-feed + final traceback for every drained stream retiring this
         tick, then recycle the slots.  Tails are fed grouped by length (one
@@ -243,9 +356,9 @@ class StreamScheduler:
         traceback over all retirees runs as ONE batched jitted_stream_flush
         per termination kind — not one dispatch per slot.  Every batched call
         is padded to ``n_slots`` rows so cohort size never creates a new
-        compiled shape (padded rows decode garbage that is sliced away)."""
+        compiled shape (padded rows decode garbage that is sliced away).
+        Packed survivor rings are unpacked here, once, off the hot path."""
         streams = [(slot, self.active.pop(slot)) for slot in slots]
-        M = self.code.n_symbols
 
         def pad_rows(x: jnp.ndarray, axis: int) -> jnp.ndarray:
             extra = self.n_slots - x.shape[axis]
@@ -254,6 +367,10 @@ class StreamScheduler:
             widths = [(0, 0)] * x.ndim
             widths[axis] = (0, extra)
             return jnp.pad(x, widths)
+
+        ring = self.state.ring
+        if self.packed:
+            ring = _w.unpack_ring(self.code, ring)  # (R, n_slots, S)
 
         # tail-feed, grouped by tail length r (each group one batched call)
         by_r: Dict[int, List[Tuple[int, _Stream]]] = {}
@@ -266,13 +383,13 @@ class StreamScheduler:
             n = len(group)
             idx = jnp.asarray([slot for slot, _ in group])
             pm_g = self.state.pm[idx]  # (n, S)
-            ring_g = self.state.ring[:, idx]  # (R, n, S)
+            ring_g = ring[:, idx]  # (R, n, S)
             if r > 0:
-                tails = np.zeros((self.n_slots, r, M), dtype=np.float32)
-                for k, (_, st) in enumerate(group):
-                    tails[k] = st.bm[st.pos :]
+                tails = pad_rows(
+                    jnp.stack([self._tail_rows(st) for _, st in group]), 0
+                )  # (n_slots, r, M)
                 pm_p, bps = _w.jitted_chunk_forward(self.code)(
-                    pad_rows(pm_g, 0), jnp.asarray(tails)
+                    pad_rows(pm_g, 0), tails
                 )
                 pm_g = pm_p[:n]
                 ring_g = jnp.concatenate([ring_g[r:], bps[:, :n]], axis=0)
@@ -292,7 +409,9 @@ class StreamScheduler:
             if not rows:
                 continue
             sel = jnp.asarray(rows)
-            bits, metric = _w.jitted_stream_flush(self.code, terminated=term)(
+            bits, metric = _w.jitted_stream_flush(
+                self.code, terminated=term, interpret=self._interpret
+            )(
                 _w.StreamState(
                     pm=pad_rows(pm_all[sel], 0), ring=pad_rows(ring_all[:, sel], 1)
                 )
@@ -301,7 +420,7 @@ class StreamScheduler:
             for k, i in enumerate(rows):
                 flushed[i] = (bits_np[k], float(metric_np[k]))
 
-        R = self.state.ring.shape[0]
+        R = ring.shape[0]
         for i, (slot, st) in enumerate(ordered):
             bits_i, metric_i = flushed[i]
             n_rest = st.pos - st.committed

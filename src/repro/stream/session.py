@@ -8,6 +8,14 @@ Memory is O(depth + chunk) regardless of stream length; path metrics are
 renormalized every chunk so float32 never saturates, with the accumulated
 offset tracked so ``finish`` still reports the absolute path metric.
 
+Backends: ``fused``/``scan`` consume (B, chunk, M) branch-metric tables.
+``fused_packed`` runs the memory-lean pipeline — bit-packed survivor ring,
+on-device traceback — and with ``inputs="received"`` consumes raw
+(B, chunk, n_out) channel symbols, computing branch metrics in-kernel
+(kernels/metrics.py).  The packed ring shifts whole uint32 words, so the
+chunk must be a multiple of 32 and the depth is rounded up to one (a deeper
+window only helps accuracy; the lag grows accordingly).
+
 Typical use:
 
     sess = StreamSession(code, chunk=64)
@@ -36,8 +44,13 @@ class StreamSession:
         call decodes all of them; the scheduler uses this with batch=n_slots).
       chunk: trellis steps consumed per push (fixed — one compiled shape).
       depth: truncated-traceback depth D; bits commit D steps behind the
-        frontier.  Default 5*K (the textbook rule).
-      backend: 'fused' (Pallas) or 'scan' (jnp reference).
+        frontier.  Default 5*K (the textbook rule); rounded up to a multiple
+        of 32 for the packed backend.
+      backend: 'fused' (Pallas), 'fused_packed' (packed survivors +
+        on-device traceback), or 'scan' (jnp reference).
+      inputs: 'bm' — push takes (B, chunk, M) branch-metric tables;
+        'received' (fused_packed only) — push takes raw (B, chunk, n_out)
+        channel symbols and the kernel computes the metrics.
       normalize: renormalize path metrics every chunk (required for streams
         longer than ~1e30/bm_max steps; cheap, on by default).
     """
@@ -51,6 +64,7 @@ class StreamSession:
         backend: str = "fused",
         normalize: bool = True,
         interpret: Optional[bool] = None,
+        inputs: str = "bm",
     ):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
@@ -63,11 +77,18 @@ class StreamSession:
         if self.depth < 1:
             raise ValueError("depth must be >= 1")
         self.backend = backend
-        self.state = _w.init_stream_state(code, batch, self.depth, chunk)
+        self.inputs = inputs
+        self.packed, self.depth, self._plan, self._weights = _w.resolve_stream_backend(
+            self.spec, chunk, self.depth, backend, inputs
+        )
+        self.state = _w.init_stream_state(
+            code, batch, self.depth, chunk, packed=self.packed
+        )
         self.offset = jnp.zeros((batch,), dtype=jnp.float32)
         self.t = 0  # trellis steps pushed so far
         self.committed = 0  # bits already handed to the caller
         self.closed = False
+        self._interpret = interpret
         self._step = _w.jitted_stream_step(
             code, backend=backend, normalize=normalize, interpret=interpret
         )
@@ -81,22 +102,28 @@ class StreamSession:
         """Bits pushed but not yet committed (== depth at steady state)."""
         return self.t - self.committed
 
-    def push(self, bm_chunk: jnp.ndarray) -> jnp.ndarray:
+    def push(self, chunk_data: jnp.ndarray) -> jnp.ndarray:
         """Advance the stream by exactly ``chunk`` steps.
 
         Args:
-          bm_chunk: (B, chunk, M) branch-metric tables.
+          chunk_data: (B, chunk, M) branch-metric tables, or raw
+            (B, chunk, n_out) symbols for ``inputs='received'``.
         Returns:
           (B, n_new) newly-committed bits, n_new in [0, chunk] — 0 while the
           window warms up, exactly ``chunk`` at steady state.
         """
         if self.closed:
             raise RuntimeError("session is finished")
-        if bm_chunk.shape[:2] != (self.batch, self.chunk):
+        if chunk_data.shape[:2] != (self.batch, self.chunk):
             raise ValueError(
-                f"expected ({self.batch}, {self.chunk}, M) chunk, got {bm_chunk.shape}"
+                f"expected ({self.batch}, {self.chunk}, ·) chunk, got {chunk_data.shape}"
             )
-        self.state, bits, delta = self._step(self.state, bm_chunk)
+        if self.inputs == "received":
+            chunk_data = self._plan.features(chunk_data, t0=self.t)
+        if self.packed:
+            self.state, bits, delta = self._step(self.state, chunk_data, self._weights)
+        else:
+            self.state, bits, delta = self._step(self.state, chunk_data)
         self.offset = self.offset + delta
         self.t += self.chunk
         committable = max(0, self.t - self.depth)
@@ -106,6 +133,13 @@ class StreamSession:
         # (positions >= previous commit point) is the last n_new entries.
         return bits[:, self.chunk - n_new :] if n_new else bits[:, :0]
 
+    def _tail_bm(self, tail: jnp.ndarray) -> jnp.ndarray:
+        """Branch-metric tables for an odd-length tail (raw symbols are
+        converted through the metric plan, phased at the current step)."""
+        if self.inputs == "received":
+            return self._plan.bm_tables(tail, t0=self.t)
+        return tail
+
     def finish(
         self,
         bm_tail: Optional[jnp.ndarray] = None,
@@ -114,7 +148,8 @@ class StreamSession:
         """Consume an optional odd-length tail and flush the window.
 
         Args:
-          bm_tail: (B, r, M) with 0 < r < chunk, or None.
+          bm_tail: (B, r, ·) with 0 < r < chunk, or None (same input kind as
+            ``push``).
           terminated: the stream ends in state 0 (encoder flushed); defaults
             to the spec's ``terminated`` flag.
         Returns:
@@ -128,12 +163,20 @@ class StreamSession:
         if bm_tail is not None and bm_tail.shape[1]:
             r = bm_tail.shape[1]
             if r >= self.chunk or bm_tail.shape[0] != self.batch:
-                raise ValueError(f"tail must be (B, <chunk, M), got {bm_tail.shape}")
-            new_pm, bps = _w.jitted_chunk_forward(self.code)(self.state.pm, bm_tail)
-            ring = jnp.concatenate([self.state.ring[r:], bps], axis=0)
+                raise ValueError(f"tail must be (B, <chunk, ·), got {bm_tail.shape}")
+            tail_bm = self._tail_bm(bm_tail)
+            ring = self.state.ring
+            if self.packed:
+                # word shifts can't absorb an odd tail: unpack once, off the
+                # hot path — the flush runs on the unpacked ring.
+                ring = _w.unpack_ring(self.code, ring)
+            new_pm, bps = _w.jitted_chunk_forward(self.code)(self.state.pm, tail_bm)
+            ring = jnp.concatenate([ring[r:], bps], axis=0)
             self.state = _w.StreamState(pm=new_pm, ring=ring)
             self.t += r
-        bits, metric = _w.jitted_stream_flush(self.code, terminated=terminated)(self.state)
+        bits, metric = _w.jitted_stream_flush(
+            self.code, terminated=terminated, interpret=self._interpret
+        )(self.state)
         n_rest = self.t - self.committed
         self.committed = self.t
         self.closed = True
@@ -143,9 +186,10 @@ class StreamSession:
     def decode_all(
         self, bm_tables: jnp.ndarray, terminated: Optional[bool] = None
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Push a full (B, T, M) block through this session and return the
-        complete (B, T) decode + metric.  Convenience for tests/benchmarks."""
-        B, T, M = bm_tables.shape
+        """Push a full (B, T, ·) block through this session and return the
+        complete (B, T) decode + metric.  Convenience for tests/benchmarks
+        (tables or raw symbols per the session's ``inputs`` kind)."""
+        B, T = bm_tables.shape[:2]
         out = []
         n_full = T // self.chunk
         for i in range(n_full):

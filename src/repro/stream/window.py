@@ -9,14 +9,24 @@ a stream of any length (Martina & Masera 2010, §Viterbi traceback units).
 This module is the jittable core shared by sessions and the scheduler:
 
   StreamState     pytree carried across chunks: path metrics (B, S) and a
-                  backpointer ring buffer (R, B, S) with R = depth + chunk.
-  stream_step     advance C trellis steps (fused Pallas chunk scan or a
-                  lax.scan reference), shift the ring, traceback from the
-                  frontier, and commit the C oldest window positions.
+                  backpointer ring buffer — (R, B, S) int32 for the unpacked
+                  backends, (R/32, B, S) uint32 packed survivor words for
+                  ``fused_packed`` (R = depth + chunk).
+  stream_step     advance C trellis steps (fused Pallas chunk scan, the
+                  packed-survivor scan, or a lax.scan reference), shift the
+                  ring, traceback from the frontier, and commit the C oldest
+                  window positions.
   stream_flush    final traceback over the whole ring at end of stream.
   viterbi_decode_windowed
                   offline (B, T, M) -> (B, T) decode through the streaming
                   machinery — the equivalence oracle used by the tests.
+
+Backends: ``fused`` (Pallas chunk scan, unpacked int32 ring, XLA traceback),
+``scan`` (jnp reference), and ``fused_packed`` — the memory-lean hot path:
+bit-packed survivor ring (32× smaller), word-aligned ring shifts (requires
+chunk % 32 == 0 and depth % 32 == 0, sessions round the depth up), Pallas
+traceback over the packed words, and optional in-kernel branch metrics when
+the caller feeds raw received symbols + folded metric weights.
 
 Exactness: when depth >= T nothing commits before the flush, the ring holds
 the whole history, and the flush traceback from the terminated state IS the
@@ -35,14 +45,51 @@ import jax.numpy as jnp
 from repro.core.acs import acs_step
 from repro.core.trellis import NEG_UNREACHABLE, ConvCode
 from repro.core.viterbi import _initial_pm, _traceback
+from repro.kernels.common import PACK_BITS
 
 BIG = jnp.float32(NEG_UNREACHABLE)
 
 DEPTH_MULTIPLIER = 5  # the textbook truncation rule: D = 5 * constraint
 
+PACKED_BACKEND = "fused_packed"
+
 
 def default_depth(code: ConvCode) -> int:
     return DEPTH_MULTIPLIER * code.constraint
+
+
+def packed_depth(depth: int) -> int:
+    """Round a traceback depth up to the packed ring's word granularity.
+    A deeper window only improves accuracy; the session lag grows with it."""
+    return -(-depth // PACK_BITS) * PACK_BITS
+
+
+def resolve_stream_backend(spec, chunk: int, depth: int, backend: str, inputs: str):
+    """Shared session/scheduler backend setup: validate the input kind,
+    round the depth for the packed ring, and build the in-kernel metric plan.
+
+    Returns (packed, depth, plan, weights): ``plan`` is the FusedMetricPlan
+    for the packed backend (None otherwise); ``weights`` its folded kernel
+    operands when raw symbols are fed (None -> bm-table weights).
+    """
+    packed = backend == PACKED_BACKEND
+    if inputs not in ("bm", "received"):
+        raise ValueError(f"inputs must be 'bm' or 'received', got {inputs!r}")
+    if inputs == "received" and not packed:
+        raise ValueError("inputs='received' needs the fused_packed backend")
+    plan = weights = None
+    if packed:
+        if chunk % PACK_BITS:
+            raise ValueError(
+                f"{PACKED_BACKEND} streaming needs chunk % {PACK_BITS} == 0"
+            )
+        depth = packed_depth(depth)
+        from repro.kernels.metrics import fused_metric_plan
+
+        plan = fused_metric_plan(spec.code, spec.metric, spec.puncture_array)
+        if inputs == "received":
+            weights = plan.folded()
+    return packed, depth, plan, weights
 
 
 class StreamState(NamedTuple):
@@ -50,18 +97,31 @@ class StreamState(NamedTuple):
 
     pm:   (B, S) float32 path metrics at the stream frontier (renormalized,
           see stream_step).
-    ring: (R, B, S) int32 backpointer ring, R = depth + chunk; slot i holds
-          the backpointers of absolute step ``t - R + i`` (pre-stream slots
-          hold zeros and are never committed by the session bookkeeping).
+    ring: backpointer ring over the last R = depth + chunk steps; slot i
+          holds the backpointers of absolute step ``t - R + i`` (pre-stream
+          slots hold zeros and are never committed by the session
+          bookkeeping).  (R, B, S) int32 unpacked, or (R/32, B, S) uint32
+          survivor words for the packed backend.
     """
 
     pm: jnp.ndarray
     ring: jnp.ndarray
 
 
-def init_stream_state(code: ConvCode, batch: int, depth: int, chunk: int) -> StreamState:
+def init_stream_state(
+    code: ConvCode, batch: int, depth: int, chunk: int, packed: bool = False
+) -> StreamState:
     """Fresh state: paths start in state 0 (paper §IV-B), empty ring."""
-    ring = jnp.zeros((depth + chunk, batch, code.n_states), dtype=jnp.int32)
+    R = depth + chunk
+    if packed:
+        if R % PACK_BITS:
+            raise ValueError(
+                f"packed ring needs (depth + chunk) % {PACK_BITS} == 0, "
+                f"got depth={depth}, chunk={chunk} (see packed_depth())"
+            )
+        ring = jnp.zeros((R // PACK_BITS, batch, code.n_states), dtype=jnp.uint32)
+    else:
+        ring = jnp.zeros((R, batch, code.n_states), dtype=jnp.int32)
     return StreamState(pm=_initial_pm(code, (batch,)), ring=ring)
 
 
@@ -69,8 +129,8 @@ def chunk_forward_scan(
     code: ConvCode, pm: jnp.ndarray, bm_chunk: jnp.ndarray
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """lax.scan reference for the chunked forward pass (oracle for the fused
-    kernels.ops.viterbi_forward_chunk_op, and the path used for odd-length
-    stream tails).  pm: (B, S); bm_chunk: (B, C, M) -> (new_pm, bps (C, B, S)).
+    kernels.ops chunk ops, and the path used for odd-length stream tails).
+    pm: (B, S); bm_chunk: (B, C, M) -> (new_pm, bps (C, B, S)).
     """
 
     def step(pm, bm_t):
@@ -83,7 +143,8 @@ def chunk_forward_scan(
 def stream_step(
     code: ConvCode,
     state: StreamState,
-    bm_chunk: jnp.ndarray,
+    chunk_inputs: jnp.ndarray,
+    weights=None,
     backend: str = "fused",
     normalize: bool = True,
     interpret: Optional[bool] = None,
@@ -91,8 +152,13 @@ def stream_step(
     """One streaming update: advance C steps, commit the C oldest positions.
 
     Args:
-      bm_chunk: (B, C, M) branch metrics for the next C trellis steps.
-      backend: 'fused' (Pallas chunk scan) or 'scan' (jnp reference).
+      chunk_inputs: (B, C, M) branch metrics — or, for the packed backend
+        with in-kernel metrics, (B, C, F) raw features matching ``weights``.
+      weights: (b0, b1, rb) folded metric weights for ``fused_packed``
+        (None -> the bm-table weights; ignored by the other backends).
+      backend: 'fused' (Pallas chunk scan), 'fused_packed' (packed
+        survivors + in-kernel metrics + Pallas traceback; C % 32 == 0), or
+        'scan' (jnp reference).
       normalize: subtract the per-stream min from the path metrics so an
         unbounded stream never overflows float32; the subtracted offset is
         returned so callers can reconstruct absolute metrics.
@@ -105,22 +171,35 @@ def stream_step(
       offset_delta: (B,) the amount subtracted from the path metrics.
     """
     pm, ring = state
-    C = bm_chunk.shape[1]
-    if backend == "fused":
-        from repro.kernels.ops import viterbi_forward_chunk_op
+    C = chunk_inputs.shape[1]
+    if backend == PACKED_BACKEND:
+        from repro.kernels.ops import viterbi_forward_weighted_op, viterbi_traceback_op
+        from repro.kernels.viterbi_scan import table_weights
 
-        new_pm, bps = viterbi_forward_chunk_op(code, pm, bm_chunk, interpret)
-    elif backend == "scan":
-        new_pm, bps = chunk_forward_scan(code, pm, bm_chunk)
+        if C % PACK_BITS:
+            raise ValueError(f"{PACKED_BACKEND} needs chunk % {PACK_BITS} == 0, got {C}")
+        w = table_weights(code) if weights is None else weights
+        new_pm, packed = viterbi_forward_weighted_op(
+            code, pm, chunk_inputs, w, interpret
+        )
+        ring = jnp.concatenate([ring[C // PACK_BITS :], packed], axis=0)
+        best = jnp.argmin(new_pm, axis=-1).astype(jnp.int32)
+        R = ring.shape[0] * PACK_BITS
+        bits = viterbi_traceback_op(code, ring, best, R, interpret)  # (B, R)
     else:
-        raise KeyError(backend)
+        if backend == "fused":
+            from repro.kernels.ops import viterbi_forward_chunk_op
 
-    ring = jnp.concatenate([ring[C:], bps], axis=0)
-
-    # truncated traceback: from the best frontier state back through the
-    # whole window; only the positions >= depth behind the frontier commit.
-    best = jnp.argmin(new_pm, axis=-1).astype(jnp.int32)
-    bits, _ = _traceback(code, ring, best)  # (B, R)
+            new_pm, bps = viterbi_forward_chunk_op(code, pm, chunk_inputs, interpret)
+        elif backend == "scan":
+            new_pm, bps = chunk_forward_scan(code, pm, chunk_inputs)
+        else:
+            raise KeyError(backend)
+        ring = jnp.concatenate([ring[C:], bps], axis=0)
+        # truncated traceback: from the best frontier state back through the
+        # whole window; only the positions >= depth behind the frontier commit.
+        best = jnp.argmin(new_pm, axis=-1).astype(jnp.int32)
+        bits, _ = _traceback(code, ring, best)  # (B, R)
     committed = bits[:, :C]
 
     if normalize:
@@ -140,7 +219,8 @@ def jitted_stream_step(
 ):
     """Compiled stream_step, cached on the static config so every session and
     scheduler with the same (code, backend, flags) shares one executable per
-    (batch, chunk) shape instead of re-tracing per instance."""
+    (batch, chunk) shape instead of re-tracing per instance.  The returned
+    callable takes (state, chunk_inputs[, weights])."""
     return jax.jit(
         functools.partial(
             stream_step, code, backend=backend, normalize=normalize, interpret=interpret
@@ -148,12 +228,21 @@ def jitted_stream_step(
     )
 
 
+def unpack_ring(code: ConvCode, ring: jnp.ndarray) -> jnp.ndarray:
+    """Packed (R/32, B, S) uint32 ring -> unpacked (R, B, S) int32 — the
+    off-hot-path escape hatch for odd-length tails and batched flushes."""
+    from repro.kernels.survivors import unpack_survivors
+
+    return unpack_survivors(ring, ring.shape[0] * PACK_BITS)
+
+
 def stream_flush(
     code: ConvCode,
     state: StreamState,
     terminated: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """End-of-stream traceback over the full ring.
+    """End-of-stream traceback over the full ring (packed or unpacked).
 
     Returns:
       bits: (B, R) bits for every ring position (caller slices the still-
@@ -169,17 +258,28 @@ def stream_flush(
     else:
         final_state = jnp.argmin(pm, axis=-1).astype(jnp.int32)
         metric = pm.min(axis=-1)
-    bits, _ = _traceback(code, ring, final_state)
+    if ring.dtype == jnp.uint32:
+        from repro.kernels.ops import viterbi_traceback_op
+
+        bits = viterbi_traceback_op(
+            code, ring, final_state, ring.shape[0] * PACK_BITS, interpret
+        )
+    else:
+        bits, _ = _traceback(code, ring, final_state)
     return bits, metric
 
 
 @functools.lru_cache(maxsize=None)
-def jitted_stream_flush(code: ConvCode, terminated: bool = True):
+def jitted_stream_flush(
+    code: ConvCode, terminated: bool = True, interpret: Optional[bool] = None
+):
     """Compiled stream_flush, cached per (code, terminated).  Callers with a
     varying number of retiring streams (the scheduler's batched slot flush)
     pad the batch dimension to a fixed size so this compiles once per shape
     instead of once per cohort size."""
-    return jax.jit(functools.partial(stream_flush, code, terminated=terminated))
+    return jax.jit(
+        functools.partial(stream_flush, code, terminated=terminated, interpret=interpret)
+    )
 
 
 @functools.lru_cache(maxsize=None)

@@ -30,7 +30,9 @@ from repro.serve import viterbi_head as vh
 from repro.serve.viterbi_head import ViterbiHead
 
 GRID_CODES = {"k3": CODE_K3_STD, "k7": CODE_K7_NASA}
-EXPECTED_BACKENDS = ("fused", "parallel", "seqparallel", "sequential", "streaming")
+EXPECTED_BACKENDS = (
+    "fused", "fused_packed", "parallel", "seqparallel", "sequential", "streaming"
+)
 
 
 def _quiet_head(**kw) -> ViterbiHead:
@@ -96,7 +98,7 @@ def test_codec_spec_soft_channel_needs_snr(rng):
 # --------------------------------------------------------------------------- #
 
 
-def test_all_five_backends_registered():
+def test_all_builtin_backends_registered():
     assert list_decoders() == tuple(sorted(EXPECTED_BACKENDS))
     for name in EXPECTED_BACKENDS:
         dec = get_decoder(name)
@@ -179,9 +181,9 @@ def test_backend_equivalence_grid(code_name, punctured, metric, terminated,
 # --------------------------------------------------------------------------- #
 
 
-def test_planner_picks_fused_for_short_batched_blocks():
+def test_planner_picks_fused_packed_for_short_batched_blocks():
     plan = plan_decode(CodecSpec(), (32, 256))
-    assert plan.backend == "fused"
+    assert plan.backend == "fused_packed"
     assert "short batched block" in plan.reason
 
 
@@ -248,7 +250,8 @@ def test_decode_one_shot_roundtrip(rng):
     bits = jax.random.bernoulli(rng, 0.5, (4, 48)).astype(jnp.int32)
     rx = spec.channel(jax.random.fold_in(rng, 1), spec.encode(bits), flip_prob=0.01)
     res = decode(DecodeRequest(spec, received=rx))
-    assert res.plan is not None and res.plan.backend == "fused"
+    assert res.plan is not None and res.plan.backend == "fused_packed"
+    assert res.diagnostics["metrics"] == "in-kernel"  # raw rx skipped the bm table
     assert res.info_bits.shape == bits.shape
     assert float((res.info_bits != bits).mean()) < 0.05
     # shorthand form: decode(spec, rx)

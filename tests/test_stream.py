@@ -270,9 +270,9 @@ def test_scheduler_batched_slot_flush(rng, monkeypatch):
     flush_factory = _w.jitted_stream_flush
     calls = {"n": 0}
 
-    def counting_flush(code_, terminated=True):
+    def counting_flush(code_, terminated=True, interpret=None):
         calls["n"] += 1
-        return flush_factory(code_, terminated=terminated)
+        return flush_factory(code_, terminated=terminated, interpret=interpret)
 
     monkeypatch.setattr(_w, "jitted_stream_flush", counting_flush)
     refs = {}
@@ -322,6 +322,140 @@ def test_scheduler_evict(rng):
     assert set(out) == {"s1"}
     with pytest.raises(KeyError):
         sched.evict("nope")
+
+
+# --------------------------------------------------------------------------- #
+# (e) packed-survivor streaming (fused_packed backend)                         #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("code_name", sorted(CODES))
+def test_packed_windowed_bit_exact_when_depth_covers_block(code_name, rng):
+    """fused_packed streaming (packed ring + Pallas traceback) stays bit-
+    identical to the block decoder in the exactness regime."""
+    code = CODES[code_name]
+    _, bm = _noisy_bm(code, rng, 4, 96 - (code.constraint - 1), 0.04)
+    ref_bits, ref_metric = viterbi_decode(code, bm)
+    bits, metric = viterbi_decode_windowed(
+        code, bm, depth=bm.shape[1], chunk=32, backend="fused_packed"
+    )
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(ref_bits))
+    np.testing.assert_allclose(np.asarray(metric), np.asarray(ref_metric), rtol=1e-5)
+
+
+def test_packed_truncated_window_matches_scan_backend(rng):
+    """Away from the exactness regime the packed and unpacked windows must
+    still commit identical bits (same truncation, different survivor
+    format); the packed depth rounds up to a word multiple."""
+    code = CODE_K3_STD
+    _, bm = _noisy_bm(code, rng, 4, 254, 0.03)
+    b_packed, _ = viterbi_decode_windowed(
+        code, bm, depth=32, chunk=32, backend="fused_packed"
+    )
+    b_scan, _ = viterbi_decode_windowed(code, bm, depth=32, chunk=32, backend="scan")
+    np.testing.assert_array_equal(np.asarray(b_packed), np.asarray(b_scan))
+
+
+def test_packed_session_rounds_depth_and_handles_odd_tail(rng):
+    code = CODE_K3_STD
+    _, bm = _noisy_bm(code, rng, 2, 81, 0.02)  # T = 83: odd tail of 19
+    ref_bits, ref_metric = viterbi_decode(code, bm)
+    sess = StreamSession(code, batch=2, chunk=32, depth=bm.shape[1],
+                         backend="fused_packed")
+    assert sess.depth % 32 == 0 and sess.depth >= bm.shape[1]
+    bits, metric = sess.decode_all(bm)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(ref_bits))
+    np.testing.assert_allclose(np.asarray(metric), np.asarray(ref_metric), rtol=1e-5)
+    with pytest.raises(ValueError, match="chunk"):
+        StreamSession(code, chunk=20, backend="fused_packed")
+
+
+def test_packed_session_from_received_in_kernel_metrics(rng):
+    """inputs='received': the session feeds raw symbols and the kernel
+    computes the branch metrics — bit-exact vs the table-fed block decode."""
+    code = CODE_K3_STD
+    bits = jax.random.bernoulli(rng, 0.5, (4, 126)).astype(jnp.int32)
+    coded = encode(code, bits, terminate=True)
+    rx = bsc(jax.random.fold_in(rng, 1), coded, 0.03)
+    bm = hard_branch_metrics(code, rx)
+    ref_bits, ref_metric = viterbi_decode(code, bm)
+    sess = StreamSession(code, batch=4, chunk=32, depth=bm.shape[1],
+                         backend="fused_packed", inputs="received")
+    out, metric = sess.decode_all(rx)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_bits))
+    np.testing.assert_allclose(np.asarray(metric), np.asarray(ref_metric), rtol=1e-5)
+
+
+def test_packed_scheduler_slot_reuse_bit_exact(rng):
+    """Packed hot loop end-to-end through the scheduler: staggered lengths,
+    slot turnover, odd tails — every stream decodes exactly."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=3, chunk=32, depth=250,
+                            backend="fused_packed")
+    refs = {}
+    for i in range(8):
+        k = jax.random.fold_in(rng, i)
+        T = (96, 130, 64, 200)[i % 4]
+        _, bm = _noisy_bm(code, k, 1, T, 0.01)
+        rb, rm = viterbi_decode(code, bm)
+        refs[f"s{i}"] = (np.asarray(rb[0]), float(rm[0]))
+        sched.submit(f"s{i}", bm[0])
+    out = sched.run()
+    assert sched.stats.streams_finished == 8
+    assert sched.stats.slot_claims == 8 > sched.n_slots
+    for sid, (rb, rm) in refs.items():
+        bits, metric = out[sid]
+        np.testing.assert_array_equal(bits, rb)
+        assert abs(metric - rm) < 1e-3 * max(1.0, abs(rm))
+
+
+# --------------------------------------------------------------------------- #
+# (f) device-resident scheduler input arena                                    #
+# --------------------------------------------------------------------------- #
+
+
+def test_scheduler_hot_loop_packs_on_device(rng, monkeypatch):
+    """The per-tick (n_slots, chunk, M) block is gathered from the device
+    arena by slot offset — no host numpy packing in step()."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=4, chunk=16, depth=30, backend="scan")
+    gathers = {"n": 0}
+    orig = sched._gather
+
+    def counting(arena, offs):
+        gathers["n"] += 1
+        return orig(arena, offs)
+
+    monkeypatch.setattr(sched, "_gather", counting)
+    refs = {}
+    for i in range(6):
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, (60, 94)[i % 2], 0.01)
+        rb, _ = viterbi_decode(code, bm)
+        refs[f"s{i}"] = np.asarray(rb[0])
+        sched.submit(f"s{i}", bm[0])
+    out = sched.run()
+    assert gathers["n"] == sched.stats.ticks  # one device gather per tick
+    for sid, rb in refs.items():
+        np.testing.assert_array_equal(out[sid][0], rb)
+
+
+def test_scheduler_arena_compaction_preserves_streams(rng):
+    """Retired segments eventually dominate the arena; compaction rebuilds
+    it around the live streams without disturbing in-flight decodes."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=2, chunk=16, depth=15, backend="scan")
+    sched._compact_floor = 0  # exercise compaction at toy sizes
+    sched._compact_ratio = 2
+    refs = {}
+    for i in range(10):
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, 62, 0.01)
+        rb, _ = viterbi_decode(code, bm)
+        refs[f"s{i}"] = np.asarray(rb[0])
+        sched.submit(f"s{i}", bm[0])
+    out = sched.run()
+    assert sched.stats.arena_compactions > 0
+    for sid, rb in refs.items():
+        np.testing.assert_array_equal(out[sid][0], rb)
 
 
 # --------------------------------------------------------------------------- #
