@@ -1,38 +1,76 @@
-"""Streaming vs. block Viterbi throughput.
+"""Streaming vs. block Viterbi throughput — and sharded-scheduler scaling.
 
-Drives the continuous-batching StreamScheduler with >= 64 concurrent decode
-sessions multiplexed through ONE jitted chunked Pallas call per tick —
-comparing the unpacked ``fused`` hot loop against the ``fused_packed``
-pipeline (bit-packed survivor ring + on-device traceback, device-resident
-input arena) — and reports sustained decoded bits/s against the full-block
-fused decoder on the same workload.  Also re-checks the two correctness
-gates the streaming path promises:
+Two modes:
 
-  * depth >= T      -> bit-identical to core.viterbi.viterbi_decode
-  * depth  = 5K     -> BER within 1e-3 of the full-block decoder
+* default: drives the continuous-batching StreamScheduler with >= 64
+  concurrent decode sessions multiplexed through ONE jitted chunked Pallas
+  call per tick — comparing the unpacked ``fused`` hot loop against the
+  ``fused_packed`` pipeline (bit-packed survivor ring + on-device traceback,
+  device-resident input arena) — and reports sustained decoded bits/s
+  against the full-block fused decoder on the same workload, re-checking the
+  two correctness gates the streaming path promises (depth >= T bit-exact;
+  depth = 5K within 1e-3 BER of the block decoder).
+
+* ``--shards N``: ONE scheduler spanning an N-way ``data`` mesh (the slot
+  table, input arena, and survivor ring partitioned per device, shard_map
+  tick).  The slot table weak-scales — ``--slots-per-shard`` slots per
+  device — so aggregate bits/s measures how throughput grows with the mesh;
+  results land in a per-shard-count table (``stream.by_shards``) inside
+  ``results/BENCH_viterbi.json`` and the run prints the scaling factor vs
+  the recorded ``--shards 1`` row.  On a CPU container the mesh is
+  host-platform devices (``--xla_force_host_platform_device_count``, set
+  below BEFORE jax initializes — it cannot be applied afterwards); on a real
+  TPU slice the same flag-free invocation spans the physical devices.
 
   PYTHONPATH=src python benchmarks/stream_throughput.py [--sessions 64]
       [--steps 512] [--chunk 64] [--flip 0.02] [--backend fused]
+  PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --shards 1
+  PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --shards 8
 
-Results land in ``results/stream_throughput.json`` and are merged into the
-machine-readable ``results/BENCH_viterbi.json`` perf baseline (``stream``
-section).  Numbers from the CPU container are interpret-mode (shape parity
-only); on a real TPU the same code runs the compiled kernels.
+Numbers from the CPU container are interpret-mode / host-platform proxies
+(shape + scheduling parity only); on a real TPU the same code runs the
+compiled kernels.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 from pathlib import Path
 
-import jax
-import numpy as np
 
-from repro.configs.paper_viterbi import DECODE_SPEC, STREAM
-from repro.core.viterbi import viterbi_decode
-from repro.decode import DecodeContext, get_decoder
-from repro.stream import StreamScheduler, viterbi_decode_windowed
+def _force_host_devices() -> None:
+    """--shards N needs N devices, and XLA reads the host-platform device
+    count once, at first backend init — so peek at argv before importing
+    jax (running on a real multi-device platform skips the flag)."""
+    n = None
+    for i, arg in enumerate(sys.argv):
+        if arg == "--shards" and i + 1 < len(sys.argv):
+            n = sys.argv[i + 1]
+        elif arg.startswith("--shards="):
+            n = arg.split("=", 1)[1]
+    try:
+        n = int(n)
+    except (TypeError, ValueError):
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
+_force_host_devices()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.paper_viterbi import DECODE_SPEC, STREAM  # noqa: E402
+from repro.core.viterbi import viterbi_decode  # noqa: E402
+from repro.decode import DecodeContext, get_decoder  # noqa: E402
+from repro.stream import StreamScheduler, viterbi_decode_windowed  # noqa: E402
 
 RESULTS = Path(__file__).resolve().parent / "results"
 BENCH_JSON = RESULTS / "BENCH_viterbi.json"
@@ -45,11 +83,13 @@ def make_workload(spec, key, n_streams, info_bits, flip):
     return info, spec.branch_metrics(rx)
 
 
-def run_scheduler(spec, bm, n_slots, chunk, depth, backend):
+def run_scheduler(spec, bm, n_slots, chunk, depth, backend, mesh=None):
     """Drain all streams through one scheduler; returns (elapsed_s, stats,
-    results, total_bits)."""
+    results, total_bits).  Submission (arena appends) happens before the
+    clock starts: the timed region is the tick loop + flushes."""
     sched = StreamScheduler(
-        spec, n_slots=n_slots, chunk=chunk, depth=depth, backend=backend
+        spec, n_slots=n_slots, chunk=chunk, depth=depth, backend=backend,
+        mesh=mesh, mesh_axis=STREAM.mesh_axis,
     )
     for i in range(bm.shape[0]):
         sched.submit(f"s{i}", bm[i])
@@ -60,27 +100,133 @@ def run_scheduler(spec, bm, n_slots, chunk, depth, backend):
     return elapsed, sched.stats, out, total_bits
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--sessions", type=int, default=STREAM.n_slots)
-    ap.add_argument("--steps", type=int, default=512, help="trellis steps per stream")
-    ap.add_argument("--chunk", type=int, default=STREAM.chunk)
-    ap.add_argument("--flip", type=float, default=0.02)
-    ap.add_argument("--backend", default="fused",
-                    choices=("fused", "fused_packed", "scan"))
-    args = ap.parse_args()
+def _load_bench() -> dict:
+    if BENCH_JSON.exists():
+        try:
+            return json.loads(BENCH_JSON.read_text())
+        except ValueError:
+            pass
+    return {"schema": "bench_viterbi/v2",
+            "generated_by": "benchmarks/stream_throughput.py"}
 
+
+def run_shard_scaling(args) -> None:
+    """One weak-scaled scheduler run on an n-way data mesh; merges a row
+    into the per-shard-count table in BENCH_viterbi.json."""
+    n = args.shards
+    if len(jax.devices()) < n:
+        raise SystemExit(
+            f"--shards {n} needs {n} devices, found {len(jax.devices())} "
+            "(the host-platform flag must be set before jax initializes)"
+        )
+    spec = DECODE_SPEC
+    depth = STREAM.depth(spec.code)
+    slots_per_shard = args.slots_per_shard or (8 if args.smoke else STREAM.n_slots)
+    steps = args.steps if args.steps else (256 if args.smoke else 512)
+    n_slots = STREAM.n_slots_for(n, slots_per_shard)
+    backend = args.backend or "scan"  # pure-XLA hot loop: the host-platform
+    # proxy then measures scheduling + partitioning, not interpret overhead
+    mesh = jax.make_mesh((n,), (STREAM.mesh_axis,))
+    key = jax.random.PRNGKey(0)
+    info_bits = steps - spec.n_flush
+    _, bm = make_workload(spec, key, n_slots, info_bits, args.flip)
+
+    run_scheduler(spec, bm, n_slots, args.chunk, depth, backend, mesh=mesh)  # warm
+    elapsed, stats, out, total_bits = run_scheduler(
+        spec, bm, n_slots, args.chunk, depth, backend, mesh=mesh
+    )
+    assert stats.streams_finished == n_slots
+    platform = jax.devices()[0].platform
+    row = {
+        "shards": n,
+        "slots_per_shard": slots_per_shard,
+        "n_slots": n_slots,
+        "sessions": n_slots,
+        "steps": steps,
+        "chunk": args.chunk,
+        "depth": depth,
+        "backend": backend,
+        "device": platform,
+        "host_cores": os.cpu_count(),
+        "ticks": stats.ticks,
+        "bits_decoded": total_bits,
+        "elapsed_s": elapsed,
+        "wallclock_bits_per_s": total_bits / elapsed,
+    }
+    if n > 1 and platform == "cpu":
+        # Forced host-platform "devices" time-multiplex the same few cores,
+        # so single-controller wall-clock cannot exhibit the concurrency the
+        # partitioned program has (the tick carries NO cross-shard
+        # communication — each shard's slice runs independently).  The
+        # aggregate metric is therefore the device-concurrent proxy: shard
+        # count x the MEASURED one-device rate of the identical per-shard
+        # slot load (one partition of the same program, same process).  On
+        # real multi-chip hardware the wall-clock number itself is the
+        # aggregate and this branch is skipped.
+        mesh1 = jax.make_mesh((1,), (STREAM.mesh_axis,))
+        bm1 = bm[:slots_per_shard]
+        run_scheduler(spec, bm1, slots_per_shard, args.chunk, depth, backend,
+                      mesh=mesh1)  # warm
+        t1, _, _, bits1 = run_scheduler(
+            spec, bm1, slots_per_shard, args.chunk, depth, backend, mesh=mesh1
+        )
+        row["per_device_elapsed_s"] = t1
+        row["per_device_bits_per_s"] = bits1 / t1
+        # the proxy is linear by construction, so never report above n x the
+        # per-device rate (run-to-run jit jitter would otherwise fabricate
+        # superlinear scaling)
+        row["bits_per_s"] = n * (bits1 / t1)
+        row["aggregate_metric"] = "device_concurrent_proxy"
+    else:
+        row["bits_per_s"] = total_bits / elapsed
+        row["aggregate_metric"] = "wallclock"
+    print(f"shards={n}: {n_slots} sessions x {steps} steps (backend {backend}) "
+          f"in {elapsed:.3f}s wallclock "
+          f"-> {row['bits_per_s']:,.0f} bits/s aggregate "
+          f"({row['aggregate_metric']})")
+
+    bench = _load_bench()
+    stream = bench.setdefault("stream", {})
+    table = stream.setdefault("by_shards", {})
+    table[str(n)] = row
+    base = table.get("1")
+    if base:  # (re)derive every row's scaling so invocation order is free
+        for k, r in table.items():
+            if k == "1":
+                continue
+            # proxy rows are linear-by-construction: clamp at the shard
+            # count so jit jitter between the two one-device measurements
+            # can never fabricate superlinear scaling
+            raw = r["bits_per_s"] / base["bits_per_s"]
+            cap = r["shards"] if r["aggregate_metric"] != "wallclock" else raw
+            r["scaling_vs_shards1"] = min(raw, cap)
+            r["wallclock_scaling_vs_shards1"] = (
+                r["wallclock_bits_per_s"] / base["wallclock_bits_per_s"]
+            )
+    if base and n > 1:
+        print(f"scaling vs --shards 1: {row['scaling_vs_shards1']:.2f}x "
+              f"aggregate ({row['aggregate_metric']}); single-controller "
+              f"wallclock ratio {row['wallclock_scaling_vs_shards1']:.2f}x")
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    BENCH_JSON.write_text(json.dumps(bench, indent=1))
+    print(f"merged by_shards[{n}] into {BENCH_JSON}")
+
+
+def run_backend_comparison(args) -> None:
     spec = DECODE_SPEC
     code = spec.code
     depth = STREAM.depth(code)
     key = jax.random.PRNGKey(0)
-    info_bits = args.steps - spec.n_flush
-    info, bm = make_workload(spec, key, args.sessions, info_bits, args.flip)
+    steps = args.steps or 512
+    sessions = args.sessions or STREAM.n_slots
+    backend = args.backend or "fused"
+    info_bits = steps - spec.n_flush
+    info, bm = make_workload(spec, key, sessions, info_bits, args.flip)
     ref_bits, _ = viterbi_decode(code, bm)
 
     # ---------------- correctness gates ---------------- #
     wide, _ = viterbi_decode_windowed(
-        code, bm[:4], depth=args.steps, chunk=args.chunk, backend="scan"
+        code, bm[:4], depth=steps, chunk=args.chunk, backend="scan"
     )
     exact = bool((np.asarray(wide) == np.asarray(ref_bits[:4])).all())
     trunc, _ = viterbi_decode_windowed(
@@ -94,27 +240,27 @@ def main():
     assert exact and abs(ber_win - ber_ref) <= 1e-3
 
     # ---------------- streaming scheduler: requested + packed ---------------- #
-    backends = [args.backend]
+    backends = [backend]
     if "fused_packed" not in backends:
         backends.append("fused_packed")
     sched_rows = {}
-    for backend in backends:
-        run_scheduler(spec, bm, args.sessions, args.chunk, depth, backend)  # warm
+    for bk in backends:
+        run_scheduler(spec, bm, sessions, args.chunk, depth, bk)  # warm
         t_stream, stats, out, total_bits = run_scheduler(
-            spec, bm, args.sessions, args.chunk, depth, backend
+            spec, bm, sessions, args.chunk, depth, bk
         )
         mismatches = sum(
             int((out[f"s{i}"][0] != np.asarray(ref_bits[i])).sum())
-            for i in range(args.sessions)
+            for i in range(sessions)
         )
-        sched_rows[backend] = {
+        sched_rows[bk] = {
             "ticks": stats.ticks,
             "bits_decoded": total_bits,
             "stream_s": t_stream,
             "stream_bits_per_s": total_bits / t_stream,
             "mismatches_vs_block": mismatches,
         }
-        print(f"\nscheduler[{backend}]: {args.sessions} sessions x {args.steps} "
+        print(f"\nscheduler[{bk}]: {sessions} sessions x {steps} "
               f"steps, chunk {args.chunk}, depth {depth}")
         print(f"  {stats.ticks} ticks (one jitted call each), {stats.slot_claims} "
               f"slot claims, {total_bits} bits in {t_stream:.3f}s "
@@ -129,18 +275,18 @@ def main():
     t0 = time.perf_counter()
     jax.block_until_ready(dec(bm))
     t_block = time.perf_counter() - t0
-    total_bits = sched_rows[args.backend]["bits_decoded"]
-    print(f"\nblock fused_packed decode of the same (B={args.sessions}, "
-          f"T={args.steps}) workload: {t_block:.3f}s -> "
+    total_bits = sched_rows[backend]["bits_decoded"]
+    print(f"\nblock fused_packed decode of the same (B={sessions}, "
+          f"T={steps}) workload: {t_block:.3f}s -> "
           f"{total_bits / t_block:,.0f} bits/s")
-    t_stream = sched_rows[args.backend]["stream_s"]
+    t_stream = sched_rows[backend]["stream_s"]
     print(f"streaming/block time ratio: {t_stream / t_block:.2f}x "
           f"(streaming adds the sliding-window traceback per tick but needs "
           f"O(depth+chunk) memory instead of O(T))")
 
     RESULTS.mkdir(parents=True, exist_ok=True)
     payload = {
-        "sessions": args.sessions, "steps": args.steps, "chunk": args.chunk,
+        "sessions": sessions, "steps": steps, "chunk": args.chunk,
         "depth": depth, "schedulers": sched_rows,
         "block_s": t_block, "block_bits_per_s": total_bits / t_block,
         "bit_exact_wide_window": exact,
@@ -149,13 +295,38 @@ def main():
     (RESULTS / "stream_throughput.json").write_text(json.dumps(payload, indent=1))
     print(f"\nwrote {RESULTS / 'stream_throughput.json'}")
 
-    # merge into the shared perf baseline
-    bench = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else {
-        "schema": "bench_viterbi/v1", "generated_by": "benchmarks/stream_throughput.py",
-    }
-    bench["stream"] = payload
+    # merge into the shared perf baseline (by_shards rows are preserved)
+    bench = _load_bench()
+    stream = bench.setdefault("stream", {})
+    by_shards = stream.get("by_shards")
+    stream.clear()
+    stream.update(payload)
+    if by_shards is not None:
+        stream["by_shards"] = by_shards
     BENCH_JSON.write_text(json.dumps(bench, indent=1))
     print(f"merged stream section into {BENCH_JSON}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="trellis steps per stream")
+    ap.add_argument("--chunk", type=int, default=STREAM.chunk)
+    ap.add_argument("--flip", type=float, default=0.02)
+    ap.add_argument("--backend", default=None,
+                    choices=("fused", "fused_packed", "scan"))
+    ap.add_argument("--shards", type=int, default=0,
+                    help="run the sharded-scheduler scaling mode on an N-way "
+                         "data mesh (weak-scaled: --slots-per-shard per device)")
+    ap.add_argument("--slots-per-shard", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI shapes for the scaling mode")
+    args = ap.parse_args()
+    if args.shards:
+        run_shard_scaling(args)
+    else:
+        run_backend_comparison(args)
 
 
 if __name__ == "__main__":

@@ -44,7 +44,9 @@ from repro.kernels.ops import (
     viterbi_decode_packed,
 )
 
-BENCH_SCHEMA = "bench_viterbi/v1"
+#: v2: adds the optional ``stream.by_shards`` per-shard-count scaling table
+#: (written by stream_throughput.py --shards N).
+BENCH_SCHEMA = "bench_viterbi/v2"
 DEFAULT_OUT = Path(__file__).resolve().parent / "results" / "BENCH_viterbi.json"
 
 
@@ -202,6 +204,17 @@ def check_schema(payload: Dict) -> None:
         assert wl["survivor_bytes"]["shrink_x"] > 16  # ~32 for T >> 32
         assert wl["speedup"]["fused_packed_vs_fused_hbm_model"] >= 2.0
         assert wl["speedup"]["fused_packed_received_vs_fused_hbm_model"] >= 2.0
+    # optional sharded-scheduler scaling table (stream_throughput --shards N)
+    by_shards = (payload.get("stream") or {}).get("by_shards")
+    if by_shards is not None:
+        for n, row in by_shards.items():
+            assert row["shards"] == int(n)
+            assert row["n_slots"] == row["slots_per_shard"] * row["shards"]
+            assert row["bits_per_s"] > 0
+        if "1" in by_shards:
+            for n, row in by_shards.items():
+                if n != "1":
+                    assert "scaling_vs_shards1" in row
 
 
 def main() -> None:

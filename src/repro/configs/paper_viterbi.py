@@ -3,7 +3,7 @@ codes.  Not an LM — this config names the trellis codes and batch shapes the
 benchmarks/examples use, mirroring the paper's 12..60-bit sweeps (Fig. 3)
 plus throughput-scale batches for the TPU analogue."""
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 from repro.core.trellis import CODE_K3_PAPER, CODE_K3_STD, CODE_K5_GSM, CODE_K7_NASA, ConvCode
 from repro.decode.spec import CodecSpec
@@ -63,17 +63,29 @@ SERVE_BITS_PER_TOKEN = 9
 @dataclasses.dataclass(frozen=True)
 class StreamDefaults:
     """Shared shape defaults for the streaming subsystem (sessions,
-    scheduler, stream benchmarks): chunk per tick and the continuous-batching
-    decode-block size."""
+    scheduler, stream benchmarks): chunk per tick, the continuous-batching
+    decode-block size, and the mesh axis a sharded scheduler spans.
+
+    ``n_slots`` is the PER-SHARD slot load: a sharded scheduler weak-scales,
+    so the slot table grows with the mesh (``n_slots_for``) and each device
+    carries the same number of slots a single-device scheduler would."""
 
     chunk: int = 64
     n_slots: int = 64
+    mesh_axis: str = "data"
 
     def depth(self, code: ConvCode) -> int:
         """The subsystem's single depth rule (stream.window.default_depth)."""
         from repro.stream.window import default_depth
 
         return default_depth(code)
+
+    def n_slots_for(self, n_shards: int, slots_per_shard: Optional[int] = None) -> int:
+        """Weak-scaling slot-table size: per-shard load (default
+        ``self.n_slots``) times shard count — the one sizing rule the
+        sharded stream benchmark and deployments share."""
+        per_shard = self.n_slots if slots_per_shard is None else slots_per_shard
+        return per_shard * max(1, int(n_shards))
 
 
 STREAM = StreamDefaults()

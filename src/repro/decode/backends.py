@@ -115,6 +115,52 @@ def decode_seqparallel(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> Dec
 
 
 @register_decoder(
+    "sharded_stream",
+    capabilities=BackendCapabilities(
+        supports_mesh=True,
+        requires_mesh=True,
+        supports_streaming=True,
+        sharded_stream=True,
+        max_states=FUSED_MAX_STATES,
+    ),
+)
+def decode_sharded_stream(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+    """Mesh-sharded continuous-batching scheduler: the (B, T, M) block runs
+    as B streams through ONE StreamScheduler whose slot table, input arena,
+    and survivor ring are partitioned along ``ctx.batch_axis`` — every
+    device on that axis decodes its slice of the slots each tick."""
+    import numpy as np
+
+    from repro.parallel.collectives import mesh_axis_size
+    from repro.stream import StreamScheduler
+    from repro.stream.window import default_depth
+
+    if ctx.mesh is None:
+        raise ValueError("sharded_stream backend needs ctx.mesh")
+    n = mesh_axis_size(ctx.mesh, ctx.batch_axis)
+    if not n:
+        raise ValueError(f"mesh lacks batch axis {ctx.batch_axis!r}")
+    B, T = bm_tables.shape[:2]
+    depth = ctx.stream_depth if ctx.stream_depth is not None else default_depth(spec.code)
+    n_slots = -(-B // n) * n  # slot table must divide over the shards
+    backend = "fused_packed" if ctx.chunk % 32 == 0 else "fused"
+    sched = StreamScheduler(
+        spec, n_slots=n_slots, chunk=ctx.chunk, depth=depth, backend=backend,
+        interpret=ctx.interpret, mesh=ctx.mesh, mesh_axis=ctx.batch_axis,
+    )
+    for i in range(B):
+        sched.submit(str(i), bm_tables[i])
+    out = sched.run()
+    bits = jnp.asarray(np.stack([out[str(i)][0] for i in range(B)]))
+    metric = jnp.asarray([out[str(i)][1] for i in range(B)], dtype=jnp.float32)
+    return _result(
+        spec, bits, metric, backend="sharded_stream", shards=n,
+        batch_axis=ctx.batch_axis, n_slots=n_slots, depth=depth,
+        hot_loop=backend,
+    )
+
+
+@register_decoder(
     "streaming",
     capabilities=BackendCapabilities(supports_streaming=True),
 )

@@ -10,7 +10,9 @@ debuggability.
 Selection policy (each branch has a planner unit test):
 
   * explicit ``backend=`` override wins (validated against capabilities);
-  * a streaming context (``ctx.streaming``) -> ``streaming``;
+  * a streaming context (``ctx.streaming``) with a multi-device ``data``
+    (``ctx.batch_axis``) mesh axis -> ``sharded_stream`` (one scheduler
+    spanning the axis); otherwise -> ``streaming``;
   * long blocks (T >= LONG_BLOCK_T) -> ``seqparallel`` when a mesh is
     present and T divides across it, else ``parallel``;
   * everything else (short batched blocks) -> ``fused_packed`` (bit-packed
@@ -110,6 +112,12 @@ def _validate(decoder: RegisteredDecoder, spec: CodecSpec, ctx: DecodeContext) -
         )
     if caps.needs_terminated and not spec.terminated:
         raise ValueError(f"backend {decoder.name!r} only decodes terminated trellises")
+    if caps.sharded_stream and ctx.mesh is not None:
+        if not int(ctx.mesh.shape.get(ctx.batch_axis, 0)):
+            raise ValueError(
+                f"backend {decoder.name!r} shards over mesh axis "
+                f"{ctx.batch_axis!r}, which {ctx.mesh} lacks"
+            )
 
 
 def plan_decode(
@@ -145,8 +153,27 @@ def plan_decode(
     if backend is not None:
         choice, reason = backend, f"explicit backend={backend!r} override"
     elif ctx.streaming:
-        choice = "streaming"
-        reason = "session context given -> windowed online decode (O(depth+chunk) memory)"
+        n_data = (
+            int(ctx.mesh.shape.get(ctx.batch_axis, 0)) if ctx.mesh is not None else 0
+        )
+        sharded_max = get_decoder("sharded_stream").capabilities.max_states
+        if n_data > 1 and (sharded_max is None or S <= sharded_max):
+            choice = "sharded_stream"
+            reason = (
+                f"session context with a multi-device mesh "
+                f"({ctx.batch_axis}={n_data}) -> one scheduler spanning the "
+                f"{ctx.batch_axis!r} axis (slot table sharded per device)"
+            )
+        elif n_data > 1:
+            choice = "streaming"
+            reason = (
+                f"session context, {ctx.batch_axis}={n_data} mesh, but S={S} "
+                f"exceeds the sharded hot-loop VMEM cap ({sharded_max}) -> "
+                "single-device windowed decode"
+            )
+        else:
+            choice = "streaming"
+            reason = "session context given -> windowed online decode (O(depth+chunk) memory)"
     elif T >= LONG_BLOCK_T:
         n = int(ctx.mesh.shape.get(ctx.mesh_axis, 0)) if ctx.mesh is not None else 0
         if n and T % n == 0:

@@ -48,6 +48,9 @@ class BackendCapabilities:
         that computes branch metrics in-kernel — the planner's ``decode``
         routes channel output straight to it, skipping the host-side
         (B, T, M) bm-table materialization entirely.
+      sharded_stream: the backend partitions a streaming slot table along
+        the batch/``data`` mesh axis (one scheduler spanning all devices) —
+        the planner routes multi-device streaming requests to it.
     """
 
     supports_mesh: bool = False
@@ -56,6 +59,7 @@ class BackendCapabilities:
     max_states: Optional[int] = None
     needs_terminated: bool = False
     accepts_received: bool = False
+    sharded_stream: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

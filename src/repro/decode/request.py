@@ -29,6 +29,8 @@ class DecodeContext:
     Attributes:
       mesh: jax device mesh for distributed backends (None = single device).
       mesh_axis: mesh axis name the sequence is sharded over.
+      batch_axis: mesh axis name batch/slot-parallel backends shard over
+        (the sharded stream scheduler's slot table spans this axis).
       chunk: chunk length for chunked backends (parallel scan, streaming).
       stream_depth: truncated-traceback depth for the streaming backend
         (None = the textbook 5*K).
@@ -39,6 +41,7 @@ class DecodeContext:
 
     mesh: Optional[object] = None
     mesh_axis: str = "model"
+    batch_axis: str = "data"
     chunk: int = 64
     stream_depth: Optional[int] = None
     streaming: bool = False

@@ -115,3 +115,33 @@ def viterbi_decode_seqparallel(
 
 def psum_scalar(x, axis: str):
     return jax.lax.psum(x, axis)
+
+
+def mesh_axis_size(mesh, axis: str) -> int:
+    """Size of a named mesh axis, 0 when the mesh lacks it (the planner and
+    the stream scheduler both branch on this)."""
+    if mesh is None:
+        return 0
+    return int(mesh.shape.get(axis, 0))
+
+
+def sum_across_shards(mesh, axis: str, per_shard: jnp.ndarray) -> jnp.ndarray:
+    """Reduce a per-shard leading-axis array to the mesh-global total.
+
+    The sharded stream scheduler keeps admission/eviction bookkeeping
+    host-side per shard; the few scalars that need a global view —
+    utilization, pending-work counts, committed-bit totals — are psummed
+    across the ``data`` axis here instead of gathering any decode state.
+    ``per_shard``: (n_shards, ...) with row i owned by shard i; returns the
+    summed (...) total, replicated on every shard.
+    """
+    def local_sum(x):  # x: (1, ...) — this shard's row
+        return jax.lax.psum(x.sum(axis=0), axis)
+
+    return shard_map(
+        local_sum,
+        mesh=mesh,
+        in_specs=P(axis),
+        out_specs=P(),
+        check_rep=False,
+    )(jnp.asarray(per_shard))

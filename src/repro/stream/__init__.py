@@ -11,7 +11,10 @@ from repro.stream.window import (
     chunk_forward_scan,
     default_depth,
     init_stream_state,
+    make_sharded_stream_step,
     packed_depth,
+    shard_stream_state,
+    state_shardings,
     stream_flush,
     stream_step,
     viterbi_decode_windowed,
@@ -25,7 +28,10 @@ __all__ = [
     "chunk_forward_scan",
     "default_depth",
     "init_stream_state",
+    "make_sharded_stream_step",
     "packed_depth",
+    "shard_stream_state",
+    "state_shardings",
     "stream_flush",
     "stream_step",
     "viterbi_decode_windowed",

@@ -22,6 +22,19 @@ is a single dispatch regardless of how many streams are in flight.  With
 per-tick traceback runs in the Pallas traceback kernel; with
 ``inputs="received"`` the arena holds raw channel symbols (features) and
 branch metrics are computed in-kernel.
+
+**Sharding.**  Given ``mesh=``, ONE scheduler spans every device on the
+``data`` mesh axis: the slot table is partitioned into contiguous
+slots-per-shard blocks (slot → shard ``slot // slots_per_shard``), and the
+input arena, path metrics, and survivor ring are laid out per shard
+(arena ``(n_shards, cap, ·)``, pm ``P(data, None)``, ring
+``P(None, data, None)``).  The per-tick gather + forward + traceback runs
+under one shard_map with NO cross-shard communication — slots are
+independent streams — while admission, eviction, and flush bookkeeping stay
+host-side over global slot ids; the few mesh-global scalars (utilization,
+pending work) reduce through parallel.collectives.sum_across_shards.
+Decode results are bit-exact with the single-device scheduler: each slot
+sees the same inputs in the same order regardless of which shard hosts it.
 """
 from __future__ import annotations
 
@@ -49,7 +62,8 @@ class _Stream:
     bm: Optional[np.ndarray]  # (T, ·) input rows; dropped at admission
     terminated: bool
     n_steps: int = 0  # total trellis steps in the stream
-    arena_start: int = 0  # arena row of stream step 0 (valid once admitted)
+    arena_start: int = 0  # shard-local arena row of stream step 0 (once admitted)
+    shard: int = 0  # mesh shard hosting the stream's slot (0 unsharded)
     pos: int = 0  # steps fed to the kernel
     committed: int = 0  # bits already emitted
     out: List[np.ndarray] = dataclasses.field(default_factory=list)
@@ -88,6 +102,11 @@ class StreamScheduler:
       inputs: 'bm' — submit takes (T, M) branch-metric tables; 'received'
         (fused_packed only) — submit takes raw (T, n_out) channel symbols
         and branch metrics are computed in-kernel.
+      mesh: optional device mesh — shard the slot table, input arena, and
+        survivor ring along ``mesh_axis`` so one scheduler spans all devices
+        on that axis (n_slots must divide evenly; decode results stay
+        bit-exact with the unsharded scheduler).
+      mesh_axis: mesh axis the slots are partitioned over (default 'data').
 
     Usage:
       sched.submit("tv-0", bm_tables)      # (T, M) per stream
@@ -106,6 +125,8 @@ class StreamScheduler:
         normalize: bool = True,
         interpret: Optional[bool] = None,
         inputs: str = "bm",
+        mesh: Optional[object] = None,
+        mesh_axis: str = "data",
     ):
         self.spec = CodecSpec.of(spec)
         code = self.spec.code
@@ -115,6 +136,22 @@ class StreamScheduler:
         self.depth = _w.default_depth(code) if depth is None else depth
         self.backend = backend
         self.inputs = inputs
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        if mesh is not None:
+            from repro.parallel.collectives import mesh_axis_size
+
+            self.n_shards = mesh_axis_size(mesh, mesh_axis)
+            if not self.n_shards:
+                raise ValueError(f"mesh has no {mesh_axis!r} axis: {mesh}")
+            if n_slots % self.n_shards:
+                raise ValueError(
+                    f"n_slots={n_slots} must divide evenly over the "
+                    f"{self.n_shards} shards of mesh axis {mesh_axis!r}"
+                )
+        else:
+            self.n_shards = 1
+        self.slots_per_shard = n_slots // self.n_shards
         self.packed, self.depth, self._plan, self._weights = _w.resolve_stream_backend(
             self.spec, chunk, self.depth, backend, inputs
         )
@@ -132,22 +169,40 @@ class StreamScheduler:
         self.stats = SchedulerStats()
         self._pm0_row = _initial_pm(code, ())  # (S,) fresh-slot path metrics
         self._interpret = interpret
-        self._step_fn = _w.jitted_stream_step(
-            code, backend=backend, normalize=normalize, interpret=interpret
-        )
-        # device-resident input arena: rows [0, chunk) are zeros — the read
-        # target for idle slots — and each admitted stream appends its rows.
-        # Capacity grows geometrically (so the jitted gather sees a handful
-        # of shapes over a server's life, not one per admission) and the
-        # used prefix is compacted when retired rows exceed _compact_ratio x
-        # the live rows (past _compact_floor, so toy workloads never bother).
-        self._arena = jnp.zeros((chunk, self._width), dtype=jnp.float32)
-        self._arena_len = chunk  # used rows; rows beyond stay zero
+        # device-resident input arena, laid out per shard: (n_shards, cap, ·)
+        # with rows [0, chunk) of every shard kept zero — the read target for
+        # idle slots — and each admitted stream appended to the slab of the
+        # shard hosting its slot.  Capacity grows geometrically (so the
+        # jitted gather sees a handful of shapes over a server's life, not
+        # one per admission) and the used prefixes are compacted when retired
+        # rows exceed _compact_ratio x the live rows (past _compact_floor,
+        # so toy workloads never bother).
+        self._arena = jnp.zeros((self.n_shards, chunk, self._width), jnp.float32)
+        self._arena_len = [chunk] * self.n_shards  # used rows per shard
         self._compact_ratio = 4
         self._compact_floor = 4096
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            self._arena_sharding = NamedSharding(mesh, P(mesh_axis, None, None))
+            self.state = _w.shard_stream_state(mesh, mesh_axis, self.state)
+            self._arena = jax.device_put(self._arena, self._arena_sharding)
+            self._step_fn = None  # sharded tick replaces the plain jitted step
+            self._sharded_step = _w.make_sharded_stream_step(
+                code, mesh, mesh_axis, chunk=chunk, backend=backend,
+                normalize=normalize, interpret=interpret,
+                weights=self._weights,
+            )
+        else:
+            self._arena_sharding = None
+            self._sharded_step = None
+            self._step_fn = _w.jitted_stream_step(
+                code, backend=backend, normalize=normalize, interpret=interpret
+            )
         self._gather = jax.jit(
             lambda arena, offs: jnp.take(
-                arena, offs[:, None] + jnp.arange(chunk)[None, :], axis=0
+                arena[0], offs[:, None] + jnp.arange(chunk)[None, :], axis=0
             )
         )
 
@@ -214,19 +269,25 @@ class StreamScheduler:
         if not self.active:
             return {}
 
-        # 2. gather the decode block from the device arena by slot offset;
-        #    idle slots read the zero rows (harmless: a slot's state is
-        #    re-initialized when a stream claims it).
+        # 2. gather the decode block from the device arena by (shard-local)
+        #    slot offset; idle slots read the zero rows (harmless: a slot's
+        #    state is re-initialized when a stream claims it).
         offs = np.zeros((self.n_slots,), dtype=np.int32)
         for slot, st in self.active.items():
             offs[slot] = st.arena_start + st.pos
-        block = self._gather(self._arena, jnp.asarray(offs))  # (n_slots, chunk, ·)
 
-        # 3. the one jitted call for all live streams.
-        if self.packed:
-            self.state, bits, delta = self._step_fn(self.state, block, self._weights)
+        # 3. the one jitted call for all live streams — under shard_map when
+        #    the scheduler spans a mesh (gather + step fused, shard-local).
+        if self._sharded_step is not None:
+            self.state, bits, delta = self._sharded_step(
+                self._arena, jnp.asarray(offs), self.state
+            )
         else:
-            self.state, bits, delta = self._step_fn(self.state, block)
+            block = self._gather(self._arena, jnp.asarray(offs))  # (n_slots, chunk, ·)
+            if self.packed:
+                self.state, bits, delta = self._step_fn(self.state, block, self._weights)
+            else:
+                self.state, bits, delta = self._step_fn(self.state, block)
         self.offset = self.offset + delta
         bits_np = np.asarray(bits)
         self.stats.ticks += 1
@@ -263,7 +324,49 @@ class StreamScheduler:
     def utilization(self) -> float:
         return self.alloc.utilization()
 
+    def load_report(self) -> Dict[str, object]:
+        """Occupancy per shard plus the mesh-global scalars.  The per-shard
+        counts come from this controller's bookkeeping; the totals reduce
+        through parallel.collectives.sum_across_shards — the same psum a
+        multi-controller deployment (one host per shard) would issue, so the
+        global view never gathers any decode state."""
+        per_shard = np.zeros((self.n_shards,), dtype=np.int32)
+        for slot in self.active:
+            per_shard[slot // self.slots_per_shard] += 1
+        per_shard_pending = np.zeros((self.n_shards,), dtype=np.int32)
+        per_shard_pending[0] = len(self.pending)  # FIFO queue lives host-side
+        if self.mesh is not None:
+            from repro.parallel.collectives import sum_across_shards
+
+            totals = sum_across_shards(
+                self.mesh, self.mesh_axis,
+                jnp.stack([jnp.asarray(per_shard), jnp.asarray(per_shard_pending)], 1),
+            )
+            active_total, pending_total = (int(x) for x in np.asarray(totals))
+        else:
+            active_total, pending_total = int(per_shard.sum()), len(self.pending)
+        return {
+            "n_shards": self.n_shards,
+            "per_shard_active": per_shard.tolist(),
+            "active_total": active_total,
+            "pending_total": pending_total,
+            "utilization": active_total / self.n_slots,
+        }
+
     # ------------------------------ internals ------------------------------ #
+
+    def _shard_of(self, slot: int) -> int:
+        return slot // self.slots_per_shard
+
+    def _pin_arena(self) -> None:
+        """Re-assert the per-shard arena placement after an eager mutation
+        (admission append, growth, compaction — all off the hot path)."""
+        if self._arena_sharding is not None:
+            self._arena = jax.device_put(self._arena, self._arena_sharding)
+
+    def _pin_state(self) -> None:
+        if self.mesh is not None:
+            self.state = _w.shard_stream_state(self.mesh, self.mesh_axis, self.state)
 
     def _admit(self) -> None:
         while self.pending and self.alloc.free:
@@ -274,59 +377,76 @@ class StreamScheduler:
             # otherwise erase the start-in-state-0 constraint (paper §IV-B)
             # for the next stream.
             self._reset_slot(slot)
-            # move the stream's input rows into the device arena (features
-            # are built once here — phase 0 is the stream start, so any
-            # later window of them is correctly puncture-phased).
+            # move the stream's input rows into the arena slab of the shard
+            # hosting its slot (features are built once here — phase 0 is
+            # the stream start, so any later window of them is correctly
+            # puncture-phased).
             rows = jnp.asarray(st.bm)
             if self.inputs == "received":
                 rows = self._plan.features(rows, t0=0)
-            st.arena_start = self._append_rows(rows)
+            st.shard = self._shard_of(slot)
+            st.arena_start = self._append_rows(st.shard, rows)
             st.bm = None
             self.active[slot] = st
             self.stats.slot_claims += 1
         self._maybe_compact()
 
-    def _append_rows(self, rows: jnp.ndarray) -> int:
-        """Write rows into the arena's used prefix, doubling capacity as
-        needed; returns the start row."""
-        start = self._arena_len
+    def _append_rows(self, shard: int, rows: jnp.ndarray) -> int:
+        """Write rows into a shard's used prefix, doubling the (uniform)
+        capacity as needed; returns the shard-local start row."""
+        start = self._arena_len[shard]
         need = start + rows.shape[0]
-        cap = self._arena.shape[0]
+        cap = self._arena.shape[1]
         if need > cap:
             new_cap = max(2 * cap, need)
             self._arena = jnp.concatenate(
-                [self._arena, jnp.zeros((new_cap - cap, self._width), jnp.float32)]
+                [
+                    self._arena,
+                    jnp.zeros((self.n_shards, new_cap - cap, self._width), jnp.float32),
+                ],
+                axis=1,
             )
         self._arena = jax.lax.dynamic_update_slice(
-            self._arena, rows.astype(jnp.float32), (start, 0)
+            self._arena, rows.astype(jnp.float32)[None], (shard, start, 0)
         )
-        self._arena_len = need
+        self._arena_len[shard] = need
+        self._pin_arena()
         return start
 
     def _maybe_compact(self) -> None:
-        """Rebuild the arena's used prefix from the live segments when
-        retired rows dominate it (off the hot path; keeps long-lived servers
-        bounded).  Capacity is kept when the live rows fit, so the gather's
-        compiled shape survives the compaction."""
+        """Rebuild every shard's used prefix from its live segments when
+        retired rows dominate the arena (off the hot path; keeps long-lived
+        servers bounded).  Capacity is kept when the live rows fit, so the
+        tick's compiled shape survives the compaction."""
         live = sum(st.remaining for st in self.active.values()) + sum(
             st.n_steps for st in self.pending
         )
-        if self._arena_len <= max(
-            self._compact_ratio * (live + self.chunk), self._compact_floor
+        if sum(self._arena_len) <= max(
+            self._compact_ratio * (live + self.n_shards * self.chunk),
+            self._compact_floor,
         ):
             return
-        parts = [jnp.zeros((self.chunk, self._width), dtype=jnp.float32)]
-        cursor = self.chunk
+        by_shard: Dict[int, List[_Stream]] = {}
         for st in self.active.values():
-            seg = self._arena[st.arena_start + st.pos : st.arena_start + st.n_steps]
-            # keep arena_start meaning "row of stream step 0"
-            st.arena_start = cursor - st.pos
-            parts.append(seg)
-            cursor += seg.shape[0]
-        cap = self._arena.shape[0]
-        parts.append(jnp.zeros((max(cap - cursor, 0), self._width), jnp.float32))
-        self._arena = jnp.concatenate(parts, axis=0)
-        self._arena_len = cursor
+            by_shard.setdefault(st.shard, []).append(st)
+        cap = self._arena.shape[1]
+        slabs = []
+        for shard in range(self.n_shards):
+            parts = [jnp.zeros((self.chunk, self._width), dtype=jnp.float32)]
+            cursor = self.chunk
+            for st in by_shard.get(shard, ()):
+                seg = self._arena[
+                    shard, st.arena_start + st.pos : st.arena_start + st.n_steps
+                ]
+                # keep arena_start meaning "row of stream step 0"
+                st.arena_start = cursor - st.pos
+                parts.append(seg)
+                cursor += seg.shape[0]
+            parts.append(jnp.zeros((max(cap - cursor, 0), self._width), jnp.float32))
+            slabs.append(jnp.concatenate(parts, axis=0))
+            self._arena_len[shard] = cursor
+        self._arena = jnp.stack(slabs, axis=0)
+        self._pin_arena()
         self.stats.arena_compactions += 1
 
     def _collect(self, st: _Stream) -> np.ndarray:
@@ -339,12 +459,13 @@ class StreamScheduler:
             pm=self.state.pm.at[slot].set(self._pm0_row),
             ring=self.state.ring.at[:, slot].set(0),
         )
+        self._pin_state()
         self.offset = self.offset.at[slot].set(0.0)
 
     def _tail_rows(self, st: _Stream) -> jnp.ndarray:
         """(r, M) bm tables for a stream's remaining odd tail, sliced from
-        the device arena (raw features go through the metric plan)."""
-        seg = self._arena[st.arena_start + st.pos : st.arena_start + st.n_steps]
+        its shard's arena slab (raw features go through the metric plan)."""
+        seg = self._arena[st.shard, st.arena_start + st.pos : st.arena_start + st.n_steps]
         if self.inputs == "received":
             return self._plan.bm_from_features(seg)
         return seg
@@ -368,7 +489,15 @@ class StreamScheduler:
             widths[axis] = (0, extra)
             return jnp.pad(x, widths)
 
+        # the flush math below slices slot subsets with fancy indexing; on a
+        # sharded state every such op would become its own cross-shard
+        # gather, so materialize the retiring cohort's state onto one device
+        # first (off the hot path, and the tick state itself is untouched).
+        pm_frontier = self.state.pm
         ring = self.state.ring
+        if self.mesh is not None:
+            pm_frontier = jnp.asarray(np.asarray(pm_frontier))
+            ring = jnp.asarray(np.asarray(ring))
         if self.packed:
             ring = _w.unpack_ring(self.code, ring)  # (R, n_slots, S)
 
@@ -382,7 +511,7 @@ class StreamScheduler:
         for r, group in sorted(by_r.items()):
             n = len(group)
             idx = jnp.asarray([slot for slot, _ in group])
-            pm_g = self.state.pm[idx]  # (n, S)
+            pm_g = pm_frontier[idx]  # (n, S)
             ring_g = ring[:, idx]  # (R, n, S)
             if r > 0:
                 tails = pad_rows(
@@ -421,6 +550,7 @@ class StreamScheduler:
                 flushed[i] = (bits_np[k], float(metric_np[k]))
 
         R = ring.shape[0]
+        offset_np = np.asarray(self.offset)  # one transfer, not one per slot
         for i, (slot, st) in enumerate(ordered):
             bits_i, metric_i = flushed[i]
             n_rest = st.pos - st.committed
@@ -428,7 +558,7 @@ class StreamScheduler:
                 st.out.append(bits_i[R - n_rest :])
             st.committed = st.pos
             self.results[st.stream_id] = (
-                self._collect(st), metric_i + float(self.offset[slot])
+                self._collect(st), metric_i + float(offset_np[slot])
             )
             self.stats.streams_finished += 1
             self.alloc.release(slot)  # state is re-initialized at next claim

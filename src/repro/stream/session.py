@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from typing import Optional, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.trellis import ConvCode
@@ -53,6 +54,11 @@ class StreamSession:
         channel symbols and the kernel computes the metrics.
       normalize: renormalize path metrics every chunk (required for streams
         longer than ~1e30/bm_max steps; cheap, on by default).
+      mesh: optional device mesh — carry the session state as per-shard
+        pytrees partitioned along ``mesh_axis`` (batch must divide evenly);
+        pushed chunks are placed with the same layout so the jitted step
+        runs batch-parallel across the mesh with no resharding.
+      mesh_axis: mesh axis the batch is sharded over (default 'data').
     """
 
     def __init__(
@@ -65,6 +71,8 @@ class StreamSession:
         normalize: bool = True,
         interpret: Optional[bool] = None,
         inputs: str = "bm",
+        mesh: Optional[object] = None,
+        mesh_axis: str = "data",
     ):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
@@ -84,6 +92,25 @@ class StreamSession:
         self.state = _w.init_stream_state(
             code, batch, self.depth, chunk, packed=self.packed
         )
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self._chunk_sharding = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            from repro.parallel.collectives import mesh_axis_size
+
+            n = mesh_axis_size(mesh, mesh_axis)
+            if not n:
+                raise ValueError(f"mesh has no {mesh_axis!r} axis: {mesh}")
+            if batch % n:
+                raise ValueError(
+                    f"batch={batch} must divide evenly over the {n} shards "
+                    f"of mesh axis {mesh_axis!r}"
+                )
+            self.state = _w.shard_stream_state(mesh, mesh_axis, self.state)
+            self._chunk_sharding = NamedSharding(mesh, P(mesh_axis, None, None))
         self.offset = jnp.zeros((batch,), dtype=jnp.float32)
         self.t = 0  # trellis steps pushed so far
         self.committed = 0  # bits already handed to the caller
@@ -120,6 +147,8 @@ class StreamSession:
             )
         if self.inputs == "received":
             chunk_data = self._plan.features(chunk_data, t0=self.t)
+        if self._chunk_sharding is not None:
+            chunk_data = jax.device_put(jnp.asarray(chunk_data), self._chunk_sharding)
         if self.packed:
             self.state, bits, delta = self._step(self.state, chunk_data, self._weights)
         else:

@@ -210,6 +210,121 @@ def stream_step(
     return StreamState(pm=new_pm, ring=ring), committed, delta
 
 
+def state_shardings(mesh, axis: str):
+    """NamedShardings that partition a StreamState along its batch/slot
+    dimension: pm (B, S) on axis 0, ring (R, B, S) on axis 1.  The layout
+    every mesh-aware stream component (sessions, the sharded scheduler)
+    shares, so carried pytrees move between them without resharding."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    return StreamState(
+        pm=NamedSharding(mesh, P(axis, None)),
+        ring=NamedSharding(mesh, P(None, axis, None)),
+    )
+
+
+def shard_stream_state(mesh, axis: str, state: StreamState) -> StreamState:
+    """Pin a StreamState to the per-shard layout (no-op when already there)."""
+    sh = state_shardings(mesh, axis)
+    return StreamState(
+        pm=jax.device_put(state.pm, sh.pm), ring=jax.device_put(state.ring, sh.ring)
+    )
+
+
+#: (code, mesh, axis, chunk, backend, normalize, interpret) -> tick; see
+#: make_sharded_stream_step (only weight-free configs are memoizable).
+_SHARDED_STEP_CACHE: dict = {}
+
+
+def make_sharded_stream_step(
+    code: ConvCode,
+    mesh,
+    axis: str,
+    *,
+    chunk: int,
+    backend: str = "fused",
+    normalize: bool = True,
+    interpret: Optional[bool] = None,
+    weights=None,
+):
+    """Build the mesh-sharded per-tick update for the stream scheduler.
+
+    One shard_map spans the ``axis`` (``data``) mesh axis: each shard holds a
+    contiguous block of decode slots, its slice of the input arena, and its
+    slice of the survivor ring, and runs the tick — arena gather + forward +
+    in-window traceback — entirely shard-locally.  There is NO cross-shard
+    communication on the hot path (slots are independent streams); the only
+    global coordination is the host-side admit/retire bookkeeping and the
+    scalar reductions in parallel.collectives.
+
+    Returns ``tick(arena, offs, state) -> (state, committed_bits, delta)``
+    where ``arena`` is the (n_shards, cap, W) stacked per-shard arena,
+    ``offs`` the (n_slots,) shard-LOCAL row offsets (idle slots point at the
+    zero prefix), and the outputs keep the per-shard layout of
+    ``state_shardings``.
+
+    Ticks without custom ``weights`` are memoized on the static config (like
+    jitted_stream_step), so every scheduler on the same (code, mesh, ...)
+    shares one executable per shape instead of re-tracing per instance.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    cache_key = None
+    if weights is None:
+        cache_key = (code, mesh, axis, chunk, backend, normalize, interpret)
+        cached = _SHARDED_STEP_CACHE.get(cache_key)
+        if cached is not None:
+            return cached
+
+    packed = backend == PACKED_BACKEND
+    if packed and weights is None:
+        from repro.kernels.viterbi_scan import table_weights
+
+        weights = table_weights(code)
+
+    def local_tick(arena, offs, pm, ring, *w):
+        # arena: (1, cap, W) — this shard's slab; offs: (slots_per_shard,)
+        block = jnp.take(
+            arena[0], offs[:, None] + jnp.arange(chunk)[None, :], axis=0
+        )  # (slots_per_shard, chunk, W)
+        state, bits, delta = stream_step(
+            code,
+            StreamState(pm=pm, ring=ring),
+            block,
+            weights=w[0] if w else None,
+            backend=backend,
+            normalize=normalize,
+            interpret=interpret,
+        )
+        return state.pm, state.ring, bits, delta
+
+    w_specs: tuple = ()
+    w_args: tuple = ()
+    if packed:
+        w_specs = (tuple(P(*([None] * jnp.asarray(a).ndim)) for a in weights),)
+        w_args = (weights,)
+    fn = jax.jit(
+        shard_map(
+            local_tick,
+            mesh=mesh,
+            in_specs=(P(axis, None, None), P(axis), P(axis, None), P(None, axis, None))
+            + w_specs,
+            out_specs=(P(axis, None), P(None, axis, None), P(axis, None), P(axis)),
+            check_rep=False,
+        )
+    )
+
+    def tick(arena, offs, state: StreamState):
+        pm, ring, bits, delta = fn(arena, offs, state.pm, state.ring, *w_args)
+        return StreamState(pm=pm, ring=ring), bits, delta
+
+    if cache_key is not None:
+        _SHARDED_STEP_CACHE[cache_key] = tick
+    return tick
+
+
 @functools.lru_cache(maxsize=None)
 def jitted_stream_step(
     code: ConvCode,

@@ -31,7 +31,8 @@ from repro.serve.viterbi_head import ViterbiHead
 
 GRID_CODES = {"k3": CODE_K3_STD, "k7": CODE_K7_NASA}
 EXPECTED_BACKENDS = (
-    "fused", "fused_packed", "parallel", "seqparallel", "sequential", "streaming"
+    "fused", "fused_packed", "parallel", "seqparallel", "sequential",
+    "sharded_stream", "streaming",
 )
 
 
@@ -128,6 +129,8 @@ def test_capability_records():
     assert get_decoder("seqparallel").capabilities.requires_mesh
     assert get_decoder("streaming").capabilities.supports_streaming
     assert get_decoder("fused").capabilities.max_states is not None
+    caps = get_decoder("sharded_stream").capabilities
+    assert caps.sharded_stream and caps.requires_mesh and caps.supports_streaming
 
 
 # --------------------------------------------------------------------------- #
@@ -158,8 +161,9 @@ def test_backend_equivalence_grid(code_name, punctured, metric, terminated,
     ref_bits, ref_metric = viterbi_decode(code, bm, terminated=terminated)
 
     for name in list_decoders():
+        needs_mesh = get_decoder(name).capabilities.requires_mesh
         ctx = DecodeContext(
-            mesh=mesh11 if name == "seqparallel" else None,
+            mesh=mesh11 if needs_mesh else None,
             chunk=16,
             stream_depth=T,  # window covers the block -> exactness regime
         )
@@ -225,6 +229,69 @@ def test_planner_picks_streaming_for_session_context():
     plan = plan_decode(CodecSpec(), (1, 10_000_000),
                        ctx=DecodeContext(streaming=True, stream_depth=15))
     assert plan.backend == "streaming"
+
+
+class _StubMesh:
+    """Planner-only mesh stand-in: plan_decode reads nothing but
+    ``mesh.shape`` (a Mapping), so routing rules for multi-device meshes are
+    unit-testable on the single-CPU suite (execution runs in
+    tests/multidevice on real fake devices)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def test_planner_routes_multi_device_streaming_to_sharded_stream():
+    ctx = DecodeContext(streaming=True, stream_depth=15)
+    plan = plan_decode(CodecSpec(), (64, 4096), mesh=_StubMesh(data=8, model=1),
+                       ctx=ctx)
+    assert plan.backend == "sharded_stream"
+    assert "data=8" in plan.reason
+
+
+def test_planner_streaming_falls_back_when_trellis_exceeds_sharded_cap():
+    """S above the fused VMEM cap must fall back to the uncapped streaming
+    backend, not raise (regression: the sharded route skipped max_states)."""
+    from repro.core import ConvCode
+    from repro.decode.backends import FUSED_MAX_STATES
+
+    big = CodecSpec(code=ConvCode(14, (0o32721, 0o26741)))
+    assert big.code.n_states > FUSED_MAX_STATES
+    ctx = DecodeContext(streaming=True, stream_depth=15)
+    plan = plan_decode(big, (64, 4096), mesh=_StubMesh(data=8), ctx=ctx)
+    assert plan.backend == "streaming"
+    assert "exceeds" in plan.reason
+
+
+def test_stream_defaults_weak_scaling_rule():
+    """The config's one slot-table sizing rule: per-shard load x shards."""
+    from repro.configs.paper_viterbi import STREAM
+
+    assert STREAM.mesh_axis == "data"
+    assert STREAM.n_slots_for(8) == 8 * STREAM.n_slots
+    assert STREAM.n_slots_for(4, slots_per_shard=16) == 64
+    assert STREAM.n_slots_for(1) == STREAM.n_slots
+
+
+def test_planner_keeps_streaming_on_unit_data_axis(mesh11):
+    """A streaming context with a 1-device data axis stays on the plain
+    streaming backend — sharding only pays for itself past one device (the
+    multi-device routing positive case runs in tests/multidevice)."""
+    plan = plan_decode(CodecSpec(), (8, 4096), mesh=mesh11,
+                       ctx=DecodeContext(streaming=True, stream_depth=15))
+    assert plan.backend == "streaming"
+
+
+def test_sharded_stream_backend_validation(mesh11):
+    """Explicit sharded_stream override: refuses to run without a mesh, and
+    refuses a mesh lacking the batch axis; a unit data axis is accepted."""
+    with pytest.raises(ValueError, match="mesh"):
+        plan_decode(CodecSpec(), (8, 64), backend="sharded_stream")
+    model_only = jax.make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="data"):
+        plan_decode(CodecSpec(), (8, 64), backend="sharded_stream", mesh=model_only)
+    plan = plan_decode(CodecSpec(), (8, 64), backend="sharded_stream", mesh=mesh11)
+    assert plan.backend == "sharded_stream"
 
 
 def test_planner_override_and_validation(mesh11):

@@ -1,0 +1,100 @@
+"""Golden BER regression: decode quality must not drift across kernel PRs.
+
+A seeded K=7 (NASA code) noise sweep is decoded by every hot-path backend
+and the resulting bit-error rates are pinned in ``tests/golden/ber_k7.json``.
+Any future kernel/scheduler change that silently degrades decode quality by
+more than 1e-3 absolute BER fails here — catching the class of bug where a
+kernel stays shape-correct but decodes the wrong path.
+
+Regenerate (only when a change is *supposed* to move BER, e.g. a new
+truncation policy) with:
+
+    PYTHONPATH=src python tests/test_golden_ber.py --regen
+"""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CODE_K7_NASA
+from repro.decode import CodecSpec, DecodeContext, get_decoder
+
+GOLDEN = Path(__file__).resolve().parent / "golden" / "ber_k7.json"
+TOLERANCE = 1e-3  # absolute BER drift that fails the gate
+
+SEED = 2026
+BATCH = 16
+INFO_BITS = 96
+FLIPS = (0.02, 0.06, 0.11)  # clean floor -> waterfall knee -> lossy region
+#: every decode path whose quality the file pins: the oracle, the (min,+)
+#: scan, the packed Pallas pipeline, and the truncated-window streamer.
+BACKENDS = ("sequential", "parallel", "fused_packed", "streaming")
+
+
+def compute_ber_grid():
+    """{flip: {backend: ber}} on the pinned seeded workload."""
+    spec = CodecSpec(code=CODE_K7_NASA, metric="hard")
+    key = jax.random.PRNGKey(SEED)
+    bits = jax.random.bernoulli(key, 0.5, (BATCH, INFO_BITS)).astype(jnp.int32)
+    coded = spec.encode(bits)
+    truth = np.asarray(bits)
+    grid = {}
+    for i, flip in enumerate(FLIPS):
+        rx = spec.channel(jax.random.fold_in(key, 100 + i), coded, flip_prob=flip)
+        bm = spec.branch_metrics(rx)
+        row = {}
+        for name in BACKENDS:
+            res = get_decoder(name)(spec, bm, ctx=DecodeContext(chunk=16))
+            row[name] = float((np.asarray(res.info_bits) != truth).mean())
+        grid[f"{flip:g}"] = row
+    return grid
+
+
+def test_golden_ber_no_drift():
+    assert GOLDEN.exists(), (
+        f"{GOLDEN} missing — regenerate with "
+        "PYTHONPATH=src python tests/test_golden_ber.py --regen"
+    )
+    golden = json.loads(GOLDEN.read_text())
+    assert golden["code"] == "k7_nasa" and golden["seed"] == SEED
+    grid = compute_ber_grid()
+    for flip, row in golden["ber"].items():
+        for backend, want in row.items():
+            got = grid[flip][backend]
+            assert abs(got - want) <= TOLERANCE, (
+                f"BER drift for backend {backend!r} at flip={flip}: "
+                f"golden {want:.6f} vs current {got:.6f} "
+                f"(|diff| > {TOLERANCE:g})"
+            )
+
+
+def test_golden_covers_every_pinned_backend():
+    golden = json.loads(GOLDEN.read_text())
+    for flip in FLIPS:
+        assert set(golden["ber"][f"{flip:g}"]) == set(BACKENDS)
+
+
+def _regen():
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "code": "k7_nasa",
+        "metric": "hard",
+        "seed": SEED,
+        "batch": BATCH,
+        "info_bits": INFO_BITS,
+        "tolerance": TOLERANCE,
+        "ber": compute_ber_grid(),
+    }
+    GOLDEN.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"wrote {GOLDEN}")
+    print(json.dumps(payload["ber"], indent=1))
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" not in sys.argv:
+        sys.exit("refusing to overwrite the golden file: pass --regen")
+    _regen()

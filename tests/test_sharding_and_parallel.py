@@ -53,6 +53,18 @@ def test_fsdp_rules_shard_embed_dim(mesh11):
 # --------------------------------------------------------------------------- #
 
 
+def test_collectives_sum_across_shards(mesh11):
+    """The sharded scheduler's scalar reduction: per-shard rows psum to the
+    mesh-global total (size-1 data axis here; tests/multidevice covers 8)."""
+    from repro.parallel.collectives import mesh_axis_size, sum_across_shards
+
+    assert mesh_axis_size(mesh11, "data") == 1
+    assert mesh_axis_size(mesh11, "nope") == 0
+    assert mesh_axis_size(None, "data") == 0
+    total = sum_across_shards(mesh11, "data", jnp.asarray([[3, 5]]))
+    np.testing.assert_array_equal(np.asarray(total), [3, 5])
+
+
 def test_seqparallel_viterbi_matches_sequential(mesh11, rng):
     from repro.core import CODE_K3_STD, bsc, encode, hard_branch_metrics, viterbi_decode
     from repro.parallel.collectives import viterbi_decode_seqparallel

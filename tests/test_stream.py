@@ -459,6 +459,132 @@ def test_scheduler_arena_compaction_preserves_streams(rng):
 
 
 # --------------------------------------------------------------------------- #
+# (g) scheduler lifecycle edge cases                                           #
+# --------------------------------------------------------------------------- #
+
+
+def test_scheduler_evict_while_draining(rng):
+    """Evicting a stream whose remainder is already below one chunk (it
+    would retire next tick) must return the committed prefix and free the
+    slot without corrupting the streams still in flight."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=2, chunk=16, depth=15, backend="scan")
+    _, bm_a = _noisy_bm(code, rng, 1, 158, 0.01)
+    _, bm_b = _noisy_bm(code, jax.random.fold_in(rng, 1), 1, 40, 0.01)
+    ref_a, _ = viterbi_decode(code, bm_a)
+    sched.submit("a", bm_a[0])
+    sched.submit("b", bm_b[0])
+    for _ in range(8):
+        sched.step()
+        st_b = next((s for s in sched.active.values() if s.stream_id == "b"), None)
+        if st_b is not None and 0 < st_b.remaining < sched.chunk:
+            break
+    else:
+        pytest.fail("stream 'b' never reached the draining window")
+    partial = sched.evict("b")  # draining: remainder < chunk
+    assert partial is not None and partial.dtype == np.int32
+    out = sched.run()
+    assert set(out) == {"a"}
+    np.testing.assert_array_equal(out["a"][0], np.asarray(ref_a[0]))
+    with pytest.raises(KeyError):
+        sched.evict("b")  # already gone
+
+
+def test_scheduler_submit_after_all_slots_retired(rng):
+    """A drained scheduler (every slot retired, results collected) must
+    accept and decode a fresh wave of streams."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=2, chunk=16, depth=30, backend="scan")
+    for i in range(3):
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, 62, 0.01)
+        sched.submit(f"wave1-{i}", bm[0])
+    sched.run()
+    assert not sched.pending_work() and sched.utilization() == 0.0
+    _, bm = _noisy_bm(code, jax.random.fold_in(rng, 99), 1, 94, 0.05)
+    ref, ref_m = viterbi_decode(code, bm)
+    sched.submit("wave2", bm[0])
+    out = sched.run()
+    np.testing.assert_array_equal(out["wave2"][0], np.asarray(ref[0]))
+    assert abs(out["wave2"][1] - float(ref_m[0])) < 1e-3
+    assert sched.stats.streams_finished == 4
+
+
+def test_scheduler_zero_length_stream(rng):
+    """A zero-step stream must retire cleanly with empty bits (and must not
+    wedge the tick loop or the batched flush)."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=2, chunk=16, depth=15, backend="scan")
+    _, bm_real = _noisy_bm(code, rng, 1, 62, 0.01)
+    ref, _ = viterbi_decode(code, bm_real)
+    sched.submit("empty", np.zeros((0, code.n_symbols), np.float32))
+    sched.submit("real", bm_real[0])
+    out = sched.run()
+    assert out["empty"][0].shape == (0,)
+    np.testing.assert_array_equal(out["real"][0], np.asarray(ref[0]))
+    assert sched.stats.streams_finished == 2
+
+
+def test_scheduler_compaction_mid_tick_with_live_slots(rng):
+    """Compaction triggered between ticks while streams are mid-flight (the
+    admit path compacts): live segments must be relocated coherently so the
+    in-flight decode continues bit-exact."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=2, chunk=16, depth=15, backend="scan")
+    sched._compact_floor = 0
+    sched._compact_ratio = 1  # compact aggressively, incl. with live slots
+    refs = {}
+    long_ids = []
+    for i in range(2):  # long residents: stay live across compactions
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, 190, 0.02)
+        rb, _ = viterbi_decode(code, bm)
+        refs[f"long{i}"] = np.asarray(rb[0])
+        long_ids.append(f"long{i}")
+        sched.submit(f"long{i}", bm[0])
+    sched.step()  # both residents mid-stream
+    for i in range(6):  # churn short streams through the queue
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, 100 + i), 1, 46, 0.02)
+        rb, _ = viterbi_decode(code, bm)
+        refs[f"short{i}"] = np.asarray(rb[0])
+        sched.submit(f"short{i}", bm[0])
+    out = sched.run()
+    assert sched.stats.arena_compactions > 0
+    for sid, rb in refs.items():
+        np.testing.assert_array_equal(out[sid][0], rb)
+
+
+# --------------------------------------------------------------------------- #
+# (h) mesh-sharded scheduler, single-device degenerate mesh                    #
+# --------------------------------------------------------------------------- #
+
+
+def test_sharded_scheduler_on_unit_mesh_matches_unsharded(mesh11, rng):
+    """mesh with data=1: the sharded code path (shard_map tick, per-shard
+    arena, collective load report) runs on the main suite's single device
+    and stays bit-exact with the plain scheduler."""
+    code = CODE_K3_STD
+    plain = StreamScheduler(code, n_slots=4, chunk=16, depth=30, backend="scan")
+    shard = StreamScheduler(code, n_slots=4, chunk=16, depth=30, backend="scan",
+                            mesh=mesh11, mesh_axis="data")
+    assert shard.n_shards == 1 and shard._sharded_step is not None
+    for i in range(6):
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, (94, 62)[i % 2], 0.02)
+        plain.submit(f"s{i}", bm[0])
+        shard.submit(f"s{i}", bm[0])
+    out_p, out_s = plain.run(), shard.run()
+    for sid in out_p:
+        np.testing.assert_array_equal(out_s[sid][0], out_p[sid][0])
+        assert abs(out_s[sid][1] - out_p[sid][1]) < 1e-4
+    report = shard.load_report()
+    assert report["n_shards"] == 1 and report["active_total"] == 0
+
+
+def test_sharded_scheduler_validates_mesh(mesh11):
+    code = CODE_K3_STD
+    with pytest.raises(ValueError, match="no 'nope' axis"):
+        StreamScheduler(code, n_slots=4, mesh=mesh11, mesh_axis="nope")
+
+
+# --------------------------------------------------------------------------- #
 # serving head integration                                                     #
 # --------------------------------------------------------------------------- #
 
