@@ -1,6 +1,6 @@
 """Streaming vs. block Viterbi throughput — and sharded-scheduler scaling.
 
-Two modes:
+Three modes:
 
 * default: drives the continuous-batching StreamScheduler with >= 64
   concurrent decode sessions multiplexed through ONE jitted chunked Pallas
@@ -22,10 +22,22 @@ Two modes:
   below BEFORE jax initializes — it cannot be applied afterwards); on a real
   TPU slice the same flag-free invocation spans the physical devices.
 
+* ``--online``: true online ingestion under steady-state load — every
+  stream is fed by a RATE-LIMITED producer (rows released on a wall clock,
+  polled within the stream's backpressure credit) instead of a full table,
+  and the run measures what a serving deployment cares about: sustained
+  bits/s at the offered rate, per-bit commit latency from symbol ARRIVAL to
+  emission (mean/p50/p95), queue-depth statistics from ``load_report()``,
+  and how often slots starved.  The decoded bits are asserted identical to
+  the same scheduler fed offline (arrival timing must never change the
+  decode).  Results land in ``stream.online`` of BENCH_viterbi.json
+  (schema v3).
+
   PYTHONPATH=src python benchmarks/stream_throughput.py [--sessions 64]
       [--steps 512] [--chunk 64] [--flip 0.02] [--backend fused]
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --shards 1
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --shards 8
+  PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --online
 
 Numbers from the CPU container are interpret-mode / host-platform proxies
 (shape + scheduling parity only); on a real TPU the same code runs the
@@ -106,7 +118,7 @@ def _load_bench() -> dict:
             return json.loads(BENCH_JSON.read_text())
         except ValueError:
             pass
-    return {"schema": "bench_viterbi/v2",
+    return {"schema": "bench_viterbi/v3",
             "generated_by": "benchmarks/stream_throughput.py"}
 
 
@@ -212,6 +224,128 @@ def run_shard_scaling(args) -> None:
     print(f"merged by_shards[{n}] into {BENCH_JSON}")
 
 
+def run_online(args) -> None:
+    """Steady-state serving measurement: rate-limited producers feed the
+    chunk ingestion path; report sustained throughput, arrival-to-commit
+    latency, and queue depths; merge a ``stream.online`` section into
+    BENCH_viterbi.json (schema v3)."""
+    import bisect
+
+    from repro.stream import RateLimitedProducer
+
+    spec = DECODE_SPEC
+    depth = STREAM.depth(spec.code)
+    sessions = args.sessions or (8 if args.smoke else 32)
+    steps = args.steps or (384 if args.smoke else 2048)
+    backend = args.backend or ("scan" if args.smoke else "fused_packed")
+    chunk = args.chunk
+    key = jax.random.PRNGKey(0)
+    info_bits = steps - spec.n_flush
+    _, bm = make_workload(spec, key, sessions, info_bits, args.flip)
+    bm = np.asarray(bm)
+
+    # offered load: each producer releases rows at `rate`; default is sized
+    # so the batched tick loop is the bottleneck-free steady state (the
+    # interpret-mode CPU proxy is slow — scale to finish in reasonable time)
+    sched_probe = StreamScheduler(
+        spec, n_slots=sessions, chunk=chunk, depth=depth, backend=backend,
+        max_buffered=STREAM.max_buffered,
+    )
+    for i in range(sessions):  # calibration: offline drain rate of this box
+        sched_probe.submit(f"w{i}", bm[i])
+    t0 = time.perf_counter()
+    sched_probe.run()
+    offline_elapsed = time.perf_counter() - t0
+    offline_rate = sessions * steps / offline_elapsed / sessions  # rows/s/stream
+    rate = args.rate or max(50.0, 0.5 * offline_rate)
+
+    sched = StreamScheduler(
+        spec, n_slots=sessions, chunk=chunk, depth=depth, backend=backend,
+        max_buffered=STREAM.max_buffered,
+    )
+    producers = {}
+    for i in range(sessions):
+        producers[f"s{i}"] = RateLimitedProducer(bm[i], rows_per_s=rate)
+        sched.open_stream(f"s{i}", producer=producers[f"s{i}"])
+
+    latencies: list = []
+    queue_depths: list = []
+    stream_depths: list = []
+    committed = {f"s{i}": 0 for i in range(sessions)}
+    t0 = time.perf_counter()
+    while sched.pending_work():
+        emitted = sched.step()
+        now = time.perf_counter()
+        for sid, bits in emitted.items():
+            # latency of the NEWEST committed bit: now - arrival time of the
+            # producer chunk that contained its row
+            committed[sid] += len(bits)
+            arr = producers[sid].arrivals
+            j = bisect.bisect_left(arr, (committed[sid],))
+            if j < len(arr):
+                latencies.append(now - arr[j][1])
+        report = sched.load_report()
+        queue_depths.append(report["queued_rows_total"])
+        stream_depths.append(report["max_stream_queued_rows"])
+    elapsed = time.perf_counter() - t0
+    total_bits = sum(len(b) for b, _ in sched.results.values())
+
+    # arrival timing must never change the decode: online == offline, bit
+    # for bit (the acceptance gate; a clean exit IS the verification)
+    for i in range(sessions):
+        on_bits, _ = sched.results[f"s{i}"]
+        off_bits, _ = sched_probe.results[f"w{i}"]
+        assert (on_bits == off_bits).all(), f"online decode diverged on s{i}"
+
+    lat = np.asarray(sorted(latencies)) if latencies else np.zeros((1,))
+    row = {
+        "sessions": sessions,
+        "steps": steps,
+        "chunk": chunk,
+        "depth": depth,
+        "backend": backend,
+        "device": jax.devices()[0].platform,
+        "max_buffered": STREAM.max_buffered,
+        "offered_rows_per_s_per_stream": rate,
+        "elapsed_s": elapsed,
+        "bits_decoded": total_bits,
+        "bits_per_s": total_bits / elapsed,
+        "ticks": sched.stats.ticks,
+        "starved_slot_ticks": sched.stats.starved_slot_ticks,
+        "busy_rejections": sched.stats.busy_rejections,
+        "chunks_ingested": sched.stats.chunks_submitted,
+        "latency_s": {
+            "mean": float(lat.mean()),
+            "p50": float(lat[int(0.5 * (len(lat) - 1))]),
+            "p95": float(lat[int(0.95 * (len(lat) - 1))]),
+            "max": float(lat.max()),
+        },
+        "queue_depth_rows": {
+            "mean": float(np.mean(queue_depths)) if queue_depths else 0.0,
+            "max": int(max(queue_depths)) if queue_depths else 0,
+            "max_stream": int(max(stream_depths)) if stream_depths else 0,
+        },
+        "bit_exact_vs_offline": True,  # asserted above
+    }
+    print(f"online: {sessions} rate-limited streams x {steps} steps "
+          f"({rate:,.0f} rows/s/stream offered, backend {backend})")
+    print(f"  {total_bits} bits in {elapsed:.3f}s -> {row['bits_per_s']:,.0f} "
+          f"bits/s sustained; latency mean {row['latency_s']['mean'] * 1e3:.1f}ms "
+          f"p95 {row['latency_s']['p95'] * 1e3:.1f}ms")
+    print(f"  queue depth mean {row['queue_depth_rows']['mean']:.0f} / "
+          f"max {row['queue_depth_rows']['max']} rows total, deepest stream "
+          f"{row['queue_depth_rows']['max_stream']} (bound {STREAM.max_buffered}"
+          f"/stream); {row['starved_slot_ticks']} starved slot-ticks over "
+          f"{row['ticks']} ticks")
+    print("  online decode bit-exact vs offline feed of the same symbols")
+
+    bench = _load_bench()
+    bench.setdefault("stream", {})["online"] = row
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    BENCH_JSON.write_text(json.dumps(bench, indent=1))
+    print(f"merged stream.online into {BENCH_JSON}")
+
+
 def run_backend_comparison(args) -> None:
     spec = DECODE_SPEC
     code = spec.code
@@ -295,14 +429,13 @@ def run_backend_comparison(args) -> None:
     (RESULTS / "stream_throughput.json").write_text(json.dumps(payload, indent=1))
     print(f"\nwrote {RESULTS / 'stream_throughput.json'}")
 
-    # merge into the shared perf baseline (by_shards rows are preserved)
+    # merge into the shared perf baseline (by_shards / online preserved)
     bench = _load_bench()
     stream = bench.setdefault("stream", {})
-    by_shards = stream.get("by_shards")
+    kept = {k: stream[k] for k in ("by_shards", "online") if k in stream}
     stream.clear()
     stream.update(payload)
-    if by_shards is not None:
-        stream["by_shards"] = by_shards
+    stream.update(kept)
     BENCH_JSON.write_text(json.dumps(bench, indent=1))
     print(f"merged stream section into {BENCH_JSON}")
 
@@ -320,10 +453,18 @@ def main():
                     help="run the sharded-scheduler scaling mode on an N-way "
                          "data mesh (weak-scaled: --slots-per-shard per device)")
     ap.add_argument("--slots-per-shard", type=int, default=None)
+    ap.add_argument("--online", action="store_true",
+                    help="steady-state ingestion mode: rate-limited chunk "
+                         "producers, arrival-to-commit latency, queue depths")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="--online offered load, rows/s per stream (default: "
+                         "half the measured offline drain rate)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small CI shapes for the scaling mode")
+                    help="small CI shapes for the scaling/online modes")
     args = ap.parse_args()
-    if args.shards:
+    if args.online:
+        run_online(args)
+    elif args.shards:
         run_shard_scaling(args)
     else:
         run_backend_comparison(args)

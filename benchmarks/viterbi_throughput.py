@@ -44,9 +44,12 @@ from repro.kernels.ops import (
     viterbi_decode_packed,
 )
 
-#: v2: adds the optional ``stream.by_shards`` per-shard-count scaling table
-#: (written by stream_throughput.py --shards N).
-BENCH_SCHEMA = "bench_viterbi/v2"
+#: v2 added the optional ``stream.by_shards`` per-shard-count scaling table
+#: (stream_throughput.py --shards N); v3 adds the optional ``stream.online``
+#: steady-state ingestion section (stream_throughput.py --online: sustained
+#: bits/s under rate-limited producers, arrival-to-commit latency, queue
+#: depths, backpressure counters).
+BENCH_SCHEMA = "bench_viterbi/v3"
 DEFAULT_OUT = Path(__file__).resolve().parent / "results" / "BENCH_viterbi.json"
 
 
@@ -215,6 +218,24 @@ def check_schema(payload: Dict) -> None:
             for n, row in by_shards.items():
                 if n != "1":
                     assert "scaling_vs_shards1" in row
+    # optional online-ingestion section (stream_throughput --online): v3
+    online = (payload.get("stream") or {}).get("online")
+    if online is not None:
+        for field in ("sessions", "steps", "chunk", "depth", "max_buffered",
+                      "offered_rows_per_s_per_stream", "bits_per_s",
+                      "latency_s", "queue_depth_rows", "ticks"):
+            assert field in online, f"stream.online missing {field}"
+        assert online["bits_per_s"] > 0
+        assert online["bit_exact_vs_offline"] is True
+        lat = online["latency_s"]
+        assert 0 <= lat["mean"] <= lat["max"] and lat["p50"] <= lat["p95"]
+        q = online["queue_depth_rows"]
+        # backpressure invariant: no single stream's bounded queue can ever
+        # overrun its credit limit (totals are bounded by sessions x limit)
+        assert 0 <= q["max_stream"] <= online["max_buffered"]
+        assert 0 <= q["mean"] <= q["max"] <= (
+            online["sessions"] * online["max_buffered"]
+        )
 
 
 def main() -> None:

@@ -68,10 +68,17 @@ class StreamDefaults:
 
     ``n_slots`` is the PER-SHARD slot load: a sharded scheduler weak-scales,
     so the slot table grows with the mesh (``n_slots_for``) and each device
-    carries the same number of slots a single-device scheduler would."""
+    carries the same number of slots a single-device scheduler would.
+
+    ``max_buffered`` is the per-stream input-queue bound for online
+    ingestion (unconsumed rows a chunk-fed stream may hold before
+    ``submit_chunk`` raises StreamBusy): 8 chunks — deep enough to ride out
+    tick jitter, shallow enough that backpressure reaches the source within
+    one window's worth of symbols."""
 
     chunk: int = 64
     n_slots: int = 64
+    max_buffered: int = 512  # 8 * chunk
     mesh_axis: str = "data"
 
     def depth(self, code: ConvCode) -> int:

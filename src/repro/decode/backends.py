@@ -121,6 +121,7 @@ def decode_seqparallel(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> Dec
         requires_mesh=True,
         supports_streaming=True,
         sharded_stream=True,
+        online=True,
         max_states=FUSED_MAX_STATES,
     ),
 )
@@ -128,7 +129,10 @@ def decode_sharded_stream(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> 
     """Mesh-sharded continuous-batching scheduler: the (B, T, M) block runs
     as B streams through ONE StreamScheduler whose slot table, input arena,
     and survivor ring are partitioned along ``ctx.batch_axis`` — every
-    device on that axis decodes its slice of the slots each tick."""
+    device on that axis decodes its slice of the slots each tick.  Each
+    block row enters through ``submit`` — the documented adapter over the
+    scheduler's chunk-fed ingestion path (``online=True``: live callers use
+    open_stream/submit_chunk against the same machinery)."""
     import numpy as np
 
     from repro.parallel.collectives import mesh_axis_size
@@ -162,7 +166,7 @@ def decode_sharded_stream(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> 
 
 @register_decoder(
     "streaming",
-    capabilities=BackendCapabilities(supports_streaming=True),
+    capabilities=BackendCapabilities(supports_streaming=True, online=True),
 )
 def decode_streaming(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
     """Truncated-traceback sliding window over the chunked Pallas scan —

@@ -51,6 +51,12 @@ class BackendCapabilities:
       sharded_stream: the backend partitions a streaming slot table along
         the batch/``data`` mesh axis (one scheduler spanning all devices) —
         the planner routes multi-device streaming requests to it.
+      online: the backing machinery ingests incrementally — chunk-fed
+        producers with per-stream backpressure (StreamScheduler.open_stream/
+        submit_chunk, StreamSession.push) — so it can serve live connections
+        rather than requiring the full table up front.  The normalized
+        ``decode(spec, bm_tables, ctx)`` entry still takes a whole block;
+        the flag tells serving layers which backends they can keep feeding.
     """
 
     supports_mesh: bool = False
@@ -60,6 +66,7 @@ class BackendCapabilities:
     needs_terminated: bool = False
     accepts_received: bool = False
     sharded_stream: bool = False
+    online: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

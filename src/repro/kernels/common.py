@@ -19,7 +19,16 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     """Pallas interpret-mode policy: explicit override wins, otherwise run
     compiled on a real TPU and interpreted everywhere else (CPU containers,
     CI).  Public kernel entry points default to ``interpret=None`` so calling
-    them directly on a TPU never silently runs interpret mode."""
+    them directly on a TPU never silently runs interpret mode.
+
+    Pinning rule: anything that composes MORE THAN ONE kernel — the decode
+    entry points in ops.py (forward + traceback), stream sessions and the
+    scheduler (per-tick forward, tail feeds, flush traceback) — resolves
+    ``None`` exactly once, up front, and passes the concrete bool down.
+    Per-kernel auto-detection inside a multi-kernel decode would read
+    ``jax.default_backend()`` at each kernel's (independently cached) trace
+    time, and a platform-context change between those traces silently splits
+    one decode across the compiled and interpreted code paths."""
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"

@@ -25,7 +25,7 @@ from repro.kernels import minplus as _minplus
 from repro.kernels import survivors as _surv
 from repro.kernels import texpand as _texpand
 from repro.kernels import viterbi_scan as _vscan
-from repro.kernels.common import lane_block, pad_axis_to
+from repro.kernels.common import lane_block, pad_axis_to, resolve_interpret
 from repro.kernels.metrics import FusedMetricPlan
 
 
@@ -205,6 +205,7 @@ def viterbi_decode_fused(
 
     bm_tables: (B, T, M) -> (bits (B, T), metric (B,)).
     """
+    interpret = resolve_interpret(interpret)  # pinned per decode
     final_pm, bps = viterbi_forward_op(code, bm_tables, interpret)
     final_state, metric = _frontier(final_pm, terminated)
     bits, _ = _traceback(code, bps, final_state)
@@ -221,6 +222,9 @@ def viterbi_decode_packed(
     in).  Bit-exact vs viterbi_decode_fused; survivor HBM footprint is 32×
     smaller and the traceback never leaves the device."""
     T = bm_tables.shape[1]
+    # resolve interpret ONCE so the forward scan and the traceback kernel of
+    # this decode can never auto-detect onto different code paths
+    interpret = resolve_interpret(interpret)
     final_pm, packed = viterbi_forward_packed_op(code, bm_tables, interpret)
     final_state, metric = _frontier(final_pm, terminated)
     bits = viterbi_traceback_op(code, packed, final_state, T, interpret)
@@ -239,6 +243,7 @@ def viterbi_decode_fused_packed(
     received: (B, T, n_out) -> (bits (B, T), metric (B,)).
     """
     T = received.shape[1]
+    interpret = resolve_interpret(interpret)  # pinned per decode
     final_pm, packed = viterbi_forward_fused_op(plan, received, 0, interpret)
     final_state, metric = _frontier(final_pm, terminated)
     bits = viterbi_traceback_op(plan.code, packed, final_state, T, interpret)

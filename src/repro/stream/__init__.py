@@ -2,8 +2,20 @@
 
 window.py    — truncated-traceback sliding-window core (jittable)
 session.py   — stateful per-stream sessions, O(depth + chunk) memory
-scheduler.py — continuous batching of many streams into one jitted call
+scheduler.py — continuous batching of many streams into one jitted call,
+               chunk-fed with per-stream backpressure
+ingest.py    — ChunkProducer adapters (generator / callable / push-fed) and
+               the StreamBusy backpressure signal
 """
+from repro.stream.ingest import (
+    CallableProducer,
+    ChunkProducer,
+    GeneratorProducer,
+    PushProducer,
+    RateLimitedProducer,
+    StreamBusy,
+    as_producer,
+)
 from repro.stream.scheduler import SchedulerStats, StreamScheduler
 from repro.stream.session import StreamSession
 from repro.stream.window import (
@@ -25,6 +37,13 @@ __all__ = [
     "StreamSession",
     "StreamScheduler",
     "SchedulerStats",
+    "StreamBusy",
+    "ChunkProducer",
+    "GeneratorProducer",
+    "CallableProducer",
+    "PushProducer",
+    "RateLimitedProducer",
+    "as_producer",
     "chunk_forward_scan",
     "default_depth",
     "init_stream_state",

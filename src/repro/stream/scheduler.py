@@ -1,4 +1,4 @@
-"""Continuous-batching stream scheduler.
+"""Continuous-batching stream scheduler with true online ingestion.
 
 Thousands of independent broadcast streams, one jitted Pallas call: every
 live stream is pinned to a slot of a fixed (n_slots, chunk) decode block —
@@ -9,19 +9,43 @@ tail + final traceback run per-slot, off the hot path), and their slot is
 recycled for the next pending stream: classic continuous batching, applied
 to trellis decode instead of token decode.
 
-Per-stream input queues are **device-resident**: at admission a stream's
-remaining table is appended to one device arena, and each tick gathers the
-(n_slots, chunk, ·) decode block by slot offset in a single jitted take —
-no host-side numpy packing or per-tick H2D copy on the hot path (the arena
-is compacted off the hot path when retired segments dominate it).
+**Ingestion is chunk-fed.**  A caller serving live connections opens a
+stream, feeds rows as they arrive, and closes it at EOF:
 
-The per-slot python bookkeeping (positions, commit counts) mirrors
-StreamSession; the batched StreamState lives in one pytree so the hot loop
-is a single dispatch regardless of how many streams are in flight.  With
-``backend="fused_packed"`` the ring holds bit-packed survivor words and the
-per-tick traceback runs in the Pallas traceback kernel; with
-``inputs="received"`` the arena holds raw channel symbols (features) and
-branch metrics are computed in-kernel.
+    sched.open_stream("uplink-7")
+    while rx := conn.recv_symbols():
+        while True:                     # StreamBusy accepts NOTHING — keep
+            try:                        # the same rx and retry once a tick
+                sched.submit_chunk("uplink-7", rx)   # rows, any size
+                break                   # has drained the bounded queue
+            except StreamBusy:
+                emit(sched.step())
+        emit(sched.step())
+    sched.close("uplink-7")             # finalizes the mid-chunk tail
+
+or attaches a ChunkProducer (generator / callable / socket-fed push buffer,
+see stream/ingest.py) that the tick loop polls within the stream's credit.
+Every stream has a **bounded input queue** (``max_buffered`` unconsumed
+rows): ``submit_chunk`` returns the remaining credit and raises StreamBusy
+on overrun, so backpressure propagates to the source instead of buffering
+without bound.  ``submit(stream_id, full_table)`` survives as a thin
+adapter over this one path — open, feed the whole table as a single chunk,
+close — so offline and online decode share every line of ingestion code.
+
+A slot whose stream has no full chunk ready **idles without being evicted**:
+the batched kernel still runs over it (fixed shapes — that is the whole
+point of the bucket discipline) but its carried pm/ring are re-selected
+unchanged (``stream_step(active=...)``), because advancing a real stream
+with zero branch metrics is not a no-op.  Streams that close mid-chunk
+retire through the same grouped tail-feed + batched flush as before.
+
+Per-stream input rows are **device-resident**: each accepted chunk is
+appended to one device arena and every tick gathers the (n_slots, chunk, ·)
+decode block by per-slot row indices in a single jitted take — no host-side
+numpy packing or per-tick H2D copy of symbol data on the hot path.  Chunks
+of different streams interleave in arrival order, so a stream's rows are
+tracked as explicit arena row indices (not a contiguous base offset); the
+arena is compacted off the hot path when retired/consumed rows dominate.
 
 **Sharding.**  Given ``mesh=``, ONE scheduler spans every device on the
 ``data`` mesh axis: the slot table is partitioned into contiguous
@@ -30,11 +54,13 @@ input arena, path metrics, and survivor ring are laid out per shard
 (arena ``(n_shards, cap, ·)``, pm ``P(data, None)``, ring
 ``P(None, data, None)``).  The per-tick gather + forward + traceback runs
 under one shard_map with NO cross-shard communication — slots are
-independent streams — while admission, eviction, and flush bookkeeping stay
-host-side over global slot ids; the few mesh-global scalars (utilization,
-pending work) reduce through parallel.collectives.sum_across_shards.
-Decode results are bit-exact with the single-device scheduler: each slot
-sees the same inputs in the same order regardless of which shard hosts it.
+independent streams — while admission, ingestion, and flush bookkeeping stay
+host-side over global slot ids (a stream's chunks land in the slab of the
+shard hosting its slot); the few mesh-global scalars (utilization, pending
+work, queue depths) reduce through parallel.collectives.sum_across_shards.
+Decode results are bit-exact with the single-device scheduler AND with the
+offline block decode of the same symbols: arrival schedule and placement
+never change what a slot's kernel sees.
 """
 from __future__ import annotations
 
@@ -49,28 +75,47 @@ import numpy as np
 from repro.core.trellis import ConvCode
 from repro.core.viterbi import _initial_pm
 from repro.decode.spec import CodecSpec
+from repro.kernels.common import resolve_interpret
 from repro.serve.kv_cache import SlotAllocator
 from repro.stream import window as _w
+from repro.stream.ingest import ChunkProducer, StreamBusy, as_producer
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _Stream:
-    """Per-stream bookkeeping (host side; the table itself lives in the
-    device arena once the stream is admitted)."""
+    """Per-stream bookkeeping (host side; the rows themselves live in the
+    device arena once accepted).  ``eq=False``: streams are identities, and
+    the generated __eq__ would compare ndarray fields."""
 
     stream_id: str
-    bm: Optional[np.ndarray]  # (T, ·) input rows; dropped at admission
     terminated: bool
-    n_steps: int = 0  # total trellis steps in the stream
-    arena_start: int = 0  # shard-local arena row of stream step 0 (once admitted)
+    max_buffered: int  # backpressure bound on unconsumed rows
+    producer: Optional[ChunkProducer] = None
+    closed: bool = False  # no more input will arrive (close() / EOF)
+    slot: Optional[int] = None  # decode slot while admitted
     shard: int = 0  # mesh shard hosting the stream's slot (0 unsharded)
-    pos: int = 0  # steps fed to the kernel
+    fed: int = 0  # rows accepted into the device arena
+    pos: int = 0  # steps consumed by the kernel
     committed: int = 0  # bits already emitted
+    #: shard-local arena rows holding steps [pos, fed) — explicit indices,
+    #: because chunks of concurrent streams interleave in the arena.
+    rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), dtype=np.int32)
+    )
+    queued: List[np.ndarray] = dataclasses.field(default_factory=list)
+    queued_rows: int = 0  # raw rows awaiting admission (no shard known yet)
     out: List[np.ndarray] = dataclasses.field(default_factory=list)
 
     @property
-    def remaining(self) -> int:
-        return self.n_steps - self.pos
+    def available(self) -> int:
+        """Rows in the arena the kernel has not consumed yet."""
+        return self.fed - self.pos
+
+    @property
+    def buffered(self) -> int:
+        """Unconsumed rows anywhere (arena + pre-admission queue) — what the
+        per-stream credit is charged against."""
+        return self.fed - self.pos + self.queued_rows
 
 
 @dataclasses.dataclass
@@ -79,8 +124,11 @@ class SchedulerStats:
     streams_submitted: int = 0
     streams_finished: int = 0
     slot_claims: int = 0
-    steps_decoded: int = 0  # trellis steps through the batched kernel (incl. idle slots)
+    steps_decoded: int = 0  # trellis steps actually consumed by streams
     arena_compactions: int = 0
+    chunks_submitted: int = 0  # submit_chunk / producer deliveries accepted
+    busy_rejections: int = 0  # StreamBusy raised by submit_chunk
+    starved_slot_ticks: int = 0  # slot-ticks spent admitted-but-starved
 
     def asdict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -91,7 +139,7 @@ class StreamScheduler:
 
     Args:
       spec: CodecSpec shared by all streams (a bare ConvCode is promoted);
-        its ``terminated`` flag is the per-stream default for ``submit``.
+        its ``terminated`` flag is the per-stream default.
       n_slots: decode-block batch size (compile-once; streams beyond this
         queue FIFO until a slot frees).
       chunk: trellis steps per tick per slot.
@@ -99,20 +147,26 @@ class StreamScheduler:
         multiple of 32 for the packed backend).
       backend: 'fused' | 'fused_packed' | 'scan' forward pass for the hot
         loop ('fused_packed': bit-packed survivor ring + Pallas traceback).
-      inputs: 'bm' — submit takes (T, M) branch-metric tables; 'received'
-        (fused_packed only) — submit takes raw (T, n_out) channel symbols
-        and branch metrics are computed in-kernel.
+      inputs: 'bm' — chunks are (t, M) branch-metric rows; 'received'
+        (fused_packed only) — chunks are raw (t, n_out) channel symbols and
+        branch metrics are computed in-kernel.
+      max_buffered: default per-stream input-queue bound, in unconsumed rows
+        (None -> 8 * chunk).  ``open_stream`` can override per stream.
       mesh: optional device mesh — shard the slot table, input arena, and
         survivor ring along ``mesh_axis`` so one scheduler spans all devices
         on that axis (n_slots must divide evenly; decode results stay
         bit-exact with the unsharded scheduler).
       mesh_axis: mesh axis the slots are partitioned over (default 'data').
 
-    Usage:
-      sched.submit("tv-0", bm_tables)      # (T, M) per stream
-      while sched.pending_work():
+    Online usage (live connections):
+      sched.open_stream("tv-0", producer=gen_of_chunks)  # or submit_chunk
+      while serving:
           emitted = sched.step()           # {stream_id: np bits} this tick
-      bits, metric = sched.result("tv-0")
+      bits, metric = sched.pop_result("tv-0")
+
+    Offline usage (whole table known) — the adapter over the same path:
+      sched.submit("tv-0", bm_tables)      # == open + submit_chunk + close
+      sched.run()
     """
 
     def __init__(
@@ -125,6 +179,7 @@ class StreamScheduler:
         normalize: bool = True,
         interpret: Optional[bool] = None,
         inputs: str = "bm",
+        max_buffered: Optional[int] = None,
         mesh: Optional[object] = None,
         mesh_axis: str = "data",
     ):
@@ -136,6 +191,14 @@ class StreamScheduler:
         self.depth = _w.default_depth(code) if depth is None else depth
         self.backend = backend
         self.inputs = inputs
+        self.max_buffered = 8 * chunk if max_buffered is None else int(max_buffered)
+        if self.max_buffered < chunk:
+            # rows only leave the queue in full-chunk ticks: a bound below
+            # one chunk could never fill a tick and the stream would starve
+            # forever with its credit pinned at zero
+            raise ValueError(
+                f"max_buffered ({self.max_buffered}) must be >= chunk ({chunk})"
+            )
         self.mesh = mesh
         self.mesh_axis = mesh_axis
         if mesh is not None:
@@ -165,18 +228,22 @@ class StreamScheduler:
         self.alloc = SlotAllocator(n_slots)
         self.active: Dict[int, _Stream] = {}
         self.pending: Deque[_Stream] = deque()
+        self._by_id: Dict[str, _Stream] = {}  # every OPEN stream, by id
         self.results: Dict[str, Tuple[np.ndarray, float]] = {}
         self.stats = SchedulerStats()
         self._pm0_row = _initial_pm(code, ())  # (S,) fresh-slot path metrics
-        self._interpret = interpret
+        # interpret-mode resolution is pinned ONCE per scheduler (see
+        # kernels/common.py): the forward and traceback kernels of every tick
+        # and flush must run on the same code path.
+        self._interpret = resolve_interpret(interpret)
         # device-resident input arena, laid out per shard: (n_shards, cap, ·)
         # with rows [0, chunk) of every shard kept zero — the read target for
-        # idle slots — and each admitted stream appended to the slab of the
-        # shard hosting its slot.  Capacity grows geometrically (so the
-        # jitted gather sees a handful of shapes over a server's life, not
-        # one per admission) and the used prefixes are compacted when retired
-        # rows exceed _compact_ratio x the live rows (past _compact_floor,
-        # so toy workloads never bother).
+        # idle/starved slots — and each accepted chunk appended to the slab
+        # of the shard hosting its stream's slot.  Capacity grows
+        # geometrically (so the jitted gather sees a handful of shapes over a
+        # server's life, not one per chunk) and the used prefixes are
+        # compacted when consumed/retired rows exceed _compact_ratio x the
+        # live rows (past _compact_floor, so toy workloads never bother).
         self._arena = jnp.zeros((self.n_shards, chunk, self._width), jnp.float32)
         self._arena_len = [chunk] * self.n_shards  # used rows per shard
         self._compact_ratio = 4
@@ -191,60 +258,132 @@ class StreamScheduler:
             self._step_fn = None  # sharded tick replaces the plain jitted step
             self._sharded_step = _w.make_sharded_stream_step(
                 code, mesh, mesh_axis, chunk=chunk, backend=backend,
-                normalize=normalize, interpret=interpret,
+                normalize=normalize, interpret=self._interpret,
                 weights=self._weights,
             )
         else:
             self._arena_sharding = None
             self._sharded_step = None
             self._step_fn = _w.jitted_stream_step(
-                code, backend=backend, normalize=normalize, interpret=interpret
+                code, backend=backend, normalize=normalize,
+                interpret=self._interpret,
             )
         self._gather = jax.jit(
-            lambda arena, offs: jnp.take(
-                arena[0], offs[:, None] + jnp.arange(chunk)[None, :], axis=0
-            )
+            lambda arena, idx: jnp.take(arena[0], idx, axis=0)
         )
 
     # ------------------------------ intake ------------------------------ #
 
-    def submit(self, stream_id: str, bm_tables, terminated: Optional[bool] = None) -> None:
-        """Queue a stream.  bm_tables: (T, M) branch metrics — or raw
-        (T, n_out) received symbols for ``inputs='received'``.
-        ``terminated`` defaults to the scheduler spec's flag."""
+    def open_stream(
+        self,
+        stream_id: str,
+        *,
+        terminated: Optional[bool] = None,
+        producer=None,
+        max_buffered: Optional[int] = None,
+    ) -> None:
+        """Register a stream for chunk-fed decode.  It queues for a slot
+        immediately (FIFO) and may sit admitted-but-starved until rows
+        arrive via ``submit_chunk`` or the attached ``producer``.
+
+        Args:
+          terminated: stream ends in state 0 (defaults to the spec's flag).
+          producer: optional chunk source polled every tick within the
+            stream's credit — a ChunkProducer, a generator/iterable of row
+            arrays, or a poll callable (see stream/ingest.py).  When it
+            reports ``exhausted`` the stream is closed automatically.
+          max_buffered: per-stream override of the input-queue bound.
+        """
         if terminated is None:
             terminated = self.spec.terminated
-        bm = np.asarray(bm_tables, dtype=np.float32)
-        expected = self.code.n_out if self.inputs == "received" else self.code.n_symbols
-        kind = "received symbols" if self.inputs == "received" else "bm tables"
-        if bm.ndim != 2 or bm.shape[1] != expected:
-            raise ValueError(
-                f"{self.inputs!r} streams take {kind} shaped (T, {expected}), "
-                f"got {bm.shape}"
-            )
-        if stream_id in self.results or any(
-            s.stream_id == stream_id for s in list(self.active.values()) + list(self.pending)
-        ):
+        if stream_id in self._by_id or stream_id in self.results:
             raise KeyError(f"duplicate stream_id {stream_id!r}")
-        self.pending.append(_Stream(stream_id, bm, terminated, n_steps=bm.shape[0]))
+        bound = self.max_buffered if max_buffered is None else int(max_buffered)
+        if bound < self.chunk:
+            raise ValueError(
+                f"max_buffered ({bound}) must be >= chunk ({self.chunk}): a "
+                "smaller bound can never buffer a full decode chunk, so the "
+                "stream would starve forever"
+            )
+        st = _Stream(
+            stream_id=stream_id,
+            terminated=bool(terminated),
+            max_buffered=bound,
+            producer=as_producer(producer) if producer is not None else None,
+        )
+        self._by_id[stream_id] = st
+        self.pending.append(st)
         self.stats.streams_submitted += 1
         self._admit()
 
+    def submit_chunk(self, stream_id: str, rows, *, close: bool = False) -> int:
+        """Feed ``rows`` ((t, M) bm rows or (t, n_out) received symbols per
+        the scheduler's ``inputs`` kind; any t >= 0) to an open stream.
+
+        Returns the stream's remaining credit (rows its bounded queue can
+        still take).  Raises StreamBusy — accepting nothing — when the chunk
+        exceeds the current credit; callers throttle and retry after ticks
+        drain the queue.  ``close=True`` marks EOF after accepting the rows
+        (same as a separate ``close()``)."""
+        st = self._open(stream_id)
+        if st.closed:
+            raise RuntimeError(f"stream {stream_id!r} is closed")
+        rows = np.asarray(rows, dtype=np.float32)
+        self._check_rows(rows)
+        n = rows.shape[0]
+        if n:
+            credit = st.max_buffered - st.buffered
+            if n > credit:
+                self.stats.busy_rejections += 1
+                raise StreamBusy(stream_id, max(0, credit), n)
+            self._accept_rows(st, rows)
+            self.stats.chunks_submitted += 1
+        if close:
+            st.closed = True
+        self._admit()
+        return max(0, st.max_buffered - st.buffered)
+
+    def close(self, stream_id: str) -> None:
+        """Mark EOF: no more chunks will arrive.  The stream retires once its
+        remaining buffered rows (including a mid-chunk tail shorter than one
+        decode chunk) are drained — idempotent."""
+        self._open(stream_id).closed = True
+
+    def credit(self, stream_id: str) -> int:
+        """Rows the stream's bounded input queue can accept right now."""
+        st = self._open(stream_id)
+        return max(0, st.max_buffered - st.buffered)
+
+    def submit(self, stream_id: str, bm_tables, terminated: Optional[bool] = None) -> None:
+        """Whole-table submission — a thin ADAPTER over the chunk path (the
+        scheduler's one ingestion code path): opens the stream with enough
+        credit for the full table, feeds it as a single chunk, and closes
+        it.  bm_tables: (T, M) branch metrics — or raw (T, n_out) received
+        symbols for ``inputs='received'``."""
+        bm = np.asarray(bm_tables, dtype=np.float32)
+        self._check_rows(bm)
+        self.open_stream(
+            stream_id,
+            terminated=terminated,
+            max_buffered=max(self.max_buffered, bm.shape[0]),
+        )
+        self.submit_chunk(stream_id, bm, close=True)
+
     def evict(self, stream_id: str) -> Optional[np.ndarray]:
         """Cancel a stream.  Returns the bits committed so far (or None if it
-        was still pending); the slot is recycled immediately."""
-        for i, s in enumerate(self.pending):
-            if s.stream_id == stream_id:
-                del self.pending[i]
-                return None
-        for slot, s in self.active.items():
-            if s.stream_id == stream_id:
-                partial = self._collect(s)
-                del self.active[slot]
-                self.alloc.release(slot)  # state is re-initialized at next claim
-                self._admit()
-                return partial
-        raise KeyError(stream_id)
+        was still awaiting a slot); the slot is recycled immediately."""
+        st = self._by_id.pop(stream_id, None)
+        if st is None:
+            raise KeyError(stream_id)
+        if st.slot is None:
+            self.pending.remove(st)
+            return None
+        partial = self._collect(st)
+        del self.active[st.slot]
+        self.alloc.release(st.slot)  # state is re-initialized at next claim
+        st.slot = None
+        self._admit()
+        return partial
 
     # ------------------------------ ticking ------------------------------ #
 
@@ -252,50 +391,66 @@ class StreamScheduler:
         return bool(self.active or self.pending)
 
     def step(self) -> Dict[str, np.ndarray]:
-        """One scheduler tick: retire drained streams, admit pending ones,
-        then advance every live slot ``chunk`` steps through ONE jitted call.
+        """One scheduler tick: poll producers, retire drained streams, admit
+        pending ones, then advance every slot with a full chunk ready
+        through ONE jitted call (slots without one idle, state untouched).
         Returns the bits each stream newly committed this tick."""
-        # 1. retire streams that cannot fill a full chunk (tail + flush run
-        #    batched over all slots retiring this tick — off the hot path),
-        #    re-admit, and repeat: an admitted pending stream may itself be
-        #    shorter than a chunk and must retire before the gather sees it.
+        self._poll_producers()
+        # 1. retire closed streams that cannot fill a full chunk (tail +
+        #    flush run batched over all slots retiring this tick — off the
+        #    hot path), re-admit, and repeat: an admitted pending stream may
+        #    itself be closed with less than a chunk buffered and must
+        #    retire before the gather sees it.
         self._admit()
         while True:
-            drained = [s for s, st in self.active.items() if st.remaining < self.chunk]
+            drained = [
+                slot for slot, st in self.active.items()
+                if st.closed and st.available < self.chunk
+            ]
             if not drained:
                 break
             self._finish_slots(drained)
             self._admit()
-        if not self.active:
+        # 2. slots with a full chunk of rows ready advance; admitted slots
+        #    that are starved (open stream, no chunk yet) idle masked —
+        #    their gather reads the zero prefix and their carried state is
+        #    re-selected unchanged inside stream_step.
+        ready = [
+            slot for slot, st in self.active.items()
+            if st.available >= self.chunk
+        ]
+        self.stats.starved_slot_ticks += len(self.active) - len(ready)
+        if not ready:
             return {}
-
-        # 2. gather the decode block from the device arena by (shard-local)
-        #    slot offset; idle slots read the zero rows (harmless: a slot's
-        #    state is re-initialized when a stream claims it).
-        offs = np.zeros((self.n_slots,), dtype=np.int32)
-        for slot, st in self.active.items():
-            offs[slot] = st.arena_start + st.pos
+        idx = np.zeros((self.n_slots, self.chunk), dtype=np.int32)
+        mask = np.zeros((self.n_slots,), dtype=bool)
+        for slot in ready:
+            idx[slot] = self.active[slot].rows[: self.chunk]
+            mask[slot] = True
 
         # 3. the one jitted call for all live streams — under shard_map when
         #    the scheduler spans a mesh (gather + step fused, shard-local).
+        idx_j, mask_j = jnp.asarray(idx), jnp.asarray(mask)
         if self._sharded_step is not None:
             self.state, bits, delta = self._sharded_step(
-                self._arena, jnp.asarray(offs), self.state
+                self._arena, idx_j, mask_j, self.state
             )
         else:
-            block = self._gather(self._arena, jnp.asarray(offs))  # (n_slots, chunk, ·)
-            if self.packed:
-                self.state, bits, delta = self._step_fn(self.state, block, self._weights)
-            else:
-                self.state, bits, delta = self._step_fn(self.state, block)
+            block = self._gather(self._arena, idx_j)  # (n_slots, chunk, ·)
+            weights = self._weights if self.packed else None
+            self.state, bits, delta = self._step_fn(
+                self.state, block, weights, mask_j
+            )
         self.offset = self.offset + delta
         bits_np = np.asarray(bits)
         self.stats.ticks += 1
-        self.stats.steps_decoded += self.n_slots * self.chunk
+        self.stats.steps_decoded += len(ready) * self.chunk
 
         # 4. distribute newly-final bits.
         emitted: Dict[str, np.ndarray] = {}
-        for slot, st in self.active.items():
+        for slot in ready:
+            st = self.active[slot]
+            st.rows = st.rows[self.chunk :]
             st.pos += self.chunk
             committable = max(0, st.pos - self.depth)
             n_new = committable - st.committed
@@ -307,10 +462,36 @@ class StreamScheduler:
         return emitted
 
     def run(self) -> Dict[str, Tuple[np.ndarray, float]]:
-        """Drain everything; returns {stream_id: (bits (T,), metric)}."""
+        """Drain everything; returns {stream_id: (bits (T,), metric)}.
+
+        Every open stream must either be closed or have a producer attached:
+        a stream waiting on future ``submit_chunk`` calls can never make
+        progress inside this loop, so that state raises instead of spinning
+        (producer-fed streams busy-poll — their source delivers on its own
+        clock)."""
         while self.pending_work():
+            marker = self._progress_marker()
             self.step()
+            if marker == self._progress_marker() and not any(
+                st.producer is not None and not st.closed
+                for st in self._by_id.values()
+            ):
+                starved = sorted(
+                    st.stream_id for st in self._by_id.values() if not st.closed
+                )
+                raise RuntimeError(
+                    f"StreamScheduler.run() stalled: open streams {starved} are "
+                    "starved with no producer attached — drive step() from your "
+                    "serving loop, attach a ChunkProducer, or close() them"
+                )
         return self.results
+
+    def _progress_marker(self) -> Tuple[int, int, int]:
+        return (
+            self.stats.ticks,
+            self.stats.streams_finished,
+            sum(st.fed + st.queued_rows for st in self._by_id.values()),
+        )
 
     def result(self, stream_id: str) -> Tuple[np.ndarray, float]:
         return self.results[stream_id]
@@ -325,31 +506,61 @@ class StreamScheduler:
         return self.alloc.utilization()
 
     def load_report(self) -> Dict[str, object]:
-        """Occupancy per shard plus the mesh-global scalars.  The per-shard
-        counts come from this controller's bookkeeping; the totals reduce
-        through parallel.collectives.sum_across_shards — the same psum a
-        multi-controller deployment (one host per shard) would issue, so the
-        global view never gathers any decode state."""
+        """Occupancy and queue depth per shard plus the mesh-global scalars.
+        The per-shard counts come from this controller's bookkeeping; the
+        totals reduce through parallel.collectives.sum_across_shards — the
+        same psum a multi-controller deployment (one host per shard) would
+        issue, so the global view never gathers any decode state.  Callers
+        throttle on the queue-depth numbers: ``queued_rows_total`` is how
+        much input sits unconsumed on-device, ``starved_active`` how many
+        slots are idling for lack of it."""
         per_shard = np.zeros((self.n_shards,), dtype=np.int32)
-        for slot in self.active:
-            per_shard[slot // self.slots_per_shard] += 1
+        per_shard_queued = np.zeros((self.n_shards,), dtype=np.int32)
+        starved = 0
+        for slot, st in self.active.items():
+            shard = slot // self.slots_per_shard
+            per_shard[shard] += 1
+            per_shard_queued[shard] += st.available
+            if not st.closed and st.available < self.chunk:
+                starved += 1
         per_shard_pending = np.zeros((self.n_shards,), dtype=np.int32)
         per_shard_pending[0] = len(self.pending)  # FIFO queue lives host-side
+        pending_rows = sum(st.queued_rows for st in self.pending)
         if self.mesh is not None:
             from repro.parallel.collectives import sum_across_shards
 
             totals = sum_across_shards(
                 self.mesh, self.mesh_axis,
-                jnp.stack([jnp.asarray(per_shard), jnp.asarray(per_shard_pending)], 1),
+                jnp.stack(
+                    [
+                        jnp.asarray(per_shard),
+                        jnp.asarray(per_shard_pending),
+                        jnp.asarray(per_shard_queued),
+                    ],
+                    1,
+                ),
             )
-            active_total, pending_total = (int(x) for x in np.asarray(totals))
+            active_total, pending_total, queued_total = (
+                int(x) for x in np.asarray(totals)
+            )
         else:
-            active_total, pending_total = int(per_shard.sum()), len(self.pending)
+            active_total = int(per_shard.sum())
+            pending_total = len(self.pending)
+            queued_total = int(per_shard_queued.sum())
         return {
             "n_shards": self.n_shards,
             "per_shard_active": per_shard.tolist(),
+            "per_shard_queued_rows": per_shard_queued.tolist(),
             "active_total": active_total,
             "pending_total": pending_total,
+            "queued_rows_total": queued_total,
+            "pending_rows": pending_rows,
+            # deepest single stream queue (vs its max_buffered bound) — the
+            # number a throttling caller compares against the credit limit
+            "max_stream_queued_rows": max(
+                (st.buffered for st in self._by_id.values()), default=0
+            ),
+            "starved_active": starved,
             "utilization": active_total / self.n_slots,
         }
 
@@ -358,9 +569,73 @@ class StreamScheduler:
     def _shard_of(self, slot: int) -> int:
         return slot // self.slots_per_shard
 
+    def _open(self, stream_id: str) -> _Stream:
+        try:
+            return self._by_id[stream_id]
+        except KeyError:
+            raise KeyError(
+                f"unknown or finished stream {stream_id!r} (open_stream first)"
+            ) from None
+
+    def _check_rows(self, rows: np.ndarray) -> None:
+        expected = (
+            self.code.n_out if self.inputs == "received" else self.code.n_symbols
+        )
+        kind = "received symbols" if self.inputs == "received" else "bm tables"
+        if rows.ndim != 2 or rows.shape[1] != expected:
+            raise ValueError(
+                f"{self.inputs!r} streams take {kind} shaped (t, {expected}), "
+                f"got {rows.shape}"
+            )
+
+    def _accept_rows(self, st: _Stream, rows: np.ndarray) -> None:
+        """Route accepted rows: straight into the arena for admitted streams,
+        host-side queue otherwise (no shard known until a slot is claimed)."""
+        if st.slot is not None:
+            self._append_stream_rows(st, rows)
+        else:
+            st.queued.append(rows)
+            st.queued_rows += rows.shape[0]
+
+    def _append_stream_rows(self, st: _Stream, rows: np.ndarray) -> None:
+        """Append a chunk to the stream's shard slab and extend its row map.
+        Features are built here chunk-by-chunk (``t0=st.fed`` keeps the
+        puncture phase right no matter how arrival sizes slice the stream)."""
+        data = jnp.asarray(rows)
+        if self.inputs == "received":
+            data = self._plan.features(data, t0=st.fed)
+        start = self._append_rows(st.shard, data)
+        st.rows = np.concatenate(
+            [st.rows, np.arange(start, start + rows.shape[0], dtype=np.int32)]
+        )
+        st.fed += rows.shape[0]
+
+    def _poll_producers(self) -> None:
+        """Pull from attached producers into each stream's queue, never past
+        its credit — the scheduler-side half of the backpressure contract."""
+        for st in list(self.active.values()) + list(self.pending):
+            if st.producer is None or st.closed:
+                continue
+            credit = st.max_buffered - st.buffered
+            if credit > 0:
+                got = st.producer.poll(credit)
+                if got is not None:
+                    got = np.asarray(got, dtype=np.float32)
+                    if got.shape[0]:
+                        self._check_rows(got)
+                        if got.shape[0] > credit:
+                            raise ValueError(
+                                f"producer for {st.stream_id!r} returned "
+                                f"{got.shape[0]} rows against credit {credit}"
+                            )
+                        self._accept_rows(st, got)
+                        self.stats.chunks_submitted += 1
+            if st.producer.exhausted:
+                st.closed = True
+
     def _pin_arena(self) -> None:
         """Re-assert the per-shard arena placement after an eager mutation
-        (admission append, growth, compaction — all off the hot path)."""
+        (chunk append, growth, compaction — all off the hot path)."""
         if self._arena_sharding is not None:
             self._arena = jax.device_put(self._arena, self._arena_sharding)
 
@@ -372,23 +647,17 @@ class StreamScheduler:
         while self.pending and self.alloc.free:
             st = self.pending.popleft()
             slot = self.alloc.claim(st.stream_id)
-            # reset at CLAIM time, not release time: free slots keep being
-            # advanced with zero branch metrics every tick, which would
-            # otherwise erase the start-in-state-0 constraint (paper §IV-B)
-            # for the next stream.
+            # reset at CLAIM time, not release time: a recycled slot's pm/ring
+            # must not leak the previous resident's state into the
+            # start-in-state-0 constraint (paper §IV-B) for the next stream.
             self._reset_slot(slot)
-            # move the stream's input rows into the arena slab of the shard
-            # hosting its slot (features are built once here — phase 0 is
-            # the stream start, so any later window of them is correctly
-            # puncture-phased).
-            rows = jnp.asarray(st.bm)
-            if self.inputs == "received":
-                rows = self._plan.features(rows, t0=0)
+            st.slot = slot
             st.shard = self._shard_of(slot)
-            st.arena_start = self._append_rows(st.shard, rows)
-            st.bm = None
             self.active[slot] = st
             self.stats.slot_claims += 1
+            if st.queued:
+                queued, st.queued, st.queued_rows = st.queued, [], 0
+                self._append_stream_rows(st, np.concatenate(queued, axis=0))
         self._maybe_compact()
 
     def _append_rows(self, shard: int, rows: jnp.ndarray) -> int:
@@ -414,12 +683,12 @@ class StreamScheduler:
         return start
 
     def _maybe_compact(self) -> None:
-        """Rebuild every shard's used prefix from its live segments when
-        retired rows dominate the arena (off the hot path; keeps long-lived
-        servers bounded).  Capacity is kept when the live rows fit, so the
-        tick's compiled shape survives the compaction."""
-        live = sum(st.remaining for st in self.active.values()) + sum(
-            st.n_steps for st in self.pending
+        """Rebuild every shard's used prefix from its live (unconsumed)
+        segments when dead rows dominate the arena (off the hot path; keeps
+        long-lived servers bounded).  Capacity is kept when the live rows
+        fit, so the tick's compiled shape survives the compaction."""
+        live = sum(st.available for st in self.active.values()) + sum(
+            st.queued_rows for st in self._by_id.values()
         )
         if sum(self._arena_len) <= max(
             self._compact_ratio * (live + self.n_shards * self.chunk),
@@ -435,13 +704,13 @@ class StreamScheduler:
             parts = [jnp.zeros((self.chunk, self._width), dtype=jnp.float32)]
             cursor = self.chunk
             for st in by_shard.get(shard, ()):
-                seg = self._arena[
-                    shard, st.arena_start + st.pos : st.arena_start + st.n_steps
-                ]
-                # keep arena_start meaning "row of stream step 0"
-                st.arena_start = cursor - st.pos
-                parts.append(seg)
-                cursor += seg.shape[0]
+                n = st.available
+                if n:
+                    parts.append(
+                        jnp.take(self._arena[shard], jnp.asarray(st.rows), axis=0)
+                    )
+                st.rows = np.arange(cursor, cursor + n, dtype=np.int32)
+                cursor += n
             parts.append(jnp.zeros((max(cap - cursor, 0), self._width), jnp.float32))
             slabs.append(jnp.concatenate(parts, axis=0))
             self._arena_len[shard] = cursor
@@ -463,9 +732,10 @@ class StreamScheduler:
         self.offset = self.offset.at[slot].set(0.0)
 
     def _tail_rows(self, st: _Stream) -> jnp.ndarray:
-        """(r, M) bm tables for a stream's remaining odd tail, sliced from
-        its shard's arena slab (raw features go through the metric plan)."""
-        seg = self._arena[st.shard, st.arena_start + st.pos : st.arena_start + st.n_steps]
+        """(r, M) bm tables for a stream's remaining sub-chunk tail, gathered
+        from its shard's arena slab by row index (raw features go through
+        the metric plan)."""
+        seg = jnp.take(self._arena[st.shard], jnp.asarray(st.rows), axis=0)
         if self.inputs == "received":
             return self._plan.bm_from_features(seg)
         return seg
@@ -504,7 +774,7 @@ class StreamScheduler:
         # tail-feed, grouped by tail length r (each group one batched call)
         by_r: Dict[int, List[Tuple[int, _Stream]]] = {}
         for slot, st in streams:
-            by_r.setdefault(st.remaining, []).append((slot, st))
+            by_r.setdefault(st.available, []).append((slot, st))
         ordered: List[Tuple[int, _Stream]] = []
         pm_parts: List[jnp.ndarray] = []
         ring_parts: List[jnp.ndarray] = []
@@ -524,6 +794,7 @@ class StreamScheduler:
                 ring_g = jnp.concatenate([ring_g[r:], bps[:, :n]], axis=0)
                 for _, st in group:
                     st.pos += r
+                    st.rows = st.rows[r:]
             ordered.extend(group)
             pm_parts.append(pm_g)
             ring_parts.append(ring_g)
@@ -561,4 +832,6 @@ class StreamScheduler:
                 self._collect(st), metric_i + float(offset_np[slot])
             )
             self.stats.streams_finished += 1
+            st.slot = None
+            del self._by_id[st.stream_id]
             self.alloc.release(slot)  # state is re-initialized at next claim

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.trellis import ConvCode
 from repro.decode.spec import CodecSpec
+from repro.kernels.common import resolve_interpret
 from repro.stream import window as _w
 
 
@@ -115,9 +116,12 @@ class StreamSession:
         self.t = 0  # trellis steps pushed so far
         self.committed = 0  # bits already handed to the caller
         self.closed = False
-        self._interpret = interpret
+        # pin interpret-mode resolution once per session (kernels/common.py):
+        # every kernel this session dispatches — forward chunks, tail feeds,
+        # the flush traceback — must resolve to the same code path.
+        self._interpret = resolve_interpret(interpret)
         self._step = _w.jitted_stream_step(
-            code, backend=backend, normalize=normalize, interpret=interpret
+            code, backend=backend, normalize=normalize, interpret=self._interpret
         )
 
     @property

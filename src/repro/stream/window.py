@@ -145,6 +145,7 @@ def stream_step(
     state: StreamState,
     chunk_inputs: jnp.ndarray,
     weights=None,
+    active: Optional[jnp.ndarray] = None,
     backend: str = "fused",
     normalize: bool = True,
     interpret: Optional[bool] = None,
@@ -156,6 +157,14 @@ def stream_step(
         with in-kernel metrics, (B, C, F) raw features matching ``weights``.
       weights: (b0, b1, rb) folded metric weights for ``fused_packed``
         (None -> the bm-table weights; ignored by the other backends).
+      active: optional (B,) bool mask — rows where it is False keep their
+        pm/ring/offset EXACTLY as they were (the batched kernel still runs
+        over them, but its result is discarded row-wise).  This is how the
+        chunk-fed scheduler lets a starved slot idle without corrupting its
+        carried state: advancing a real stream with zero branch metrics is
+        NOT a no-op (the ACS min mixes predecessor metrics and pushes
+        garbage backpointers into the ring), so masked slots must be
+        re-selected, not just fed zeros.  None == all rows active.
       backend: 'fused' (Pallas chunk scan), 'fused_packed' (packed
         survivors + in-kernel metrics + Pallas traceback; C % 32 == 0), or
         'scan' (jnp reference).
@@ -167,8 +176,10 @@ def stream_step(
       new_state: state after the chunk (ring shifted by C).
       committed: (B, C) decoded bits for the C oldest window positions —
         positions [t - R, t - D) where t is the new frontier.  The caller
-        masks off any that predate the stream start (session bookkeeping).
-      offset_delta: (B,) the amount subtracted from the path metrics.
+        masks off any that predate the stream start (session bookkeeping);
+        rows masked inactive hold garbage the caller must ignore.
+      offset_delta: (B,) the amount subtracted from the path metrics (0 for
+        masked rows).
     """
     pm, ring = state
     C = chunk_inputs.shape[1]
@@ -207,6 +218,11 @@ def stream_step(
         new_pm = jnp.minimum(new_pm - delta[:, None], BIG)
     else:
         delta = jnp.zeros(new_pm.shape[:1], dtype=new_pm.dtype)
+    if active is not None:
+        keep = active.astype(jnp.bool_)
+        new_pm = jnp.where(keep[:, None], new_pm, pm)
+        ring = jnp.where(keep[None, :, None], ring, state.ring)
+        delta = jnp.where(keep, delta, jnp.zeros_like(delta))
     return StreamState(pm=new_pm, ring=ring), committed, delta
 
 
@@ -258,11 +274,14 @@ def make_sharded_stream_step(
     global coordination is the host-side admit/retire bookkeeping and the
     scalar reductions in parallel.collectives.
 
-    Returns ``tick(arena, offs, state) -> (state, committed_bits, delta)``
-    where ``arena`` is the (n_shards, cap, W) stacked per-shard arena,
-    ``offs`` the (n_slots,) shard-LOCAL row offsets (idle slots point at the
-    zero prefix), and the outputs keep the per-shard layout of
-    ``state_shardings``.
+    Returns ``tick(arena, idx, active, state) -> (state, committed_bits,
+    delta)`` where ``arena`` is the (n_shards, cap, W) stacked per-shard
+    arena, ``idx`` the (n_slots, chunk) shard-LOCAL arena rows each slot
+    decodes this tick (idle/starved slots point at the zero prefix — row
+    indices rather than a base offset, because a chunk-fed stream's rows
+    need not be contiguous in the arena), ``active`` the (n_slots,) bool
+    mask of slots whose carried state actually advances (see stream_step),
+    and the outputs keep the per-shard layout of ``state_shardings``.
 
     Ticks without custom ``weights`` are memoized on the static config (like
     jitted_stream_step), so every scheduler on the same (code, mesh, ...)
@@ -284,16 +303,15 @@ def make_sharded_stream_step(
 
         weights = table_weights(code)
 
-    def local_tick(arena, offs, pm, ring, *w):
-        # arena: (1, cap, W) — this shard's slab; offs: (slots_per_shard,)
-        block = jnp.take(
-            arena[0], offs[:, None] + jnp.arange(chunk)[None, :], axis=0
-        )  # (slots_per_shard, chunk, W)
+    def local_tick(arena, idx, active, pm, ring, *w):
+        # arena: (1, cap, W) — this shard's slab; idx: (slots_per_shard, C)
+        block = jnp.take(arena[0], idx, axis=0)  # (slots_per_shard, chunk, W)
         state, bits, delta = stream_step(
             code,
             StreamState(pm=pm, ring=ring),
             block,
             weights=w[0] if w else None,
+            active=active,
             backend=backend,
             normalize=normalize,
             interpret=interpret,
@@ -309,15 +327,16 @@ def make_sharded_stream_step(
         shard_map(
             local_tick,
             mesh=mesh,
-            in_specs=(P(axis, None, None), P(axis), P(axis, None), P(None, axis, None))
+            in_specs=(P(axis, None, None), P(axis, None), P(axis),
+                      P(axis, None), P(None, axis, None))
             + w_specs,
             out_specs=(P(axis, None), P(None, axis, None), P(axis, None), P(axis)),
             check_rep=False,
         )
     )
 
-    def tick(arena, offs, state: StreamState):
-        pm, ring, bits, delta = fn(arena, offs, state.pm, state.ring, *w_args)
+    def tick(arena, idx, active, state: StreamState):
+        pm, ring, bits, delta = fn(arena, idx, active, state.pm, state.ring, *w_args)
         return StreamState(pm=pm, ring=ring), bits, delta
 
     if cache_key is not None:
@@ -335,7 +354,7 @@ def jitted_stream_step(
     """Compiled stream_step, cached on the static config so every session and
     scheduler with the same (code, backend, flags) shares one executable per
     (batch, chunk) shape instead of re-tracing per instance.  The returned
-    callable takes (state, chunk_inputs[, weights])."""
+    callable takes (state, chunk_inputs[, weights[, active]])."""
     return jax.jit(
         functools.partial(
             stream_step, code, backend=backend, normalize=normalize, interpret=interpret

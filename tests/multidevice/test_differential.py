@@ -97,3 +97,89 @@ def test_sharded_matches_single_in_truncation_regime(case, mesh81):
         sid = f"s{i}"
         np.testing.assert_array_equal(out_shard[sid][0], out_single[sid][0])
         assert out_shard[sid][1] == pytest.approx(out_single[sid][1], abs=1e-3)
+
+
+@st.composite
+def arrival_plans(draw):
+    """Chunk-arrival schedules for the online-ingestion fuzz: per-stream
+    burst sizes, starvation gaps, and early close."""
+    n_streams = draw(st.integers(3, 6))
+    plans = []
+    for _ in range(n_streams):
+        plans.append((
+            draw(st.integers(16, 120)),                                  # info bits
+            tuple(draw(st.lists(st.integers(1, 60), min_size=1, max_size=6))),
+            draw(st.integers(0, 2)),                                     # gap ticks
+            draw(st.booleans()),                                         # early close
+        ))
+    return plans, draw(st.integers(0, 2 ** 16))
+
+
+@settings(max_examples=6, deadline=None)
+@given(case=arrival_plans())
+def test_sharded_online_ingestion_matches_offline(case, mesh81):
+    """Chunk-fed arrival (bursty, starved, early-closed) through the SHARDED
+    scheduler == one-shot submit of the concatenated rows on the sharded AND
+    single-device schedulers, bit for bit."""
+    from repro.stream import StreamBusy
+
+    plans, seed = case
+    spec = CodecSpec(code=CODE_K3_STD)
+    key = jax.random.PRNGKey(seed)
+    online = StreamScheduler(spec, n_slots=8, chunk=CHUNK, depth=DEPTH,
+                             backend="scan", mesh=mesh81)
+    offline_shard = StreamScheduler(spec, n_slots=8, chunk=CHUNK, depth=DEPTH,
+                                    backend="scan", mesh=mesh81)
+    offline_single = StreamScheduler(spec, n_slots=8, chunk=CHUNK, depth=DEPTH,
+                                     backend="scan")
+    feeds = {}
+    for i, (info_bits, sizes, gap, early_close) in enumerate(plans):
+        bits = jax.random.bernoulli(jax.random.fold_in(key, i), 0.5,
+                                    (1, info_bits)).astype(jnp.int32)
+        rx = spec.channel(jax.random.fold_in(key, 1000 + i),
+                          spec.encode(bits), flip_prob=0.05)
+        table = np.asarray(spec.branch_metrics(rx))[0]
+        chunks, k = [], 0
+        for sz in sizes:
+            chunks.append(table[k : k + sz])
+            k += sz
+            if k >= len(table):
+                break
+        if k < len(table) and not early_close:
+            chunks.append(table[k:])
+        chunks = [c for c in chunks if len(c)]
+        actual = (np.concatenate(chunks, axis=0) if chunks
+                  else np.zeros((0, table.shape[1]), np.float32))
+        sid = f"s{i}"
+        offline_shard.submit(sid, actual)
+        offline_single.submit(sid, actual)
+        online.open_stream(sid)
+        feeds[sid] = {"chunks": chunks, "gap": gap, "wait": 0}
+    guard = 0
+    while online.pending_work():
+        for sid, f in feeds.items():
+            if not f["chunks"]:
+                continue
+            if f["wait"] > 0:
+                f["wait"] -= 1
+                continue
+            try:
+                online.submit_chunk(sid, f["chunks"][0])
+            except StreamBusy:
+                continue
+            f["chunks"].pop(0)
+            f["wait"] = f["gap"]
+            if not f["chunks"]:
+                online.close(sid)
+        online.step()
+        guard += 1
+        assert guard < 2000, "online drain did not converge"
+    for sid in feeds:
+        if feeds[sid]["chunks"]:
+            online.close(sid)
+    out_online = online.results
+    out_shard, out_single = offline_shard.run(), offline_single.run()
+    for sid in out_shard:
+        np.testing.assert_array_equal(out_online[sid][0], out_shard[sid][0])
+        np.testing.assert_array_equal(out_online[sid][0], out_single[sid][0])
+        assert out_online[sid][1] == pytest.approx(out_shard[sid][1], abs=1e-3)

@@ -170,3 +170,55 @@ def test_sharded_stream_backend_executes_bit_exact(mesh81, rng):
         np.asarray(res.path_metric), np.asarray(ref_metric), rtol=1e-4
     )
     assert res.diagnostics["shards"] == 8
+
+
+def test_sharded_online_chunk_fed_with_starvation(mesh81, rng):
+    """Chunk-fed sharded scheduler: producer-fed streams with bursty arrival
+    starve their slots across shards; results stay bit-exact with the block
+    decoder and the per-shard queue accounting reduces coherently."""
+    sched = StreamScheduler(CODE, n_slots=8, chunk=16, depth=300,
+                            backend="scan", mesh=mesh81, max_buffered=64)
+    refs = {}
+    for i in range(10):
+        _, bm = _noisy_bm(jax.random.fold_in(rng, i), 1, (92, 60, 128)[i % 3])
+        rb, _ = viterbi_decode(CODE, bm)
+        refs[f"s{i}"] = np.asarray(rb[0])
+        table = np.asarray(bm[0])
+        sched.open_stream(f"s{i}",
+                          producer=iter([table[k : k + 29]
+                                         for k in range(0, len(table), 29)]))
+    report_seen = {"queued": 0, "starved": 0}
+    while sched.pending_work():
+        sched.step()
+        report = sched.load_report()
+        assert report["queued_rows_total"] == sum(report["per_shard_queued_rows"])
+        report_seen["queued"] = max(report_seen["queued"], report["queued_rows_total"])
+        report_seen["starved"] = max(report_seen["starved"], report["starved_active"])
+    assert report_seen["queued"] > 0  # the accounting actually saw live queues
+    for sid, rb in refs.items():
+        np.testing.assert_array_equal(sched.results[sid][0], rb)
+
+
+def test_sharded_submit_adapter_over_chunk_path(mesh81, rng):
+    """The sharded scheduler's submit() rides the same chunk ingestion path
+    (open + submit_chunk + close) — and stays bit-exact with it."""
+    _, bm = _noisy_bm(rng, 8, 92)
+    ref_bits, _ = viterbi_decode(CODE, bm)
+    via_submit = StreamScheduler(CODE, n_slots=8, chunk=16, depth=128,
+                                 backend="scan", mesh=mesh81)
+    via_chunks = StreamScheduler(CODE, n_slots=8, chunk=16, depth=128,
+                                 backend="scan", mesh=mesh81)
+    for i in range(8):
+        via_submit.submit(f"s{i}", bm[i])
+        via_chunks.open_stream(f"s{i}",
+                               max_buffered=max(via_chunks.max_buffered,
+                                                bm.shape[1]))
+        table = np.asarray(bm[i])
+        via_chunks.submit_chunk(f"s{i}", table[:37])
+        via_chunks.submit_chunk(f"s{i}", table[37:], close=True)
+    out_a, out_b = via_submit.run(), via_chunks.run()
+    for i in range(8):
+        sid = f"s{i}"
+        np.testing.assert_array_equal(out_a[sid][0], np.asarray(ref_bits[i]))
+        np.testing.assert_array_equal(out_b[sid][0], out_a[sid][0])
+        assert abs(out_a[sid][1] - out_b[sid][1]) < 1e-3

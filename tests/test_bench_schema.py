@@ -1,0 +1,96 @@
+"""BENCH_viterbi.json schema gate (v3): the validator the CI bench-smoke job
+runs must accept well-formed payloads — including the new ``stream.online``
+section — and reject the invariants it exists to guard."""
+import copy
+
+import pytest
+
+from benchmarks.viterbi_throughput import BENCH_SCHEMA, check_schema
+
+
+def _workload():
+    return {
+        "workload": {"constraint": 7, "n_states": 64, "batch": 8, "steps": 90},
+        "backends": {
+            name: {"bits_per_s": 1e6}
+            for name in ("sequential", "fused", "fused_packed",
+                         "fused_packed_received")
+        },
+        "survivor_bytes": {"shrink_x": 30.0},
+        "speedup": {
+            "fused_packed_vs_fused_hbm_model": 14.8,
+            "fused_packed_received_vs_fused_hbm_model": 19.0,
+        },
+    }
+
+
+def _payload():
+    return {
+        "schema": BENCH_SCHEMA,
+        "paper_workload_k7": _workload(),
+        "paper_workload_k3": _workload(),
+        "stream": {
+            "by_shards": {
+                "1": {"shards": 1, "slots_per_shard": 8, "n_slots": 8,
+                      "bits_per_s": 1e5},
+                "8": {"shards": 8, "slots_per_shard": 8, "n_slots": 64,
+                      "bits_per_s": 8e5, "scaling_vs_shards1": 8.0},
+            },
+            "online": {
+                "sessions": 8,
+                "steps": 384,
+                "chunk": 64,
+                "depth": 15,
+                "max_buffered": 512,
+                "offered_rows_per_s_per_stream": 250.0,
+                "bits_per_s": 1.2e3,
+                "ticks": 7,
+                "bit_exact_vs_offline": True,
+                "latency_s": {"mean": 0.6, "p50": 0.55, "p95": 1.0, "max": 1.2},
+                "queue_depth_rows": {"mean": 640.0, "max": 1650,
+                                     "max_stream": 244},
+            },
+        },
+    }
+
+
+def test_schema_is_v3():
+    assert BENCH_SCHEMA == "bench_viterbi/v3"
+
+
+def test_check_schema_accepts_valid_payload():
+    check_schema(_payload())
+
+
+def test_check_schema_accepts_payload_without_optional_sections():
+    payload = _payload()
+    del payload["stream"]
+    check_schema(payload)
+    payload = _payload()
+    del payload["stream"]["online"]  # by_shards alone (pre-v3 content) is fine
+    check_schema(payload)
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        lambda p: p.__setitem__("schema", "bench_viterbi/v2"),
+        lambda p: p["stream"]["online"].pop("latency_s"),
+        lambda p: p["stream"]["online"].pop("max_buffered"),
+        lambda p: p["stream"]["online"].__setitem__("bit_exact_vs_offline", False),
+        # a single stream's queue deeper than its bound = backpressure broken
+        lambda p: p["stream"]["online"]["queue_depth_rows"].__setitem__(
+            "max_stream", 513
+        ),
+        # total queue deeper than sessions x bound = accounting broken
+        lambda p: p["stream"]["online"]["queue_depth_rows"].__setitem__(
+            "max", 8 * 512 + 1
+        ),
+        lambda p: p["stream"]["online"]["latency_s"].__setitem__("p95", 0.1),
+    ],
+)
+def test_check_schema_rejects_broken_online_sections(mutate):
+    payload = copy.deepcopy(_payload())
+    mutate(payload)
+    with pytest.raises((AssertionError, KeyError)):
+        check_schema(payload)

@@ -209,9 +209,9 @@ def test_scheduler_single_jitted_call_per_tick(rng):
     traces = {"n": 0}
     orig = sched._step_fn
 
-    def counting(state, bm):
+    def counting(state, bm, weights=None, active=None):
         traces["n"] += 1
-        return orig(state, bm)
+        return orig(state, bm, weights, active)
 
     sched._step_fn = counting
     for i in range(8):
@@ -477,7 +477,7 @@ def test_scheduler_evict_while_draining(rng):
     for _ in range(8):
         sched.step()
         st_b = next((s for s in sched.active.values() if s.stream_id == "b"), None)
-        if st_b is not None and 0 < st_b.remaining < sched.chunk:
+        if st_b is not None and 0 < st_b.available < sched.chunk:
             break
     else:
         pytest.fail("stream 'b' never reached the draining window")
@@ -595,3 +595,168 @@ def test_viterbi_head_streaming_mode(rng):
     dec, ber, exact = head.roundtrip(jax.random.fold_in(rng, 1), bits, flip_prob=0.01)
     assert dec.shape == bits.shape
     assert float(ber) < 0.05
+
+
+# --------------------------------------------------------------------------- #
+# (i) packed odd-tail hardening: T % 32 != 0 in the truncation regime          #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("T", [33, 65, 97, 255])
+@pytest.mark.parametrize("depth", [32, 40, 64])
+def test_packed_odd_tail_truncation_open_trellis_session(T, depth, rng):
+    """Regression (odd-tail audit): T % 32 != 0 with terminated=False — the
+    truncation regime — through the packed session's unpack-at-flush path.
+    The final segment is smaller than one packed word and the requested
+    depth need not be word-aligned (the session rounds it up); committed
+    bits and metric must match the unpacked scan backend bit-for-bit at the
+    session's EFFECTIVE (rounded) depth."""
+    code = CODE_K3_STD
+    bits = jax.random.bernoulli(jax.random.fold_in(rng, T * 100 + depth), 0.5,
+                                (4, T)).astype(jnp.int32)
+    from repro.core import bsc as _bsc
+    coded = encode(code, bits, terminate=False)
+    rx = _bsc(jax.random.fold_in(rng, T), coded, 0.03)
+    bm = hard_branch_metrics(code, rx)
+    assert bm.shape[1] % 32 != 0
+    sess_p = StreamSession(code, batch=4, chunk=32, depth=depth,
+                           backend="fused_packed")
+    b_packed, m_packed = sess_p.decode_all(bm, terminated=False)
+    # compare at the packed session's effective depth (rounded to a word)
+    sess_s = StreamSession(code, batch=4, chunk=32, depth=sess_p.depth,
+                           backend="scan")
+    b_scan, m_scan = sess_s.decode_all(bm, terminated=False)
+    np.testing.assert_array_equal(np.asarray(b_packed), np.asarray(b_scan))
+    np.testing.assert_allclose(np.asarray(m_packed), np.asarray(m_scan),
+                               rtol=1e-5)
+
+
+def test_packed_odd_tail_open_trellis_exact_regime(rng):
+    """Same odd-tail path in the exactness regime (depth >= T): bit-identical
+    to the full-block open-trellis decode, metric included."""
+    code = CODE_K3_STD
+    for T in (33, 94, 127):
+        bits = jax.random.bernoulli(jax.random.fold_in(rng, T), 0.5,
+                                    (2, T)).astype(jnp.int32)
+        from repro.core import bsc as _bsc
+        coded = encode(code, bits, terminate=False)
+        rx = _bsc(jax.random.fold_in(rng, T + 1), coded, 0.05)
+        bm = hard_branch_metrics(code, rx)
+        ref_bits, ref_metric = viterbi_decode(code, bm, terminated=False)
+        b, m = viterbi_decode_windowed(code, bm, depth=T, chunk=32,
+                                       backend="fused_packed", terminated=False)
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(ref_bits))
+        np.testing.assert_allclose(np.asarray(m), np.asarray(ref_metric),
+                                   rtol=1e-5)
+
+
+def test_packed_scheduler_odd_tails_truncation_open_trellis(rng):
+    """Scheduler flush hardening: packed hot loop, depth < T, odd tails of
+    several lengths retiring in mixed cohorts, open trellises — identical to
+    the scan-backend scheduler at the same (word-aligned) depth."""
+    code = CODE_K3_STD
+    sp = StreamScheduler(code, n_slots=3, chunk=32, depth=64,
+                         backend="fused_packed")
+    ss = StreamScheduler(code, n_slots=3, chunk=32, depth=64, backend="scan")
+    for i, T in enumerate((97, 130, 65, 201, 99, 33)):
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, T, 0.03)
+        sp.submit(f"s{i}", bm[0], terminated=False)
+        ss.submit(f"s{i}", bm[0], terminated=False)
+    op, os_ = sp.run(), ss.run()
+    for sid in op:
+        np.testing.assert_array_equal(op[sid][0], os_[sid][0])
+        assert abs(op[sid][1] - os_[sid][1]) < 1e-3 * max(1.0, abs(os_[sid][1]))
+
+
+# --------------------------------------------------------------------------- #
+# (j) drain-before-gather: sub-chunk admissions, compaction, arena integrity   #
+# --------------------------------------------------------------------------- #
+
+
+def _assert_arena_integrity(sched):
+    """Every live slot's row map must point inside its shard's used prefix,
+    cover exactly its unconsumed steps, and never alias another stream."""
+    by_shard = {}
+    for st in sched.active.values():
+        assert len(st.rows) == st.available, st.stream_id
+        if len(st.rows):
+            assert st.rows.min() >= sched.chunk  # zero prefix is reserved
+            assert st.rows.max() < sched._arena_len[st.shard], (
+                f"{st.stream_id} points past the used prefix "
+                f"(stale _arena_len or compacted rows)"
+            )
+        by_shard.setdefault(st.shard, []).append(st)
+    for shard, streams in by_shard.items():
+        all_rows = np.concatenate([st.rows for st in streams]) if streams else []
+        assert len(all_rows) == len(set(all_rows.tolist())), "row aliasing"
+
+
+def test_scheduler_subchunk_streams_retired_same_tick_arena_integrity(rng):
+    """Regression (drain-before-gather): zero- and sub-chunk-length streams
+    submitted and retired in the same tick, interleaved with compaction
+    while long streams stay live — no stale _arena_len entries and no live
+    slot left pointing at compacted rows, checked after every tick."""
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=3, chunk=16, depth=15, backend="scan")
+    sched._compact_floor = 0
+    sched._compact_ratio = 1  # compact as aggressively as possible
+    refs = {}
+    _, bm_long = _noisy_bm(code, rng, 2, 190, 0.02)
+    for j in range(2):
+        rb, _ = viterbi_decode(code, bm_long[j : j + 1])
+        refs[f"long{j}"] = np.asarray(rb[0])
+        sched.submit(f"long{j}", bm_long[j])
+    sched.step()
+    _assert_arena_integrity(sched)
+    for i in range(8):  # churn sub-chunk and zero-length streams
+        T = (10, 0, 3, 14)[i % 4]
+        if T:
+            _, bm = _noisy_bm(code, jax.random.fold_in(rng, 50 + i), 1, T, 0.02)
+            rb, _ = viterbi_decode(code, bm)
+            refs[f"tiny{i}"] = np.asarray(rb[0])
+            sched.submit(f"tiny{i}", bm[0])
+        else:
+            refs[f"tiny{i}"] = np.zeros((0,), np.int32)
+            sched.submit(f"tiny{i}", np.zeros((0, code.n_symbols), np.float32))
+        sched.step()  # the tiny stream admits AND retires inside this tick
+        _assert_arena_integrity(sched)
+    out = sched.run()
+    _assert_arena_integrity(sched)
+    assert sched.stats.arena_compactions > 0
+    for sid, rb in refs.items():
+        np.testing.assert_array_equal(out[sid][0], rb)
+
+
+def test_scheduler_chunk_fed_submit_tick_compact_interleaving(rng):
+    """The same interleaving through the CHUNK-FED path: partial feeds land
+    between ticks and compactions relocate live, partially-consumed row
+    maps; decode stays bit-exact and the arena stays coherent throughout."""
+    from repro.stream import StreamBusy
+
+    code = CODE_K3_STD
+    sched = StreamScheduler(code, n_slots=2, chunk=16, depth=15, backend="scan")
+    sched._compact_floor = 0
+    sched._compact_ratio = 1
+    refs, feeds = {}, {}
+    for i in range(4):
+        _, bm = _noisy_bm(code, jax.random.fold_in(rng, i), 1, (90, 61, 170, 44)[i], 0.02)
+        rb, _ = viterbi_decode(code, bm)
+        refs[f"s{i}"] = np.asarray(rb[0])
+        sched.open_stream(f"s{i}")
+        t = np.asarray(bm[0])
+        feeds[f"s{i}"] = [t[k : k + 23] for k in range(0, len(t), 23)]
+    while sched.pending_work():
+        for sid, chunks in feeds.items():
+            if chunks:
+                try:
+                    sched.submit_chunk(sid, chunks[0])
+                except StreamBusy:
+                    continue
+                chunks.pop(0)
+                if not chunks:
+                    sched.close(sid)
+        sched.step()
+        _assert_arena_integrity(sched)
+    assert sched.stats.arena_compactions > 0
+    for sid, rb in refs.items():
+        np.testing.assert_array_equal(sched.results[sid][0], rb)

@@ -187,3 +187,80 @@ def test_decode_routes_received_to_in_kernel_metrics(rng):
     assert res3.diagnostics["metrics"] == "table"
     ref_custom, _ = viterbi_decode(spec.code, custom)
     np.testing.assert_array_equal(np.asarray(res3.bits), np.asarray(ref_custom))
+
+
+# --------------------------------------------------------------------------- #
+# interpret-mode resolution is pinned per decode                               #
+# --------------------------------------------------------------------------- #
+
+
+def test_interpret_resolution_pinned_per_decode(rng, monkeypatch):
+    """``interpret=None`` must resolve exactly ONCE per decode — at the
+    ops.py entry point — so the forward scan and the traceback kernel can
+    never auto-detect onto different code paths.  Per-kernel resolution
+    would consult ``jax.default_backend()`` at each kernel's trace time
+    (>= 2 consultations on a fresh shape; 0 on cached executables), so a
+    platform-context change between traces could silently split one decode
+    across compiled and interpreted kernels."""
+    from repro.kernels import common
+    from repro.kernels.ops import viterbi_decode_packed
+
+    spec = CodecSpec()
+    _, _, bm = _noisy(spec, rng, 3, 37, flip_prob=0.02)  # fresh (B, T) shape
+    calls = {"n": 0}
+    real = common.jax.default_backend
+
+    def counting():
+        calls["n"] += 1
+        return real()
+
+    monkeypatch.setattr(common.jax, "default_backend", counting)
+    bits, _ = viterbi_decode_packed(spec.code, bm)
+    assert calls["n"] == 1, (
+        f"interpret auto-detect consulted the platform {calls['n']} times in "
+        "one decode; it must be pinned once at the decode entry point"
+    )
+    ref_bits, _ = viterbi_decode(spec.code, bm)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(ref_bits))
+
+
+def test_interpret_resolution_survives_platform_flip(rng, monkeypatch):
+    """Forced host platform: even if the platform answer CHANGES mid-decode
+    (the mixed-resolution hazard), the pinned decode keeps every kernel on
+    the resolution captured at entry."""
+    from repro.kernels import common
+    from repro.kernels.ops import viterbi_decode_packed
+
+    spec = CodecSpec()
+    _, _, bm = _noisy(spec, rng, 3, 41, flip_prob=0.02)  # fresh (B, T) shape
+    real = common.jax.default_backend
+    first = {"done": False}
+
+    def flipping():
+        if not first["done"]:
+            first["done"] = True
+            return real()  # honest answer for the pinning consultation
+        return "tpu"  # later consultations would demand compiled kernels
+
+    monkeypatch.setattr(common.jax, "default_backend", flipping)
+    bits, _ = viterbi_decode_packed(spec.code, bm)  # must not try TPU lowering
+    ref_bits, _ = viterbi_decode(spec.code, bm)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(ref_bits))
+
+
+def test_stream_components_pin_interpret(mesh11):
+    """Sessions and schedulers pin the resolution at construction: one
+    stream decode spans many kernel dispatches (ticks, tail feeds, flush)
+    across which the platform answer must be frozen."""
+    from repro.kernels.common import resolve_interpret
+    from repro.stream import StreamScheduler, StreamSession
+
+    expected = resolve_interpret(None)
+    sess = StreamSession(CODE_K3_STD, chunk=32, backend="fused_packed")
+    sched = StreamScheduler(CODE_K3_STD, n_slots=2, chunk=32, backend="fused_packed")
+    sharded = StreamScheduler(
+        CODE_K3_STD, n_slots=2, chunk=32, backend="fused_packed", mesh=mesh11
+    )
+    assert sess._interpret is expected
+    assert sched._interpret is expected
+    assert sharded._interpret is expected
