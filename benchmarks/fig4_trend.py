@@ -33,4 +33,6 @@ def run() -> Dict:
 
 
 if __name__ == "__main__":
-    print(json.dumps(run(), indent=1))
+    from repro.obs.log import get_logger
+
+    get_logger("bench.fig4").info(json.dumps(run(), indent=1))

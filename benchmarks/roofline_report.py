@@ -94,6 +94,9 @@ def _hist(rows):
 
 
 if __name__ == "__main__":
+    from repro.obs.log import get_logger
+
+    log = get_logger("bench.roofline")
     out = run()
-    print(json.dumps({k: v for k, v in out.items() if k != "rows"}, indent=1))
-    print((RESULTS / "roofline.md").read_text())
+    log.info(json.dumps({k: v for k, v in out.items() if k != "rows"}, indent=1))
+    log.info((RESULTS / "roofline.md").read_text())

@@ -11,14 +11,22 @@ import sys
 import traceback
 from pathlib import Path
 
+from repro.obs.log import get_logger
+
 RESULTS = Path(__file__).resolve().parent / "results"
+
+log = get_logger("bench.run")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--quiet", action="store_true",
+                    help="warnings/failures only (JSON artifacts still written)")
     args = ap.parse_args()
+    global log
+    log = get_logger("bench.run", quiet=args.quiet)
     RESULTS.mkdir(parents=True, exist_ok=True)
 
     from benchmarks import fig3_scaling, fig4_trend, roofline_report, tables, viterbi_throughput
@@ -36,27 +44,27 @@ def main():
     report = {}
     failed = []
     for name, fn in jobs.items():
-        print(f"== {name} ==", flush=True)
+        log.info(f"== {name} ==")
         try:
             out = fn()
             report[name] = out
             (RESULTS / f"{name}.json").write_text(
                 json.dumps(out, indent=1, default=float))
             if name == "tables_3_4_5":
-                print(json.dumps({k: out[k] for k in
-                                  ("table3_dlx", "table4_picojava")}, indent=1,
-                                 default=float))
+                log.info(json.dumps({k: out[k] for k in
+                                     ("table3_dlx", "table4_picojava")}, indent=1,
+                                    default=float))
             elif name == "roofline_report":
-                print(json.dumps({k: v for k, v in out.items() if k != "rows"},
-                                 indent=1, default=float))
+                log.info(json.dumps({k: v for k, v in out.items() if k != "rows"},
+                                    indent=1, default=float))
             else:
-                print("ok")
+                log.info("ok", group=name)
         except Exception as e:
             failed.append(name)
-            print(f"FAILED {name}: {e}")
+            log.error(f"FAILED {name}: {e}")
             traceback.print_exc()
-    print(f"\n{len(report)}/{len(jobs)} benchmark groups succeeded; "
-          f"results in {RESULTS}")
+    log.info("benchmark groups done", succeeded=len(report), total=len(jobs),
+             results=str(RESULTS))
     if failed:
         sys.exit(1)
 

@@ -1,6 +1,11 @@
 """Streaming vs. block Viterbi throughput — and sharded-scheduler scaling.
 
-Three modes:
+All results merge into the ONE benchmark artifact,
+``results/BENCH_viterbi.json`` (see benchmarks/README.md): each mode owns a
+section and preserves the others, so any invocation order converges to the
+same file.  No mode writes a private side-car JSON.
+
+Four modes:
 
 * default: drives the continuous-batching StreamScheduler with >= 64
   concurrent decode sessions multiplexed through ONE jitted chunked Pallas
@@ -30,14 +35,25 @@ Three modes:
   emission (mean/p50/p95), queue-depth statistics from ``load_report()``,
   and how often slots starved.  The decoded bits are asserted identical to
   the same scheduler fed offline (arrival timing must never change the
-  decode).  Results land in ``stream.online`` of BENCH_viterbi.json
-  (schema v3).
+  decode).  Results land in ``stream.online`` of BENCH_viterbi.json.
+
+* ``--telemetry``: the observability acceptance run — drain the same
+  workload with telemetry OFF and ON (tick-phase tracing + metrics +
+  latency histograms), assert the decode is bit-identical and the measured
+  host-plane overhead stays under 5%, check the tick phase spans cover
+  >= 95% of tick wall clock, export ``results/trace.json`` (Perfetto) and
+  ``results/trace.jsonl``, run a separate device-counter drain (merge
+  depth / starved ticks / renorm accumulated inside the jitted tick; its
+  overhead is recorded but NOT gated — the S-walker merge-depth scan is
+  comparable to the whole tick on toy interpret-mode shapes), and merge an
+  ``obs`` section into BENCH_viterbi.json (schema v4).
 
   PYTHONPATH=src python benchmarks/stream_throughput.py [--sessions 64]
       [--steps 512] [--chunk 64] [--flip 0.02] [--backend fused]
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --shards 1
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --shards 8
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --online
+  PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --telemetry
 
 Numbers from the CPU container are interpret-mode / host-platform proxies
 (shape + scheduling parity only); on a real TPU the same code runs the
@@ -82,10 +98,14 @@ import numpy as np  # noqa: E402
 from repro.configs.paper_viterbi import DECODE_SPEC, STREAM  # noqa: E402
 from repro.core.viterbi import viterbi_decode  # noqa: E402
 from repro.decode import DecodeContext, get_decoder  # noqa: E402
+from repro.obs import Telemetry, get_logger, percentile  # noqa: E402
 from repro.stream import StreamScheduler, viterbi_decode_windowed  # noqa: E402
+from repro.stream.scheduler import TICK_PHASES  # noqa: E402
 
 RESULTS = Path(__file__).resolve().parent / "results"
 BENCH_JSON = RESULTS / "BENCH_viterbi.json"
+
+log = get_logger("bench.stream")
 
 
 def make_workload(spec, key, n_streams, info_bits, flip):
@@ -95,13 +115,14 @@ def make_workload(spec, key, n_streams, info_bits, flip):
     return info, spec.branch_metrics(rx)
 
 
-def run_scheduler(spec, bm, n_slots, chunk, depth, backend, mesh=None):
-    """Drain all streams through one scheduler; returns (elapsed_s, stats,
+def run_scheduler(spec, bm, n_slots, chunk, depth, backend, mesh=None,
+                  telemetry=None):
+    """Drain all streams through one scheduler; returns (elapsed_s, sched,
     results, total_bits).  Submission (arena appends) happens before the
     clock starts: the timed region is the tick loop + flushes."""
     sched = StreamScheduler(
         spec, n_slots=n_slots, chunk=chunk, depth=depth, backend=backend,
-        mesh=mesh, mesh_axis=STREAM.mesh_axis,
+        mesh=mesh, mesh_axis=STREAM.mesh_axis, telemetry=telemetry,
     )
     for i in range(bm.shape[0]):
         sched.submit(f"s{i}", bm[i])
@@ -109,16 +130,18 @@ def run_scheduler(spec, bm, n_slots, chunk, depth, backend, mesh=None):
     out = sched.run()
     elapsed = time.perf_counter() - t0
     total_bits = sum(len(b) for b, _ in out.values())
-    return elapsed, sched.stats, out, total_bits
+    return elapsed, sched, out, total_bits
 
 
 def _load_bench() -> dict:
     if BENCH_JSON.exists():
         try:
-            return json.loads(BENCH_JSON.read_text())
+            bench = json.loads(BENCH_JSON.read_text())
+            bench["schema"] = "bench_viterbi/v4"
+            return bench
         except ValueError:
             pass
-    return {"schema": "bench_viterbi/v3",
+    return {"schema": "bench_viterbi/v4",
             "generated_by": "benchmarks/stream_throughput.py"}
 
 
@@ -144,9 +167,10 @@ def run_shard_scaling(args) -> None:
     _, bm = make_workload(spec, key, n_slots, info_bits, args.flip)
 
     run_scheduler(spec, bm, n_slots, args.chunk, depth, backend, mesh=mesh)  # warm
-    elapsed, stats, out, total_bits = run_scheduler(
+    elapsed, sched, out, total_bits = run_scheduler(
         spec, bm, n_slots, args.chunk, depth, backend, mesh=mesh
     )
+    stats = sched.stats
     assert stats.streams_finished == n_slots
     platform = jax.devices()[0].platform
     row = {
@@ -192,10 +216,12 @@ def run_shard_scaling(args) -> None:
     else:
         row["bits_per_s"] = total_bits / elapsed
         row["aggregate_metric"] = "wallclock"
-    print(f"shards={n}: {n_slots} sessions x {steps} steps (backend {backend}) "
-          f"in {elapsed:.3f}s wallclock "
-          f"-> {row['bits_per_s']:,.0f} bits/s aggregate "
-          f"({row['aggregate_metric']})")
+    log.info(
+        f"shards={n}: {n_slots} sessions x {steps} steps (backend {backend}) "
+        f"in {elapsed:.3f}s wallclock "
+        f"-> {row['bits_per_s']:,.0f} bits/s aggregate "
+        f"({row['aggregate_metric']})"
+    )
 
     bench = _load_bench()
     stream = bench.setdefault("stream", {})
@@ -216,12 +242,14 @@ def run_shard_scaling(args) -> None:
                 r["wallclock_bits_per_s"] / base["wallclock_bits_per_s"]
             )
     if base and n > 1:
-        print(f"scaling vs --shards 1: {row['scaling_vs_shards1']:.2f}x "
-              f"aggregate ({row['aggregate_metric']}); single-controller "
-              f"wallclock ratio {row['wallclock_scaling_vs_shards1']:.2f}x")
+        log.info(
+            f"scaling vs --shards 1: {row['scaling_vs_shards1']:.2f}x "
+            f"aggregate ({row['aggregate_metric']}); single-controller "
+            f"wallclock ratio {row['wallclock_scaling_vs_shards1']:.2f}x"
+        )
     RESULTS.mkdir(parents=True, exist_ok=True)
     BENCH_JSON.write_text(json.dumps(bench, indent=1))
-    print(f"merged by_shards[{n}] into {BENCH_JSON}")
+    log.info(f"merged by_shards[{n}] into {BENCH_JSON}")
 
 
 def run_online(args) -> None:
@@ -297,7 +325,6 @@ def run_online(args) -> None:
         off_bits, _ = sched_probe.results[f"w{i}"]
         assert (on_bits == off_bits).all(), f"online decode diverged on s{i}"
 
-    lat = np.asarray(sorted(latencies)) if latencies else np.zeros((1,))
     row = {
         "sessions": sessions,
         "steps": steps,
@@ -314,12 +341,17 @@ def run_online(args) -> None:
         "starved_slot_ticks": sched.stats.starved_slot_ticks,
         "busy_rejections": sched.stats.busy_rejections,
         "chunks_ingested": sched.stats.chunks_submitted,
+        # per-bit commit latency, summarized through the ONE shared helper
+        # (obs.percentile: sorts, nearest-rank, safe on empty)
         "latency_s": {
-            "mean": float(lat.mean()),
-            "p50": float(lat[int(0.5 * (len(lat) - 1))]),
-            "p95": float(lat[int(0.95 * (len(lat) - 1))]),
-            "max": float(lat.max()),
+            "mean": float(np.mean(latencies)) if latencies else 0.0,
+            "p50": percentile(latencies, 0.5),
+            "p95": percentile(latencies, 0.95),
+            "max": float(max(latencies)) if latencies else 0.0,
         },
+        # the scheduler's own arrival-to-commit histogram (chunk granularity,
+        # tracked on-line inside the commit phase — no benchmark bookkeeping)
+        "latency_scheduler_s": sched.load_report()["latency_s"],
         "queue_depth_rows": {
             "mean": float(np.mean(queue_depths)) if queue_depths else 0.0,
             "max": int(max(queue_depths)) if queue_depths else 0,
@@ -327,23 +359,147 @@ def run_online(args) -> None:
         },
         "bit_exact_vs_offline": True,  # asserted above
     }
-    print(f"online: {sessions} rate-limited streams x {steps} steps "
-          f"({rate:,.0f} rows/s/stream offered, backend {backend})")
-    print(f"  {total_bits} bits in {elapsed:.3f}s -> {row['bits_per_s']:,.0f} "
-          f"bits/s sustained; latency mean {row['latency_s']['mean'] * 1e3:.1f}ms "
-          f"p95 {row['latency_s']['p95'] * 1e3:.1f}ms")
-    print(f"  queue depth mean {row['queue_depth_rows']['mean']:.0f} / "
-          f"max {row['queue_depth_rows']['max']} rows total, deepest stream "
-          f"{row['queue_depth_rows']['max_stream']} (bound {STREAM.max_buffered}"
-          f"/stream); {row['starved_slot_ticks']} starved slot-ticks over "
-          f"{row['ticks']} ticks")
-    print("  online decode bit-exact vs offline feed of the same symbols")
+    log.info(f"online: {sessions} rate-limited streams x {steps} steps "
+             f"({rate:,.0f} rows/s/stream offered, backend {backend})")
+    log.info(f"  {total_bits} bits in {elapsed:.3f}s -> {row['bits_per_s']:,.0f} "
+             f"bits/s sustained; latency mean {row['latency_s']['mean'] * 1e3:.1f}ms "
+             f"p95 {row['latency_s']['p95'] * 1e3:.1f}ms")
+    log.info(f"  queue depth mean {row['queue_depth_rows']['mean']:.0f} / "
+             f"max {row['queue_depth_rows']['max']} rows total, deepest stream "
+             f"{row['queue_depth_rows']['max_stream']} (bound {STREAM.max_buffered}"
+             f"/stream); {row['starved_slot_ticks']} starved slot-ticks over "
+             f"{row['ticks']} ticks")
+    log.info("  online decode bit-exact vs offline feed of the same symbols")
 
     bench = _load_bench()
     bench.setdefault("stream", {})["online"] = row
     RESULTS.mkdir(parents=True, exist_ok=True)
     BENCH_JSON.write_text(json.dumps(bench, indent=1))
-    print(f"merged stream.online into {BENCH_JSON}")
+    log.info(f"merged stream.online into {BENCH_JSON}")
+
+
+def run_telemetry(args) -> None:
+    """Observability acceptance run: telemetry-off vs telemetry-on drains of
+    the same workload.  Gates (all asserted here, re-checked by CI):
+
+      * decode bits identical with telemetry on (observation never changes
+        the result);
+      * host-plane overhead (tracing + metrics + latency histograms)
+        < 5% of the telemetry-off drain time, min-of-``--repeats``;
+      * tick phase spans cover >= 95% of tick wall clock;
+      * the Perfetto export loads (trace.json with a non-empty traceEvents
+        list containing tick spans).
+
+    A separate drain with device counters on records merge-depth statistics
+    and ITS overhead ungated: the S-walker merge-depth scan is O(R·S) work
+    per tick — comparable to the whole tick on the toy interpret-mode CPU
+    shapes CI runs, and a deliberate opt-in everywhere.
+    """
+    spec = DECODE_SPEC
+    depth = STREAM.depth(spec.code)
+    sessions = args.sessions or (8 if args.smoke else 32)
+    steps = args.steps or (384 if args.smoke else 1024)
+    backend = args.backend or "scan"
+    chunk = args.chunk
+    repeats = args.repeats
+    key = jax.random.PRNGKey(0)
+    info_bits = steps - spec.n_flush
+    _, bm = make_workload(spec, key, sessions, info_bits, args.flip)
+    bm = np.asarray(bm)
+
+    def drain(make_tel):
+        return run_scheduler(
+            spec, bm, sessions, chunk, depth, backend,
+            telemetry=make_tel() if make_tel else None,
+        )
+
+    host_tel = lambda: Telemetry.enabled(device_counters=False)  # noqa: E731
+    dev_tel = lambda: Telemetry.enabled(device_counters=True)  # noqa: E731
+
+    # warm every jit variant before any timed drain (the device-counter step
+    # is a different traced computation)
+    drain(None)
+    drain(host_tel)
+    drain(dev_tel)
+
+    t_off = min(drain(None)[0] for _ in range(repeats))
+    on_runs = [drain(host_tel) for _ in range(repeats)]
+    t_on = min(r[0] for r in on_runs)
+    _, sched_on, out_on, _ = on_runs[-1]
+    _, _, out_off, total_bits = drain(None)
+
+    for i in range(sessions):
+        assert (out_on[f"s{i}"][0] == out_off[f"s{i}"][0]).all(), (
+            f"telemetry changed the decode of s{i}"
+        )
+
+    tracer = sched_on.telemetry.tracer
+    coverage = tracer.coverage("tick", TICK_PHASES)
+    overhead = (t_on - t_off) / t_off
+    n_ticks = sched_on.stats.ticks
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    trace_path = RESULTS / "trace.json"
+    tracer.write_chrome(trace_path)
+    tracer.write_jsonl(RESULTS / "trace.jsonl")
+    trace = json.loads(trace_path.read_text())
+    tick_events = [e for e in trace["traceEvents"] if e.get("name") == "tick"]
+    assert tick_events, "trace.json has no tick spans"
+
+    # device-counter drain: overhead recorded, not gated
+    t_dev, sched_dev, out_dev, _ = min(
+        (drain(dev_tel) for _ in range(repeats)), key=lambda r: r[0]
+    )
+    for i in range(sessions):
+        assert (out_dev[f"s{i}"][0] == out_off[f"s{i}"][0]).all(), (
+            f"device counters changed the decode of s{i}"
+        )
+    depth_hist = sched_dev.telemetry.metrics.histogram("stream_merge_depth")
+
+    row = {
+        "sessions": sessions,
+        "steps": steps,
+        "chunk": chunk,
+        "depth": depth,
+        "backend": backend,
+        "device": jax.devices()[0].platform,
+        "repeats": repeats,
+        "ticks": n_ticks,
+        "elapsed_off_s": t_off,
+        "elapsed_on_s": t_on,
+        "overhead_frac": overhead,
+        "tick_span_coverage": coverage,
+        "trace_events": len(trace["traceEvents"]),
+        "latency_s": sched_on.load_report()["latency_s"],
+        "device_counters": {
+            "elapsed_s": t_dev,
+            "overhead_frac_ungated": (t_dev - t_off) / t_off,
+            "merge_depth": depth_hist.summary(),
+        },
+        "bit_exact_with_telemetry": True,  # asserted above
+    }
+    log.info(f"telemetry: {sessions} streams x {steps} steps "
+             f"(backend {backend}, min of {repeats})")
+    log.info(f"  off {t_off:.3f}s / on {t_on:.3f}s -> overhead "
+             f"{overhead * 100:.2f}% (gate < 5%); phase coverage "
+             f"{coverage * 100:.2f}% of {n_ticks} ticks (gate >= 95%)")
+    log.info(f"  device counters: {t_dev:.3f}s "
+             f"({row['device_counters']['overhead_frac_ungated'] * 100:.1f}% "
+             f"ungated); retiree merge depth "
+             f"p50 {depth_hist.summary()['p50']:.0f} / "
+             f"max {depth_hist.summary()['max']:.0f} steps (window {depth})")
+    log.info(f"  wrote {trace_path} ({len(trace['traceEvents'])} events) "
+             f"+ trace.jsonl; {total_bits} bits bit-exact on all three drains")
+
+    assert coverage >= 0.95, f"tick phase coverage {coverage:.3f} < 0.95"
+    assert overhead < 0.05, (
+        f"telemetry overhead {overhead * 100:.2f}% exceeds the 5% budget"
+    )
+
+    bench = _load_bench()
+    bench["obs"] = row
+    BENCH_JSON.write_text(json.dumps(bench, indent=1))
+    log.info(f"merged obs section into {BENCH_JSON}")
 
 
 def run_backend_comparison(args) -> None:
@@ -368,9 +524,11 @@ def run_backend_comparison(args) -> None:
     )
     ber_ref = float((np.asarray(ref_bits)[:, :info_bits] != np.asarray(info)).mean())
     ber_win = float((np.asarray(trunc)[:, :info_bits] != np.asarray(info)).mean())
-    print(f"gate 1  depth>=T bit-identical to block decode : {exact}")
-    print(f"gate 2  BER block {ber_ref:.2e} vs windowed(D=5K) {ber_win:.2e} "
-          f"(|diff| {abs(ber_win - ber_ref):.2e} <= 1e-3: {abs(ber_win - ber_ref) <= 1e-3})")
+    log.info(f"gate 1  depth>=T bit-identical to block decode : {exact}")
+    log.info(
+        f"gate 2  BER block {ber_ref:.2e} vs windowed(D=5K) {ber_win:.2e} "
+        f"(|diff| {abs(ber_win - ber_ref):.2e} <= 1e-3: {abs(ber_win - ber_ref) <= 1e-3})"
+    )
     assert exact and abs(ber_win - ber_ref) <= 1e-3
 
     # ---------------- streaming scheduler: requested + packed ---------------- #
@@ -380,9 +538,10 @@ def run_backend_comparison(args) -> None:
     sched_rows = {}
     for bk in backends:
         run_scheduler(spec, bm, sessions, args.chunk, depth, bk)  # warm
-        t_stream, stats, out, total_bits = run_scheduler(
+        t_stream, sched_bk, out, total_bits = run_scheduler(
             spec, bm, sessions, args.chunk, depth, bk
         )
+        stats = sched_bk.stats
         mismatches = sum(
             int((out[f"s{i}"][0] != np.asarray(ref_bits[i])).sum())
             for i in range(sessions)
@@ -394,12 +553,12 @@ def run_backend_comparison(args) -> None:
             "stream_bits_per_s": total_bits / t_stream,
             "mismatches_vs_block": mismatches,
         }
-        print(f"\nscheduler[{bk}]: {sessions} sessions x {steps} "
-              f"steps, chunk {args.chunk}, depth {depth}")
-        print(f"  {stats.ticks} ticks (one jitted call each), {stats.slot_claims} "
-              f"slot claims, {total_bits} bits in {t_stream:.3f}s "
-              f"-> {total_bits / t_stream:,.0f} bits/s; "
-              f"mismatches vs block: {mismatches}/{total_bits}")
+        log.info(f"scheduler[{bk}]: {sessions} sessions x {steps} "
+                 f"steps, chunk {args.chunk}, depth {depth}")
+        log.info(f"  {stats.ticks} ticks (one jitted call each), {stats.slot_claims} "
+                 f"slot claims, {total_bits} bits in {t_stream:.3f}s "
+                 f"-> {total_bits / t_stream:,.0f} bits/s; "
+                 f"mismatches vs block: {mismatches}/{total_bits}")
 
     # ---------------- block baseline ---------------- #
     fused = get_decoder("fused_packed")
@@ -410,14 +569,16 @@ def run_backend_comparison(args) -> None:
     jax.block_until_ready(dec(bm))
     t_block = time.perf_counter() - t0
     total_bits = sched_rows[backend]["bits_decoded"]
-    print(f"\nblock fused_packed decode of the same (B={sessions}, "
-          f"T={steps}) workload: {t_block:.3f}s -> "
-          f"{total_bits / t_block:,.0f} bits/s")
+    log.info(f"block fused_packed decode of the same (B={sessions}, "
+             f"T={steps}) workload: {t_block:.3f}s -> "
+             f"{total_bits / t_block:,.0f} bits/s")
     t_stream = sched_rows[backend]["stream_s"]
-    print(f"streaming/block time ratio: {t_stream / t_block:.2f}x "
-          f"(streaming adds the sliding-window traceback per tick but needs "
-          f"O(depth+chunk) memory instead of O(T))")
+    log.info(f"streaming/block time ratio: {t_stream / t_block:.2f}x "
+             f"(streaming adds the sliding-window traceback per tick but needs "
+             f"O(depth+chunk) memory instead of O(T))")
 
+    # ONE results file: merge into the shared perf baseline, preserving the
+    # sections owned by the other modes (see benchmarks/README.md)
     RESULTS.mkdir(parents=True, exist_ok=True)
     payload = {
         "sessions": sessions, "steps": steps, "chunk": args.chunk,
@@ -426,10 +587,6 @@ def run_backend_comparison(args) -> None:
         "bit_exact_wide_window": exact,
         "ber_block": ber_ref, "ber_windowed": ber_win,
     }
-    (RESULTS / "stream_throughput.json").write_text(json.dumps(payload, indent=1))
-    print(f"\nwrote {RESULTS / 'stream_throughput.json'}")
-
-    # merge into the shared perf baseline (by_shards / online preserved)
     bench = _load_bench()
     stream = bench.setdefault("stream", {})
     kept = {k: stream[k] for k in ("by_shards", "online") if k in stream}
@@ -437,7 +594,7 @@ def run_backend_comparison(args) -> None:
     stream.update(payload)
     stream.update(kept)
     BENCH_JSON.write_text(json.dumps(bench, indent=1))
-    print(f"merged stream section into {BENCH_JSON}")
+    log.info(f"merged stream section into {BENCH_JSON}")
 
 
 def main():
@@ -459,10 +616,21 @@ def main():
     ap.add_argument("--rate", type=float, default=None,
                     help="--online offered load, rows/s per stream (default: "
                          "half the measured offline drain rate)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="observability acceptance mode: telemetry on/off "
+                         "overhead, phase-span coverage, Perfetto export")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="--telemetry timing repeats (min is reported)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI shapes for the scaling/online modes")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress stdout reporting (warnings still print); "
+                         "the JSON artifact is the output")
     args = ap.parse_args()
-    if args.online:
+    get_logger("bench.stream", quiet=args.quiet)  # reconfigure module logger
+    if args.telemetry:
+        run_telemetry(args)
+    elif args.online:
         run_online(args)
     elif args.shards:
         run_shard_scaling(args)

@@ -123,4 +123,6 @@ def run() -> Dict:
 
 
 if __name__ == "__main__":
-    print(json.dumps(run(), indent=1))
+    from repro.obs.log import get_logger
+
+    get_logger("bench.tables").info(json.dumps(run(), indent=1))

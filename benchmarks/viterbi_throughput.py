@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_viterbi import CODES, DECODE_SPEC
+from repro.obs.log import get_logger
 from repro.core.viterbi import viterbi_decode
 from repro.decode import CodecSpec, plan_decode
 from repro.kernels import fused_metric_plan
@@ -44,12 +45,16 @@ from repro.kernels.ops import (
     viterbi_decode_packed,
 )
 
+log = get_logger("bench.viterbi")
+
 #: v2 added the optional ``stream.by_shards`` per-shard-count scaling table
 #: (stream_throughput.py --shards N); v3 adds the optional ``stream.online``
 #: steady-state ingestion section (stream_throughput.py --online: sustained
 #: bits/s under rate-limited producers, arrival-to-commit latency, queue
-#: depths, backpressure counters).
-BENCH_SCHEMA = "bench_viterbi/v3"
+#: depths, backpressure counters); v4 adds the optional top-level ``obs``
+#: telemetry-acceptance section (stream_throughput.py --telemetry: tracing
+#: on/off overhead, tick-phase span coverage, device-counter drain).
+BENCH_SCHEMA = "bench_viterbi/v4"
 DEFAULT_OUT = Path(__file__).resolve().parent / "results" / "BENCH_viterbi.json"
 
 
@@ -186,11 +191,12 @@ def run(quick: bool = True, out: Path = DEFAULT_OUT) -> Dict:
     out.parent.mkdir(parents=True, exist_ok=True)
     if out.exists():  # preserve sections merged in by other benchmarks
         try:
-            stream = json.loads(out.read_text()).get("stream")
+            existing = json.loads(out.read_text())
         except (ValueError, OSError):
-            stream = None
-        if stream is not None:
-            payload["stream"] = stream
+            existing = {}
+        for section in ("stream", "obs"):
+            if existing.get(section) is not None:
+                payload[section] = existing[section]
     out.write_text(json.dumps(payload, indent=1))
     return payload
 
@@ -236,6 +242,30 @@ def check_schema(payload: Dict) -> None:
         assert 0 <= q["mean"] <= q["max"] <= (
             online["sessions"] * online["max_buffered"]
         )
+    # optional telemetry-acceptance section (stream_throughput --telemetry): v4
+    obs = payload.get("obs")
+    if obs is not None:
+        for field in ("sessions", "steps", "chunk", "depth", "ticks", "repeats",
+                      "elapsed_off_s", "elapsed_on_s", "overhead_frac",
+                      "tick_span_coverage", "trace_events", "latency_s",
+                      "device_counters", "bit_exact_with_telemetry"):
+            assert field in obs, f"obs missing {field}"
+        assert obs["bit_exact_with_telemetry"] is True
+        # the acceptance gates the benchmark already enforced, re-checked here
+        # so a hand-edited or stale results file cannot pass CI
+        assert obs["overhead_frac"] < 0.05, obs["overhead_frac"]
+        assert obs["tick_span_coverage"] >= 0.95, obs["tick_span_coverage"]
+        assert obs["trace_events"] > 0 and obs["ticks"] > 0
+        lat = obs["latency_s"]
+        assert 0 <= lat["mean"] <= lat["max"] and lat["p50"] <= lat["p95"]
+        dc = obs["device_counters"]
+        for field in ("elapsed_s", "overhead_frac_ungated", "merge_depth"):
+            assert field in dc, f"obs.device_counters missing {field}"
+        md = dc["merge_depth"]
+        # merge depth is measured in trellis steps within the R-deep window;
+        # R+1 is the sentinel for "never merged"
+        window = obs["depth"] + obs["chunk"]
+        assert 1 <= md["p50"] <= md["max"] <= window + 1
 
 
 def main() -> None:
@@ -245,11 +275,31 @@ def main() -> None:
                       help="small CPU-container shapes (the CI gate; default)")
     size.add_argument("--full", action="store_true", help="production batch shapes")
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--quiet", action="store_true",
+                    help="warnings only (the JSON artifact is still written)")
     args = ap.parse_args()
+    global log
+    log = get_logger("bench.viterbi", quiet=args.quiet)
     payload = run(quick=not args.full, out=args.out)
     check_schema(payload)
-    print(json.dumps(payload, indent=1))
-    print(f"\nwrote {args.out}")
+    for wl_key in ("paper_workload_k7", "paper_workload_k3"):
+        wl = payload[wl_key]
+        for name, row in wl["backends"].items():
+            log.info(
+                f"{wl_key}/{name}",
+                time_s=row["time_s"],
+                bits_per_s=row["bits_per_s"],
+                hbm_bytes_per_bit=row.get("hbm_bytes_per_bit", 0.0),
+            )
+        log.info(
+            f"{wl_key}/speedup",
+            packed_vs_fused_hbm_model=wl["speedup"]["fused_packed_vs_fused_hbm_model"],
+            packed_vs_sequential_measured=(
+                wl["speedup"]["fused_packed_vs_sequential_measured"]
+            ),
+        )
+    log.info("wrote", path=str(args.out), schema=payload["schema"],
+             smoke=payload["smoke"], interpret=payload["interpret_mode"])
 
 
 if __name__ == "__main__":

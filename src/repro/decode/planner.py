@@ -55,9 +55,31 @@ class DecodePlan:
     def decoder(self) -> RegisteredDecoder:
         return get_decoder(self.backend)
 
-    def explain(self) -> str:
+    def predicted_costs(self) -> Optional[dict]:
+        """Roofline-predicted flops/bytes of the planned decode: trace the
+        backend on zeros of the planned shape and walk the jaxpr
+        (roofline.jaxpr_cost, trip-count aware).  Returns {"flops", "bytes",
+        "input_bytes"} or None for backends the tracer cannot follow
+        end-to-end (host-side orchestration like the stream schedulers)."""
+        import jax.numpy as jnp
+
+        from repro.roofline.jaxpr_cost import count_fn_costs
+
+        M = self.spec.code.n_symbols
+        bm = jnp.zeros((self.batch, self.steps, M), dtype=jnp.float32)
+        try:
+            return count_fn_costs(
+                lambda t: self.decoder(self.spec, t, ctx=self.ctx).bits, bm
+            )
+        except Exception:
+            return None
+
+    def explain(self, costs: bool = False) -> str:
+        """Human-readable plan summary; ``costs=True`` appends the roofline
+        prediction (predicted flops/bytes and arithmetic intensity) when the
+        backend is traceable."""
         caps = self.decoder.capabilities
-        return (
+        text = (
             f"plan: backend={self.backend!r} for shape (B={self.batch}, T={self.steps}, "
             f"S={self.spec.code.n_states}) on {self.device_kind}\n"
             f"  spec: {self.spec.describe()}\n"
@@ -65,6 +87,18 @@ class DecodePlan:
             f"  caps: mesh={caps.supports_mesh} streaming={caps.supports_streaming} "
             f"max_states={caps.max_states} needs_terminated={caps.needs_terminated}"
         )
+        if costs:
+            c = self.predicted_costs()
+            if c is None:
+                text += "\n  cost: untraceable (host-side orchestration backend)"
+            else:
+                intensity = c["flops"] / c["bytes"] if c["bytes"] else 0.0
+                text += (
+                    f"\n  cost: ~{c['flops']:.3g} flops, ~{c['bytes']:.3g} bytes "
+                    f"moved ({intensity:.2f} flops/byte), "
+                    f"{c['input_bytes']:.3g} input bytes"
+                )
+        return text
 
     def execute(self, bm_tables) -> DecodeResult:
         """Run the planned backend on (B, T, M) branch-metric tables."""

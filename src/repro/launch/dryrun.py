@@ -31,7 +31,11 @@ import time
 import traceback
 from pathlib import Path
 
+from repro.obs.log import get_logger
+
 RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+log = get_logger("launch.dryrun")
 
 
 def _build_step(model, shape, mesh, overrides=None):
@@ -156,8 +160,9 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
         cost = compiled.cost_analysis()
         if isinstance(cost, (list, tuple)):  # older jax: one dict per computation
             cost = cost[0] if cost else {}
-        print(mem)
-        print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
+        log.info(str(mem))
+        log.info(str({k: v for k, v in cost.items()
+                      if k in ("flops", "bytes accessed")}))
         hlo = compiled.as_text()
         # trip-count-aware GLOBAL costs (XLA's cost_analysis counts loop
         # bodies once — see roofline/jaxpr_cost.py)
@@ -232,7 +237,7 @@ def main():
                     if out.exists() and not args.force:
                         continue
                     jobs.append((arch, shp, mk))
-        print(f"{len(jobs)} cells to run")
+        log.info("cells to run", n=len(jobs))
         running = []
         while jobs or running:
             while jobs and len(running) < args.jobs:
@@ -242,12 +247,17 @@ def main():
                        "--tag", args.tag]
                 if args.override:
                     cmd += ["--override", args.override]
-                print("LAUNCH", arch, shp, mk, flush=True)
+                log.info("LAUNCH", arch=arch, shape=shp, mesh=mk)
                 running.append(((arch, shp, mk), subprocess.Popen(cmd)))
             done = [(c, p) for c, p in running if p.poll() is not None]
             running = [(c, p) for c, p in running if p.poll() is None]
             for c, p in done:
-                print("DONE" if p.returncode == 0 else "FAIL", *c, flush=True)
+                arch, shp, mk = c
+                if p.returncode == 0:
+                    log.info("DONE", arch=arch, shape=shp, mesh=mk)
+                else:
+                    log.error("FAIL", arch=arch, shape=shp, mesh=mk,
+                              returncode=p.returncode)
             time.sleep(2)
         return
 
@@ -265,8 +275,8 @@ def main():
                     "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()[-4000:]}
         out.write_text(json.dumps(cell, indent=1, default=float))
-        print(json.dumps({k: cell.get(k) for k in
-                          ("arch", "shape", "mesh", "status")}, indent=None))
+        log.info(json.dumps({k: cell.get(k) for k in
+                             ("arch", "shape", "mesh", "status")}, indent=None))
         if cell["status"] == "error":
             sys.exit(1)
 

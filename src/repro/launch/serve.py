@@ -10,6 +10,10 @@ import argparse
 import json
 import time
 
+from repro.obs.log import get_logger
+
+log = get_logger("launch.serve")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -45,8 +49,8 @@ def main():
         jax.block_until_ready(res.bits)
         dt = time.perf_counter() - t0
         ber = float((res.info_bits != bits).mean())
-        print(res.plan.explain())
-        print(json.dumps({
+        log.info(res.plan.explain(costs=True))
+        log.info(json.dumps({
             "backend": res.plan.backend, "batch": args.batch, "bits": args.bits,
             "ber": ber, "exact": bool((res.info_bits == bits).all()),
             "throughput_bits_per_s": args.batch * args.bits / dt,
@@ -68,7 +72,7 @@ def main():
     t0 = time.perf_counter()
     out = engine.generate(prompts, args.tokens)
     dt = time.perf_counter() - t0
-    print(json.dumps({
+    log.info(json.dumps({
         "arch": model.cfg.name, "batch": args.batch,
         "new_tokens": int(out["tokens"].shape[1]),
         "tokens_per_s": args.batch * out["tokens"].shape[1] / dt,

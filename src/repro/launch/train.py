@@ -13,6 +13,10 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.obs.log import get_logger
+
+log = get_logger("launch.train")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -73,7 +77,7 @@ def main():
         checkpoint_every=args.checkpoint_every,
     )
     last = report["history"][-1] if report["history"] else {}
-    print(json.dumps({
+    log.info(json.dumps({
         "arch": model.cfg.name, "steps": report["final_step"],
         "restarts": report["restarts"],
         "straggler_events": len(report["straggler_events"]),

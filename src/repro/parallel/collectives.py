@@ -125,23 +125,44 @@ def mesh_axis_size(mesh, axis: str) -> int:
     return int(mesh.shape.get(axis, 0))
 
 
-def sum_across_shards(mesh, axis: str, per_shard: jnp.ndarray) -> jnp.ndarray:
-    """Reduce a per-shard leading-axis array to the mesh-global total.
+def reduce_across_shards(
+    mesh, axis: str, per_shard: jnp.ndarray, op: str = "sum"
+) -> jnp.ndarray:
+    """Reduce a per-shard leading-axis array to a mesh-global scalar view.
 
     The sharded stream scheduler keeps admission/eviction bookkeeping
     host-side per shard; the few scalars that need a global view —
-    utilization, pending-work counts, committed-bit totals — are psummed
-    across the ``data`` axis here instead of gathering any decode state.
-    ``per_shard``: (n_shards, ...) with row i owned by shard i; returns the
-    summed (...) total, replicated on every shard.
+    utilization, pending-work counts, committed-bit totals, telemetry
+    aggregates like the worst per-shard merge depth — reduce across the
+    ``data`` axis here instead of gathering any decode state.  This is the
+    same collective a multi-controller deployment (one host per shard) would
+    issue over its own shard-local metrics.
+
+    ``per_shard``: (n_shards, ...) with row i owned by shard i;
+    ``op``: 'sum' | 'max' | 'min'; returns the reduced (...) value,
+    replicated on every shard.
     """
-    def local_sum(x):  # x: (1, ...) — this shard's row
-        return jax.lax.psum(x.sum(axis=0), axis)
+    try:
+        local_reduce, collective = {
+            "sum": (jnp.sum, jax.lax.psum),
+            "max": (jnp.max, jax.lax.pmax),
+            "min": (jnp.min, jax.lax.pmin),
+        }[op]
+    except KeyError:
+        raise ValueError(f"op must be 'sum', 'max' or 'min', got {op!r}") from None
+
+    def local_fn(x):  # x: (1, ...) — this shard's row
+        return collective(local_reduce(x, axis=0), axis)
 
     return shard_map(
-        local_sum,
+        local_fn,
         mesh=mesh,
         in_specs=P(axis),
         out_specs=P(),
         check_rep=False,
     )(jnp.asarray(per_shard))
+
+
+def sum_across_shards(mesh, axis: str, per_shard: jnp.ndarray) -> jnp.ndarray:
+    """reduce_across_shards with op='sum' — the common scheduler case."""
+    return reduce_across_shards(mesh, axis, per_shard, op="sum")

@@ -65,6 +65,7 @@ never change what a slot's kernel sees.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -76,9 +77,16 @@ from repro.core.trellis import ConvCode
 from repro.core.viterbi import _initial_pm
 from repro.decode.spec import CodecSpec
 from repro.kernels.common import resolve_interpret
+from repro.obs import Telemetry
+from repro.obs.metrics import DEPTH_BUCKETS, LATENCY_BUCKETS_S
+from repro.obs.trace import span
 from repro.serve.kv_cache import SlotAllocator
 from repro.stream import window as _w
 from repro.stream.ingest import ChunkProducer, StreamBusy, as_producer
+
+#: Tick-phase span names, in order, as they nest under the "tick" parent —
+#: the children list Tracer.coverage() checks the tick against.
+TICK_PHASES = ("ingest", "admit", "gather", "step", "commit")
 
 
 @dataclasses.dataclass(eq=False)
@@ -105,6 +113,10 @@ class _Stream:
     queued: List[np.ndarray] = dataclasses.field(default_factory=list)
     queued_rows: int = 0  # raw rows awaiting admission (no shard known yet)
     out: List[np.ndarray] = dataclasses.field(default_factory=list)
+    #: (cumulative_rows_after_chunk, arrival_monotonic_ts) per accepted
+    #: chunk, popped as commits pass the chunk's last row — the bounded
+    #: bookkeeping behind the arrival-to-commit latency histogram.
+    arrivals: Deque[Tuple[int, float]] = dataclasses.field(default_factory=deque)
 
     @property
     def available(self) -> int:
@@ -157,6 +169,13 @@ class StreamScheduler:
         on that axis (n_slots must divide evenly; decode results stay
         bit-exact with the unsharded scheduler).
       mesh_axis: mesh axis the slots are partitioned over (default 'data').
+      telemetry: obs.Telemetry bundle.  The metrics registry (always live)
+        absorbs SchedulerStats plus the arrival-to-commit latency histogram;
+        an attached tracer records tick-phase spans (see TICK_PHASES);
+        ``device_counters=True`` makes the jitted tick accumulate per-stream
+        survivor merge depth / starved ticks / renormalization magnitude
+        into a device-resident buffer flushed only at retire / report time —
+        the tick keeps exactly one host sync (the committed bits).
 
     Online usage (live connections):
       sched.open_stream("tv-0", producer=gen_of_chunks)  # or submit_chunk
@@ -182,6 +201,7 @@ class StreamScheduler:
         max_buffered: Optional[int] = None,
         mesh: Optional[object] = None,
         mesh_axis: str = "data",
+        telemetry: Optional[Telemetry] = None,
     ):
         self.spec = CodecSpec.of(spec)
         code = self.spec.code
@@ -231,6 +251,23 @@ class StreamScheduler:
         self._by_id: Dict[str, _Stream] = {}  # every OPEN stream, by id
         self.results: Dict[str, Tuple[np.ndarray, float]] = {}
         self.stats = SchedulerStats()
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._tracer = self.telemetry.tracer
+        self._latency_hist = self.telemetry.metrics.histogram(
+            "stream_arrival_to_commit_seconds",
+            buckets=LATENCY_BUCKETS_S,
+            help="seconds from chunk arrival to its last bit committing",
+        )
+        self._depth_hist = self.telemetry.metrics.histogram(
+            "stream_merge_depth",
+            buckets=DEPTH_BUCKETS,
+            help="survivor merge depth of retiring streams (trellis steps)",
+        )
+        self._counters = (
+            _w.init_device_counters(n_slots)
+            if self.telemetry.device_counters
+            else None
+        )
         self._pm0_row = _initial_pm(code, ())  # (S,) fresh-slot path metrics
         # interpret-mode resolution is pinned ONCE per scheduler (see
         # kernels/common.py): the forward and traceback kernels of every tick
@@ -253,16 +290,20 @@ class StreamScheduler:
             from jax.sharding import PartitionSpec as P
 
             self._arena_sharding = NamedSharding(mesh, P(mesh_axis, None, None))
+            self._counter_sharding = NamedSharding(mesh, P(mesh_axis))
             self.state = _w.shard_stream_state(mesh, mesh_axis, self.state)
             self._arena = jax.device_put(self._arena, self._arena_sharding)
+            self._pin_counters()
             self._step_fn = None  # sharded tick replaces the plain jitted step
             self._sharded_step = _w.make_sharded_stream_step(
                 code, mesh, mesh_axis, chunk=chunk, backend=backend,
                 normalize=normalize, interpret=self._interpret,
                 weights=self._weights,
+                device_metrics=self._counters is not None,
             )
         else:
             self._arena_sharding = None
+            self._counter_sharding = None
             self._sharded_step = None
             self._step_fn = _w.jitted_stream_step(
                 code, backend=backend, normalize=normalize,
@@ -394,72 +435,101 @@ class StreamScheduler:
         """One scheduler tick: poll producers, retire drained streams, admit
         pending ones, then advance every slot with a full chunk ready
         through ONE jitted call (slots without one idle, state untouched).
-        Returns the bits each stream newly committed this tick."""
-        self._poll_producers()
+        Returns the bits each stream newly committed this tick.
+
+        When a tracer is attached the tick records a parent ``tick`` span
+        with the TICK_PHASES children; disabled tracing costs one ``is
+        None`` check per phase (see obs.trace.span)."""
+        with span(self._tracer, "tick"):
+            return self._step_traced()
+
+    def _step_traced(self) -> Dict[str, np.ndarray]:
+        tr = self._tracer
+        with span(tr, "ingest"):
+            self._poll_producers()
         # 1. retire closed streams that cannot fill a full chunk (tail +
         #    flush run batched over all slots retiring this tick — off the
         #    hot path), re-admit, and repeat: an admitted pending stream may
         #    itself be closed with less than a chunk buffered and must
         #    retire before the gather sees it.
-        self._admit()
-        while True:
-            drained = [
-                slot for slot, st in self.active.items()
-                if st.closed and st.available < self.chunk
-            ]
-            if not drained:
-                break
-            self._finish_slots(drained)
+        with span(tr, "admit"):
             self._admit()
+            while True:
+                drained = [
+                    slot for slot, st in self.active.items()
+                    if st.closed and st.available < self.chunk
+                ]
+                if not drained:
+                    break
+                self._finish_slots(drained)
+                self._admit()
         # 2. slots with a full chunk of rows ready advance; admitted slots
         #    that are starved (open stream, no chunk yet) idle masked —
         #    their gather reads the zero prefix and their carried state is
         #    re-selected unchanged inside stream_step.
-        ready = [
-            slot for slot, st in self.active.items()
-            if st.available >= self.chunk
-        ]
-        self.stats.starved_slot_ticks += len(self.active) - len(ready)
-        if not ready:
-            return {}
-        idx = np.zeros((self.n_slots, self.chunk), dtype=np.int32)
-        mask = np.zeros((self.n_slots,), dtype=bool)
-        for slot in ready:
-            idx[slot] = self.active[slot].rows[: self.chunk]
-            mask[slot] = True
+        with span(tr, "gather"):
+            ready = [
+                slot for slot, st in self.active.items()
+                if st.available >= self.chunk
+            ]
+            self.stats.starved_slot_ticks += len(self.active) - len(ready)
+            if not ready:
+                return {}
+            idx = np.zeros((self.n_slots, self.chunk), dtype=np.int32)
+            mask = np.zeros((self.n_slots,), dtype=bool)
+            for slot in ready:
+                idx[slot] = self.active[slot].rows[: self.chunk]
+                mask[slot] = True
+            idx_j, mask_j = jnp.asarray(idx), jnp.asarray(mask)
 
         # 3. the one jitted call for all live streams — under shard_map when
         #    the scheduler spans a mesh (gather + step fused, shard-local).
-        idx_j, mask_j = jnp.asarray(idx), jnp.asarray(mask)
-        if self._sharded_step is not None:
-            self.state, bits, delta = self._sharded_step(
-                self._arena, idx_j, mask_j, self.state
-            )
-        else:
-            block = self._gather(self._arena, idx_j)  # (n_slots, chunk, ·)
-            weights = self._weights if self.packed else None
-            self.state, bits, delta = self._step_fn(
-                self.state, block, weights, mask_j
-            )
-        self.offset = self.offset + delta
-        bits_np = np.asarray(bits)
-        self.stats.ticks += 1
-        self.stats.steps_decoded += len(ready) * self.chunk
+        #    The span measures dispatch, not device time: the only forced
+        #    sync stays the bits transfer in the commit phase.
+        with span(tr, "step"):
+            if self._sharded_step is not None:
+                if self._counters is not None:
+                    self.state, bits, delta, self._counters = self._sharded_step(
+                        self._arena, idx_j, mask_j, self.state, self._counters
+                    )
+                else:
+                    self.state, bits, delta = self._sharded_step(
+                        self._arena, idx_j, mask_j, self.state
+                    )
+            else:
+                block = self._gather(self._arena, idx_j)  # (n_slots, chunk, ·)
+                weights = self._weights if self.packed else None
+                if self._counters is not None:
+                    self.state, bits, delta, self._counters = self._step_fn(
+                        self.state, block, weights, mask_j,
+                        counters=self._counters,
+                    )
+                else:
+                    self.state, bits, delta = self._step_fn(
+                        self.state, block, weights, mask_j
+                    )
+            self.offset = self.offset + delta
 
-        # 4. distribute newly-final bits.
-        emitted: Dict[str, np.ndarray] = {}
-        for slot in ready:
-            st = self.active[slot]
-            st.rows = st.rows[self.chunk :]
-            st.pos += self.chunk
-            committable = max(0, st.pos - self.depth)
-            n_new = committable - st.committed
-            st.committed = committable
-            if n_new:
-                fresh = bits_np[slot, self.chunk - n_new :]
-                st.out.append(fresh)
-                emitted[st.stream_id] = fresh
-        return emitted
+        # 4. the tick's ONE host sync, then distribute newly-final bits.
+        with span(tr, "commit"):
+            bits_np = np.asarray(bits)
+            self.stats.ticks += 1
+            self.stats.steps_decoded += len(ready) * self.chunk
+            now = time.monotonic()
+            emitted: Dict[str, np.ndarray] = {}
+            for slot in ready:
+                st = self.active[slot]
+                st.rows = st.rows[self.chunk :]
+                st.pos += self.chunk
+                committable = max(0, st.pos - self.depth)
+                n_new = committable - st.committed
+                st.committed = committable
+                self._observe_commit_latency(st, now)
+                if n_new:
+                    fresh = bits_np[slot, self.chunk - n_new :]
+                    st.out.append(fresh)
+                    emitted[st.stream_id] = fresh
+            return emitted
 
     def run(self) -> Dict[str, Tuple[np.ndarray, float]]:
         """Drain everything; returns {stream_id: (bits (T,), metric)}.
@@ -513,7 +583,13 @@ class StreamScheduler:
         issue, so the global view never gathers any decode state.  Callers
         throttle on the queue-depth numbers: ``queued_rows_total`` is how
         much input sits unconsumed on-device, ``starved_active`` how many
-        slots are idling for lack of it."""
+        slots are idling for lack of it.
+
+        ``latency_s`` summarizes the arrival-to-commit histogram (always
+        tracked); with device counters enabled the report also carries
+        ``merge_depth`` — per active stream, the survivor merge-depth
+        last/mean/max plus starved ticks and renormalization magnitude,
+        materialized here (an explicit drain point, never per tick)."""
         per_shard = np.zeros((self.n_shards,), dtype=np.int32)
         per_shard_queued = np.zeros((self.n_shards,), dtype=np.int32)
         starved = 0
@@ -547,7 +623,7 @@ class StreamScheduler:
             active_total = int(per_shard.sum())
             pending_total = len(self.pending)
             queued_total = int(per_shard_queued.sum())
-        return {
+        report: Dict[str, object] = {
             "n_shards": self.n_shards,
             "per_shard_active": per_shard.tolist(),
             "per_shard_queued_rows": per_shard_queued.tolist(),
@@ -562,7 +638,58 @@ class StreamScheduler:
             ),
             "starved_active": starved,
             "utilization": active_total / self.n_slots,
+            "latency_s": self._latency_hist.summary(),
         }
+        if self._counters is not None:
+            report["merge_depth"] = self.device_counter_report()
+        return report
+
+    def device_counter_report(self) -> Dict[str, Dict[str, float]]:
+        """Materialize the device-resident counters for every ACTIVE stream:
+        {stream_id: {ticks, starved_ticks, merge_depth_last, merge_depth_mean,
+        merge_depth_max, renorm_sum}}.  One host transfer per counter leaf,
+        only when called — never on the tick path."""
+        if self._counters is None:
+            raise RuntimeError(
+                "device counters are off — construct the scheduler with "
+                "telemetry=Telemetry(device_counters=True)"
+            )
+        leaves = {
+            name: np.asarray(x)
+            for name, x in zip(_w.DeviceCounters._fields, self._counters)
+        }
+        out: Dict[str, Dict[str, float]] = {}
+        for slot, st in self.active.items():
+            ticks = int(leaves["ticks"][slot])
+            out[st.stream_id] = {
+                "ticks": ticks,
+                "starved_ticks": int(leaves["starved_ticks"][slot]),
+                "merge_depth_last": int(leaves["merge_depth_last"][slot]),
+                "merge_depth_mean": (
+                    float(leaves["merge_depth_sum"][slot]) / ticks if ticks else 0.0
+                ),
+                "merge_depth_max": int(leaves["merge_depth_max"][slot]),
+                "renorm_sum": float(leaves["renorm_sum"][slot]),
+            }
+        return out
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """Mirror SchedulerStats into the metrics registry and return one
+        JSON-ready snapshot (scalars + histogram summaries)."""
+        m = self.telemetry.metrics
+        for name, v in self.stats.asdict().items():
+            m.counter(
+                f"scheduler_{name}", help=f"SchedulerStats.{name}"
+            ).set(v)
+        m.gauge("scheduler_active_slots").set(len(self.active))
+        m.gauge("scheduler_pending_streams").set(len(self.pending))
+        m.gauge("scheduler_utilization").set(self.utilization())
+        return m.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the scheduler's registry."""
+        self.metrics_snapshot()
+        return self.telemetry.metrics.render()
 
     # ------------------------------ internals ------------------------------ #
 
@@ -591,11 +718,22 @@ class StreamScheduler:
     def _accept_rows(self, st: _Stream, rows: np.ndarray) -> None:
         """Route accepted rows: straight into the arena for admitted streams,
         host-side queue otherwise (no shard known until a slot is claimed)."""
+        # latency bookkeeping: a chunk counts as committed once the commit
+        # watermark passes its LAST row (fed + queued_rows is the cumulative
+        # arrival count regardless of which side of admission the rows land)
+        st.arrivals.append(
+            (st.fed + st.queued_rows + rows.shape[0], time.monotonic())
+        )
         if st.slot is not None:
             self._append_stream_rows(st, rows)
         else:
             st.queued.append(rows)
             st.queued_rows += rows.shape[0]
+
+    def _observe_commit_latency(self, st: _Stream, now: float) -> None:
+        while st.arrivals and st.arrivals[0][0] <= st.committed:
+            _, ts = st.arrivals.popleft()
+            self._latency_hist.observe(now - ts)
 
     def _append_stream_rows(self, st: _Stream, rows: np.ndarray) -> None:
         """Append a chunk to the stream's shard slab and extend its row map.
@@ -642,6 +780,12 @@ class StreamScheduler:
     def _pin_state(self) -> None:
         if self.mesh is not None:
             self.state = _w.shard_stream_state(self.mesh, self.mesh_axis, self.state)
+
+    def _pin_counters(self) -> None:
+        if self._counters is not None and self._counter_sharding is not None:
+            self._counters = _w.DeviceCounters(
+                *(jax.device_put(x, self._counter_sharding) for x in self._counters)
+            )
 
     def _admit(self) -> None:
         while self.pending and self.alloc.free:
@@ -695,6 +839,10 @@ class StreamScheduler:
             self._compact_floor,
         ):
             return
+        with span(self._tracer, "compact"):
+            self._compact()
+
+    def _compact(self) -> None:
         by_shard: Dict[int, List[_Stream]] = {}
         for st in self.active.values():
             by_shard.setdefault(st.shard, []).append(st)
@@ -730,6 +878,13 @@ class StreamScheduler:
         )
         self._pin_state()
         self.offset = self.offset.at[slot].set(0.0)
+        if self._counters is not None:
+            # counters reset at claim for the same reason as pm/ring: the
+            # recycled slot must not leak the previous resident's statistics
+            self._counters = _w.DeviceCounters(
+                *(x.at[slot].set(0) for x in self._counters)
+            )
+            self._pin_counters()
 
     def _tail_rows(self, st: _Stream) -> jnp.ndarray:
         """(r, M) bm tables for a stream's remaining sub-chunk tail, gathered
@@ -749,7 +904,17 @@ class StreamScheduler:
         is padded to ``n_slots`` rows so cohort size never creates a new
         compiled shape (padded rows decode garbage that is sliced away).
         Packed survivor rings are unpacked here, once, off the hot path."""
+        with span(self._tracer, "flush"):
+            self._finish_slots_traced(slots)
+
+    def _finish_slots_traced(self, slots: Sequence[int]) -> None:
         streams = [(slot, self.active.pop(slot)) for slot in slots]
+        if self._counters is not None:
+            # retirement IS the device-counter drain point: one host read of
+            # the (B,) merge-depth leaf for the whole cohort, off the hot path
+            md_last = np.asarray(self._counters.merge_depth_last)
+            for slot, _ in streams:
+                self._depth_hist.observe(int(md_last[slot]))
 
         def pad_rows(x: jnp.ndarray, axis: int) -> jnp.ndarray:
             extra = self.n_slots - x.shape[axis]
@@ -822,12 +987,14 @@ class StreamScheduler:
 
         R = ring.shape[0]
         offset_np = np.asarray(self.offset)  # one transfer, not one per slot
+        now = time.monotonic()
         for i, (slot, st) in enumerate(ordered):
             bits_i, metric_i = flushed[i]
             n_rest = st.pos - st.committed
             if n_rest:
                 st.out.append(bits_i[R - n_rest :])
             st.committed = st.pos
+            self._observe_commit_latency(st, now)
             self.results[st.stream_id] = (
                 self._collect(st), metric_i + float(offset_np[slot])
             )

@@ -29,10 +29,13 @@ from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.trellis import ConvCode
 from repro.decode.spec import CodecSpec
 from repro.kernels.common import resolve_interpret
+from repro.obs import Telemetry
+from repro.obs.trace import span
 from repro.stream import window as _w
 
 
@@ -60,6 +63,10 @@ class StreamSession:
         pushed chunks are placed with the same layout so the jitted step
         runs batch-parallel across the mesh with no resharding.
       mesh_axis: mesh axis the batch is sharded over (default 'data').
+      telemetry: obs.Telemetry bundle — an attached tracer records ``push``
+        / ``finish`` spans; ``device_counters=True`` carries a DeviceCounters
+        pytree through every push (merge depth, renorm magnitude), exposed
+        host-side via :meth:`device_counter_report`, materialized only there.
     """
 
     def __init__(
@@ -74,6 +81,7 @@ class StreamSession:
         inputs: str = "bm",
         mesh: Optional[object] = None,
         mesh_axis: str = "data",
+        telemetry: Optional[Telemetry] = None,
     ):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
@@ -123,6 +131,13 @@ class StreamSession:
         self._step = _w.jitted_stream_step(
             code, backend=backend, normalize=normalize, interpret=self._interpret
         )
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._tracer = self.telemetry.tracer
+        self._counters = (
+            _w.init_device_counters(batch)
+            if self.telemetry.device_counters
+            else None
+        )
 
     @property
     def ring_size(self) -> int:
@@ -153,10 +168,14 @@ class StreamSession:
             chunk_data = self._plan.features(chunk_data, t0=self.t)
         if self._chunk_sharding is not None:
             chunk_data = jax.device_put(jnp.asarray(chunk_data), self._chunk_sharding)
-        if self.packed:
-            self.state, bits, delta = self._step(self.state, chunk_data, self._weights)
-        else:
-            self.state, bits, delta = self._step(self.state, chunk_data)
+        weights = self._weights if self.packed else None
+        with span(self._tracer, "push"):
+            if self._counters is not None:
+                self.state, bits, delta, self._counters = self._step(
+                    self.state, chunk_data, weights, counters=self._counters
+                )
+            else:
+                self.state, bits, delta = self._step(self.state, chunk_data, weights)
         self.offset = self.offset + delta
         self.t += self.chunk
         committable = max(0, self.t - self.depth)
@@ -207,14 +226,33 @@ class StreamSession:
             ring = jnp.concatenate([ring[r:], bps], axis=0)
             self.state = _w.StreamState(pm=new_pm, ring=ring)
             self.t += r
-        bits, metric = _w.jitted_stream_flush(
-            self.code, terminated=terminated, interpret=self._interpret
-        )(self.state)
+        with span(self._tracer, "finish"):
+            bits, metric = _w.jitted_stream_flush(
+                self.code, terminated=terminated, interpret=self._interpret
+            )(self.state)
         n_rest = self.t - self.committed
         self.committed = self.t
         self.closed = True
         R = bits.shape[1]
         return bits[:, R - n_rest :] if n_rest else bits[:, :0], metric + self.offset
+
+    def device_counter_report(self) -> dict:
+        """Materialize the per-row device counters (one host transfer per
+        leaf, never on the push path): {field: (B,) list} plus the derived
+        ``merge_depth_mean``."""
+        if self._counters is None:
+            raise RuntimeError(
+                "device counters are off — construct the session with "
+                "telemetry=Telemetry(device_counters=True)"
+            )
+        leaves = {
+            name: np.asarray(x)
+            for name, x in zip(_w.DeviceCounters._fields, self._counters)
+        }
+        ticks = np.maximum(leaves["ticks"], 1)
+        out = {name: x.tolist() for name, x in leaves.items()}
+        out["merge_depth_mean"] = (leaves["merge_depth_sum"] / ticks).tolist()
+        return out
 
     def decode_all(
         self, bm_tables: jnp.ndarray, terminated: Optional[bool] = None

@@ -92,6 +92,84 @@ def resolve_stream_backend(spec, chunk: int, depth: int, backend: str, inputs: s
     return packed, depth, plan, weights
 
 
+class DeviceCounters(NamedTuple):
+    """Per-slot decode statistics accumulated INSIDE the jitted tick.
+
+    Every field is a (B,) array living on device; the scheduler/session
+    carries the pytree across ticks like any other state and materializes it
+    host-side only at drain / report time — device telemetry never adds a
+    per-tick host sync.  This is the raw signal the adaptive-traceback-depth
+    work consumes: ``merge_depth_*`` track the all-states-agree depth of the
+    survivor ring (how far back the traceback must really reach), and
+    ``renorm_sum`` the accumulated path-metric renormalization magnitude
+    (a proxy for channel quality drift).
+
+    ticks:            active ticks this slot advanced through.
+    starved_ticks:    ticks the slot sat admitted-but-masked (no full chunk).
+    merge_depth_last: survivor merge depth after the latest active tick.
+    merge_depth_sum:  sum of per-tick merge depths (mean = sum / ticks).
+    merge_depth_max:  worst merge depth observed.
+    renorm_sum:       accumulated |path-metric renormalization offset|.
+    """
+
+    ticks: jnp.ndarray
+    starved_ticks: jnp.ndarray
+    merge_depth_last: jnp.ndarray
+    merge_depth_sum: jnp.ndarray
+    merge_depth_max: jnp.ndarray
+    renorm_sum: jnp.ndarray
+
+
+def init_device_counters(batch: int) -> DeviceCounters:
+    z_i = jnp.zeros((batch,), dtype=jnp.int32)
+    z_f = jnp.zeros((batch,), dtype=jnp.float32)
+    return DeviceCounters(
+        ticks=z_i, starved_ticks=z_i, merge_depth_last=z_i,
+        merge_depth_sum=z_f, merge_depth_max=z_i, renorm_sum=z_f,
+    )
+
+
+def survivor_merge_depth(code: ConvCode, ring: jnp.ndarray) -> jnp.ndarray:
+    """All-states-agree depth of a survivor ring: the smallest d such that
+    tracing back d steps from the frontier collapses every state's survivor
+    path onto one trellis node (R + 1 when the window never merges).
+
+    Classic truncated-traceback theory commits bits older than the merge
+    point losslessly — so this, tracked per stream, is exactly the signal an
+    adaptive-depth controller needs (cf. the tile-merge convergence of GPU
+    tile-parallel decoders).  ``ring``: (R, B, S) int32 backpointer parities
+    or packed (R/32, B, S) uint32 words; returns (B,) int32.
+
+    Cost: an S-walker vectorized traceback over the ring — same O(R) gather
+    structure as the per-tick committed-bit traceback, S lanes wide; only
+    run when device counters are enabled.
+    """
+    if ring.dtype == jnp.uint32:
+        ring = unpack_ring(code, ring)
+    R, B, S = ring.shape
+    half = S // 2
+    walkers0 = jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None, :], (B, S)
+    )
+
+    def step(walkers, bp_t):  # walkers: (B, S) current state of each walker
+        j = jnp.take_along_axis(bp_t, walkers, axis=1)
+        v = walkers & (half - 1) if half > 1 else jnp.zeros_like(walkers)
+        prev = 2 * v + j
+        merged = (prev == prev[:, :1]).all(axis=1)
+        return prev, merged
+
+    # reverse scan: merged[i] == "walkers coalesced after absorbing steps
+    # R-1 .. i", i.e. within depth R - i of the frontier.  Coalesced walkers
+    # stay coalesced, so merged is monotone in depth; the merge depth is the
+    # shallowest True.
+    _, merged = jax.lax.scan(step, walkers0, ring.astype(jnp.int32), reverse=True)
+    idx = jnp.where(
+        merged, jnp.arange(R, dtype=jnp.int32)[:, None], jnp.int32(-1)
+    ).max(axis=0)
+    return jnp.where(idx >= 0, R - idx, R + 1).astype(jnp.int32)
+
+
 class StreamState(NamedTuple):
     """Carried decode state — everything a stream needs across chunks.
 
@@ -149,6 +227,7 @@ def stream_step(
     backend: str = "fused",
     normalize: bool = True,
     interpret: Optional[bool] = None,
+    counters: Optional[DeviceCounters] = None,
 ) -> Tuple[StreamState, jnp.ndarray, jnp.ndarray]:
     """One streaming update: advance C steps, commit the C oldest positions.
 
@@ -171,6 +250,11 @@ def stream_step(
       normalize: subtract the per-stream min from the path metrics so an
         unbounded stream never overflows float32; the subtracted offset is
         returned so callers can reconstruct absolute metrics.
+      counters: optional DeviceCounters pytree to advance inside the jitted
+        step (merge depth, starved ticks, renorm magnitude).  When given the
+        return value grows a fourth element — the updated counters — and the
+        traced computation gains the S-walker merge-depth scan; rows masked
+        inactive keep their last merge depth and count a starved tick.
 
     Returns:
       new_state: state after the chunk (ring shifted by C).
@@ -180,6 +264,7 @@ def stream_step(
         rows masked inactive hold garbage the caller must ignore.
       offset_delta: (B,) the amount subtracted from the path metrics (0 for
         masked rows).
+      counters: updated DeviceCounters — only when ``counters`` was passed.
     """
     pm, ring = state
     C = chunk_inputs.shape[1]
@@ -223,7 +308,29 @@ def stream_step(
         new_pm = jnp.where(keep[:, None], new_pm, pm)
         ring = jnp.where(keep[None, :, None], ring, state.ring)
         delta = jnp.where(keep, delta, jnp.zeros_like(delta))
-    return StreamState(pm=new_pm, ring=ring), committed, delta
+    new_state = StreamState(pm=new_pm, ring=ring)
+    if counters is None:
+        return new_state, committed, delta
+    act = (
+        active.astype(jnp.bool_)
+        if active is not None
+        else jnp.ones(new_pm.shape[:1], dtype=jnp.bool_)
+    )
+    # merge depth on the post-mask ring: inactive rows kept their ring, so
+    # the recomputed value equals their previous one — jnp.where keeps the
+    # bookkeeping explicit anyway.
+    md = survivor_merge_depth(code, ring)
+    advanced = act.astype(jnp.int32)
+    counters = DeviceCounters(
+        ticks=counters.ticks + advanced,
+        starved_ticks=counters.starved_ticks + (1 - advanced),
+        merge_depth_last=jnp.where(act, md, counters.merge_depth_last),
+        merge_depth_sum=counters.merge_depth_sum
+        + jnp.where(act, md, 0).astype(jnp.float32),
+        merge_depth_max=jnp.maximum(counters.merge_depth_max, md * advanced),
+        renorm_sum=counters.renorm_sum + jnp.abs(delta).astype(jnp.float32),
+    )
+    return new_state, committed, delta, counters
 
 
 def state_shardings(mesh, axis: str):
@@ -248,8 +355,9 @@ def shard_stream_state(mesh, axis: str, state: StreamState) -> StreamState:
     )
 
 
-#: (code, mesh, axis, chunk, backend, normalize, interpret) -> tick; see
-#: make_sharded_stream_step (only weight-free configs are memoizable).
+#: (code, mesh, axis, chunk, backend, normalize, interpret, device_metrics)
+#: -> tick; see make_sharded_stream_step (only weight-free configs are
+#: memoizable).
 _SHARDED_STEP_CACHE: dict = {}
 
 
@@ -263,6 +371,7 @@ def make_sharded_stream_step(
     normalize: bool = True,
     interpret: Optional[bool] = None,
     weights=None,
+    device_metrics: bool = False,
 ):
     """Build the mesh-sharded per-tick update for the stream scheduler.
 
@@ -286,13 +395,19 @@ def make_sharded_stream_step(
     Ticks without custom ``weights`` are memoized on the static config (like
     jitted_stream_step), so every scheduler on the same (code, mesh, ...)
     shares one executable per shape instead of re-tracing per instance.
+
+    With ``device_metrics=True`` the tick carries a DeviceCounters pytree —
+    ``tick(arena, idx, active, state, counters)`` returning ``(state, bits,
+    delta, counters)`` — with every (B,)-shaped counter leaf sharded P(axis)
+    alongside the slots it describes, still shard-local (no collectives).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     cache_key = None
     if weights is None:
-        cache_key = (code, mesh, axis, chunk, backend, normalize, interpret)
+        cache_key = (code, mesh, axis, chunk, backend, normalize, interpret,
+                     device_metrics)
         cached = _SHARDED_STEP_CACHE.get(cache_key)
         if cached is not None:
             return cached
@@ -303,10 +418,14 @@ def make_sharded_stream_step(
 
         weights = table_weights(code)
 
-    def local_tick(arena, idx, active, pm, ring, *w):
+    n_counters = len(DeviceCounters._fields) if device_metrics else 0
+
+    def local_tick(arena, idx, active, pm, ring, *rest):
         # arena: (1, cap, W) — this shard's slab; idx: (slots_per_shard, C)
+        ctr = DeviceCounters(*rest[:n_counters]) if device_metrics else None
+        w = rest[n_counters:]
         block = jnp.take(arena[0], idx, axis=0)  # (slots_per_shard, chunk, W)
-        state, bits, delta = stream_step(
+        out = stream_step(
             code,
             StreamState(pm=pm, ring=ring),
             block,
@@ -315,13 +434,19 @@ def make_sharded_stream_step(
             backend=backend,
             normalize=normalize,
             interpret=interpret,
+            counters=ctr,
         )
+        if device_metrics:
+            state, bits, delta, ctr = out
+            return (state.pm, state.ring, bits, delta) + tuple(ctr)
+        state, bits, delta = out
         return state.pm, state.ring, bits, delta
 
+    ctr_specs = tuple(P(axis) for _ in range(n_counters))
     w_specs: tuple = ()
     w_args: tuple = ()
     if packed:
-        w_specs = (tuple(P(*([None] * jnp.asarray(a).ndim)) for a in weights),)
+        w_specs = tuple(P(*([None] * jnp.asarray(a).ndim)) for a in weights)
         w_args = (weights,)
     fn = jax.jit(
         shard_map(
@@ -329,15 +454,30 @@ def make_sharded_stream_step(
             mesh=mesh,
             in_specs=(P(axis, None, None), P(axis, None), P(axis),
                       P(axis, None), P(None, axis, None))
-            + w_specs,
-            out_specs=(P(axis, None), P(None, axis, None), P(axis, None), P(axis)),
+            + ctr_specs
+            + ((w_specs,) if packed else ()),
+            out_specs=(P(axis, None), P(None, axis, None), P(axis, None),
+                       P(axis)) + ctr_specs,
             check_rep=False,
         )
     )
 
-    def tick(arena, idx, active, state: StreamState):
-        pm, ring, bits, delta = fn(arena, idx, active, state.pm, state.ring, *w_args)
-        return StreamState(pm=pm, ring=ring), bits, delta
+    if device_metrics:
+
+        def tick(arena, idx, active, state: StreamState, counters: DeviceCounters):
+            out = fn(arena, idx, active, state.pm, state.ring,
+                     *tuple(counters), *w_args)
+            pm, ring, bits, delta = out[:4]
+            return (StreamState(pm=pm, ring=ring), bits, delta,
+                    DeviceCounters(*out[4:]))
+
+    else:
+
+        def tick(arena, idx, active, state: StreamState):
+            pm, ring, bits, delta = fn(
+                arena, idx, active, state.pm, state.ring, *w_args
+            )
+            return StreamState(pm=pm, ring=ring), bits, delta
 
     if cache_key is not None:
         _SHARDED_STEP_CACHE[cache_key] = tick
@@ -354,7 +494,10 @@ def jitted_stream_step(
     """Compiled stream_step, cached on the static config so every session and
     scheduler with the same (code, backend, flags) shares one executable per
     (batch, chunk) shape instead of re-tracing per instance.  The returned
-    callable takes (state, chunk_inputs[, weights[, active]])."""
+    callable takes (state, chunk_inputs[, weights[, active[, counters]]]);
+    passing ``counters=DeviceCounters(...)`` (a different pytree structure
+    from the default None) traces the device-metrics variant, which returns
+    the 4-tuple — the jit cache keeps both specializations apart."""
     return jax.jit(
         functools.partial(
             stream_step, code, backend=backend, normalize=normalize, interpret=interpret

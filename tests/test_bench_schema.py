@@ -1,6 +1,7 @@
-"""BENCH_viterbi.json schema gate (v3): the validator the CI bench-smoke job
-runs must accept well-formed payloads — including the new ``stream.online``
-section — and reject the invariants it exists to guard."""
+"""BENCH_viterbi.json schema gate (v4): the validator the CI bench-smoke job
+runs must accept well-formed payloads — including the ``stream.online`` and
+telemetry-acceptance ``obs`` sections — and reject the invariants it exists
+to guard."""
 import copy
 
 import pytest
@@ -51,11 +52,34 @@ def _payload():
                                      "max_stream": 244},
             },
         },
+        "obs": {
+            "sessions": 4,
+            "steps": 192,
+            "chunk": 64,
+            "depth": 15,
+            "backend": "scan",
+            "ticks": 3,
+            "repeats": 2,
+            "elapsed_off_s": 0.034,
+            "elapsed_on_s": 0.032,
+            "overhead_frac": -0.045,
+            "tick_span_coverage": 0.998,
+            "trace_events": 24,
+            "latency_s": {"count": 3, "mean": 0.01, "p50": 0.008,
+                          "p95": 0.02, "max": 0.02},
+            "device_counters": {
+                "elapsed_s": 0.035,
+                "overhead_frac_ungated": 0.032,
+                "merge_depth": {"count": 4, "mean": 2.0, "p50": 2,
+                                "p95": 2, "max": 2},
+            },
+            "bit_exact_with_telemetry": True,
+        },
     }
 
 
-def test_schema_is_v3():
-    assert BENCH_SCHEMA == "bench_viterbi/v3"
+def test_schema_is_v4():
+    assert BENCH_SCHEMA == "bench_viterbi/v4"
 
 
 def test_check_schema_accepts_valid_payload():
@@ -65,6 +89,7 @@ def test_check_schema_accepts_valid_payload():
 def test_check_schema_accepts_payload_without_optional_sections():
     payload = _payload()
     del payload["stream"]
+    del payload["obs"]
     check_schema(payload)
     payload = _payload()
     del payload["stream"]["online"]  # by_shards alone (pre-v3 content) is fine
@@ -90,6 +115,31 @@ def test_check_schema_accepts_payload_without_optional_sections():
     ],
 )
 def test_check_schema_rejects_broken_online_sections(mutate):
+    payload = copy.deepcopy(_payload())
+    mutate(payload)
+    with pytest.raises((AssertionError, KeyError)):
+        check_schema(payload)
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        # the telemetry-plane acceptance gates, re-checked on the artifact
+        lambda p: p["obs"].__setitem__("overhead_frac", 0.06),
+        lambda p: p["obs"].__setitem__("tick_span_coverage", 0.90),
+        lambda p: p["obs"].__setitem__("trace_events", 0),
+        lambda p: p["obs"].__setitem__("bit_exact_with_telemetry", False),
+        lambda p: p["obs"].pop("latency_s"),
+        lambda p: p["obs"].pop("device_counters"),
+        lambda p: p["obs"]["device_counters"].pop("merge_depth"),
+        # merge depth above the R+1 "never merged" sentinel is impossible
+        lambda p: p["obs"]["device_counters"]["merge_depth"].__setitem__(
+            "max", 15 + 64 + 2
+        ),
+        lambda p: p["obs"]["latency_s"].__setitem__("p95", 0.001),
+    ],
+)
+def test_check_schema_rejects_broken_obs_sections(mutate):
     payload = copy.deepcopy(_payload())
     mutate(payload)
     with pytest.raises((AssertionError, KeyError)):

@@ -18,6 +18,7 @@ from repro.core import (
     hard_branch_metrics,
     viterbi_decode,
 )
+from repro.obs import Telemetry
 from repro.stream import (
     CallableProducer,
     GeneratorProducer,
@@ -456,7 +457,11 @@ def test_fuzz_arrival_schedule_invariance(case):
     decode is bit-identical to one-shot submit() of the same rows."""
     plans, seed = case
     key = jax.random.PRNGKey(seed)
-    online = StreamScheduler(CODE, n_slots=2, chunk=16, depth=400, backend="scan")
+    # full telemetry on the online side: tracing + metrics + device counters
+    # must observe the decode, never perturb it — the invariance holds with
+    # the instrumented tick vs the bare offline scheduler
+    online = StreamScheduler(CODE, n_slots=2, chunk=16, depth=400, backend="scan",
+                             telemetry=Telemetry.enabled(device_counters=True))
     offline = StreamScheduler(CODE, n_slots=2, chunk=16, depth=400, backend="scan")
     feeds = {}
     for i, (info_bits, sizes, gap, early_close) in enumerate(plans):
