@@ -134,14 +134,16 @@ def run_scheduler(spec, bm, n_slots, chunk, depth, backend, mesh=None,
 
 
 def _load_bench() -> dict:
+    from viterbi_throughput import BENCH_SCHEMA
+
     if BENCH_JSON.exists():
         try:
             bench = json.loads(BENCH_JSON.read_text())
-            bench["schema"] = "bench_viterbi/v4"
+            bench["schema"] = BENCH_SCHEMA
             return bench
         except ValueError:
             pass
-    return {"schema": "bench_viterbi/v4",
+    return {"schema": BENCH_SCHEMA,
             "generated_by": "benchmarks/stream_throughput.py"}
 
 

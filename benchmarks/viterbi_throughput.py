@@ -53,8 +53,11 @@ log = get_logger("bench.viterbi")
 #: bits/s under rate-limited producers, arrival-to-commit latency, queue
 #: depths, backpressure counters); v4 adds the optional top-level ``obs``
 #: telemetry-acceptance section (stream_throughput.py --telemetry: tracing
-#: on/off overhead, tick-phase span coverage, device-counter drain).
-BENCH_SCHEMA = "bench_viterbi/v4"
+#: on/off overhead, tick-phase span coverage, device-counter drain); v5 adds
+#: the optional top-level ``turbo`` SISO section (siso_throughput.py: a BER
+#: point vs the equivalent-rate Viterbi baseline + decoded bits/s per
+#: iteration count).
+BENCH_SCHEMA = "bench_viterbi/v5"
 DEFAULT_OUT = Path(__file__).resolve().parent / "results" / "BENCH_viterbi.json"
 
 
@@ -194,7 +197,7 @@ def run(quick: bool = True, out: Path = DEFAULT_OUT) -> Dict:
             existing = json.loads(out.read_text())
         except (ValueError, OSError):
             existing = {}
-        for section in ("stream", "obs"):
+        for section in ("stream", "obs", "turbo"):
             if existing.get(section) is not None:
                 payload[section] = existing[section]
     out.write_text(json.dumps(payload, indent=1))
@@ -266,6 +269,24 @@ def check_schema(payload: Dict) -> None:
         # R+1 is the sentinel for "never merged"
         window = obs["depth"] + obs["chunk"]
         assert 1 <= md["p50"] <= md["max"] <= window + 1
+    # optional SISO turbo section (siso_throughput.py): v5
+    turbo = payload.get("turbo")
+    if turbo is not None:
+        for field in ("workload", "ebn0_db", "ber", "by_iterations",
+                      "early_exit"):
+            assert field in turbo, f"turbo missing {field}"
+        ber = turbo["ber"]
+        # the reason the subsystem exists: iterative SISO decode must beat
+        # the equivalent-rate conv/Viterbi baseline at the pinned Eb/N0
+        assert ber["turbo"] <= ber["viterbi"], ber
+        assert 0 <= ber["turbo"] <= 1 and 0 <= ber["viterbi"] <= 1
+        assert turbo["by_iterations"], "by_iterations must be non-empty"
+        for n, row in turbo["by_iterations"].items():
+            assert int(n) >= 1
+            assert row["bits_per_s"] > 0 and row["time_s"] > 0
+        ee = turbo["early_exit"]
+        assert ee["bits_per_s"] > 0
+        assert 1 <= ee["iterations_run"] <= turbo["workload"]["iterations"]
 
 
 def main() -> None:

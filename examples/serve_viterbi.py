@@ -18,8 +18,7 @@ from repro.configs.paper_viterbi import (
 )
 from repro.decode import DecodeRequest, decode
 from repro.models.model_zoo import build
-from repro.serve.engine import ServeEngine
-from repro.serve.viterbi_head import bits_to_tokens, tokens_to_bits
+from repro.serve import ServeEngine, bits_to_tokens, tokens_to_bits
 
 
 def main():

@@ -22,6 +22,11 @@ PUNCTURE_2_3 = np.array([[1, 1], [1, 0]])
 PUNCTURE_3_4 = np.array([[1, 1, 0], [1, 0, 1]])
 PUNCTURE_5_6 = np.array([[1, 1, 0, 1, 0], [1, 0, 1, 0, 1]])
 
+#: WIMAX-style turbo puncturing over the [systematic, parity1, parity2]
+#: streams: keep every systematic bit, alternate the parities -> rate 1/2
+#: from the rate-1/3 mother turbo code.
+PUNCTURE_TURBO_1_2 = np.array([[1, 1], [1, 0], [0, 1]])
+
 
 def puncture(code: ConvCode, coded_bits: jnp.ndarray, pattern: np.ndarray
              ) -> jnp.ndarray:
@@ -34,10 +39,16 @@ def puncture(code: ConvCode, coded_bits: jnp.ndarray, pattern: np.ndarray
     return coded_bits * mask  # punctured positions zeroed (not transmitted)
 
 
-def pattern_mask(code: ConvCode, T: int, pattern: np.ndarray) -> jnp.ndarray:
-    """(T, n_out) 0/1 mask from a (n_out, period) pattern."""
+def pattern_mask(code, T: int, pattern: np.ndarray) -> jnp.ndarray:
+    """(T, n_out) 0/1 mask from a (n_out, period) pattern.
+
+    ``code`` is anything with an ``n_out`` (ConvCode, RSCCode) or a bare int
+    stream count — the turbo specs mask 1 + 2*n_parity streams, which belong
+    to no single trellis.
+    """
+    n_out = code if isinstance(code, int) else code.n_out
     n, period = pattern.shape
-    assert n == code.n_out
+    assert n == n_out, (n, n_out)
     reps = -(-T // period)
     mask = np.tile(pattern.T, (reps, 1))[:T]  # (T, n_out)
     return jnp.asarray(mask, jnp.float32)

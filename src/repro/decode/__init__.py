@@ -19,8 +19,9 @@ Quickstart::
     res = decode(DecodeRequest(spec, received=rx))
     res.info_bits, res.path_metric, res.plan.explain()
 
-The old ``serve.viterbi_head.ViterbiHead(mode=...)`` string dispatch is a
-deprecated shim over this package.
+SISO code families route through the same surface: a ``repro.siso.TurboSpec``
+(or a CodecSpec wrapping an RSCCode) given to ``decode``/``plan_decode`` is
+family-routed to the "turbo"/"bcjr" registry backends.
 """
 from repro.decode import backends as _backends  # noqa: F401  (registers the backends)
 from repro.decode.planner import LONG_BLOCK_T, DecodePlan, decode, plan_decode
@@ -35,7 +36,7 @@ from repro.decode.registry import (
     register_decoder,
 )
 from repro.decode.request import DecodeContext, DecodeRequest, DecodeResult
-from repro.decode.spec import CodecSpec
+from repro.decode.spec import CodecSpec, spec_family
 
 __all__ = [
     "BackendCapabilities",
@@ -54,4 +55,5 @@ __all__ = [
     "list_decoders",
     "plan_decode",
     "register_decoder",
+    "spec_family",
 ]

@@ -164,6 +164,59 @@ def decode_sharded_stream(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> 
     )
 
 
+def _bcjr_from_received(spec: CodecSpec, received, *, ctx: DecodeContext) -> DecodeResult:
+    """Raw-symbol entry: channel output -> per-coded-bit LLR columns through
+    the spec (puncture-masked), then the SISO kernel."""
+    return decode_bcjr(spec, spec.branch_metrics(received), ctx=ctx)
+
+
+@register_decoder(
+    "bcjr",
+    capabilities=BackendCapabilities(
+        family="rsc", max_states=FUSED_MAX_STATES, accepts_received=True
+    ),
+    from_received=_bcjr_from_received,
+)
+def decode_bcjr(spec: CodecSpec, llr_coded, *, ctx: DecodeContext) -> DecodeResult:
+    """Max-log-MAP BCJR SISO decoder (Pallas alpha/beta scans) for recursive
+    systematic codes — bits are LLR signs, posterior LLRs ride along in the
+    diagnostics for iterative (turbo) consumers."""
+    from repro.kernels.ops import bcjr_llr_op
+
+    llr, metric = bcjr_llr_op(
+        spec.code, llr_coded, terminated=spec.terminated, interpret=ctx.interpret
+    )
+    bits = (llr < 0).astype(jnp.int32)
+    return _result(spec, bits, metric, backend="bcjr", llr=llr)
+
+
+def _turbo_from_received(spec, received, *, ctx: DecodeContext) -> DecodeResult:
+    """Raw-symbol entry: channel output -> depunctured stream LLRs through
+    the TurboSpec, then the iterative loop."""
+    return decode_turbo(spec, spec.channel_llrs(received), ctx=ctx)
+
+
+@register_decoder(
+    "turbo",
+    capabilities=BackendCapabilities(family="turbo", accepts_received=True),
+    from_received=_turbo_from_received,
+)
+def decode_turbo(spec, llrs, *, ctx: DecodeContext) -> DecodeResult:
+    """Iterative turbo decoder: two BCJR SISO passes per iteration exchanging
+    scaled extrinsic LLRs through the spec's interleaver, early-exiting on
+    LLR-sign agreement.  ``path_metric`` is the negated mean posterior |LLR|
+    (lower = more confident, matching the minimized-metric convention)."""
+    from repro.siso.turbo import turbo_decode
+
+    result = turbo_decode(spec, llrs, interpret=ctx.interpret)
+    metric = -jnp.mean(jnp.abs(result.llr), axis=-1)
+    return _result(
+        spec, result.bits, metric, backend="turbo",
+        iterations=result.iterations_run, converged=result.converged,
+        agreement=result.agreement, llr=result.llr,
+    )
+
+
 @register_decoder(
     "streaming",
     capabilities=BackendCapabilities(supports_streaming=True, online=True),

@@ -1,8 +1,8 @@
 """Shape-aware decode planner.
 
-``plan_decode(spec, shape)`` picks a backend from the problem shape
-(B, T, S), the device kind, and mesh presence — the auto-selection the old
-``ViterbiHead(mode=...)`` string forced onto every caller.  The choice is a
+``plan_decode(spec, shape)`` picks a backend from the code family, the
+problem shape (B, T, S), the device kind, and mesh presence — replacing the
+mode string the old serving head forced onto every caller.  The choice is a
 pure function of its inputs (deterministic), can always be overridden with
 ``backend=...``, and every plan carries an ``explain()`` string for
 debuggability.
@@ -10,6 +10,9 @@ debuggability.
 Selection policy (each branch has a planner unit test):
 
   * explicit ``backend=`` override wins (validated against capabilities);
+  * non-Viterbi code families route first — a TurboSpec to ``turbo``, an
+    RSC CodecSpec to ``bcjr`` — so family dispatch stays a registry rule
+    and the Viterbi shape rules below are untouched by new families;
   * a streaming context (``ctx.streaming``) with a multi-device ``data``
     (``ctx.batch_axis``) mesh axis -> ``sharded_stream`` (one scheduler
     spanning the axis); otherwise -> ``streaming``;
@@ -31,7 +34,11 @@ from repro.core.trellis import ConvCode
 from repro.decode import backends as _backends  # noqa: F401  (populates the registry)
 from repro.decode.registry import RegisteredDecoder, get_decoder
 from repro.decode.request import DecodeContext, DecodeRequest, DecodeResult
-from repro.decode.spec import CodecSpec
+from repro.decode.spec import CodecSpec, spec_family
+from repro.siso.turbo import TurboSpec
+
+#: family -> SISO backend the planner routes non-Viterbi specs to.
+FAMILY_BACKENDS = {"rsc": "bcjr", "turbo": "turbo"}
 
 #: Above this many trellis steps the log-depth chunk decoders beat the
 #: sequential-scan forward pass (the scan's T-deep dependency chain stops
@@ -65,7 +72,7 @@ class DecodePlan:
 
         from repro.roofline.jaxpr_cost import count_fn_costs
 
-        M = self.spec.code.n_symbols
+        M = self.spec.table_width
         bm = jnp.zeros((self.batch, self.steps, M), dtype=jnp.float32)
         try:
             return count_fn_costs(
@@ -134,8 +141,22 @@ def _normalize_shape(shape: Sequence[int]) -> Tuple[int, int]:
     raise ValueError(f"shape must be (B, T) or (B, T, M), got {tuple(shape)}")
 
 
-def _validate(decoder: RegisteredDecoder, spec: CodecSpec, ctx: DecodeContext) -> None:
+def _normalize_spec(spec):
+    """Promote a bare ConvCode to a CodecSpec; family specs with their own
+    encode/metric surface (TurboSpec) pass through untouched."""
+    if isinstance(spec, (CodecSpec, ConvCode)):
+        return CodecSpec.of(spec)
+    return spec
+
+
+def _validate(decoder: RegisteredDecoder, spec, ctx: DecodeContext) -> None:
     caps = decoder.capabilities
+    fam = spec_family(spec)
+    if caps.family != fam:
+        raise ValueError(
+            f"backend {decoder.name!r} decodes the {caps.family!r} code family, "
+            f"spec is {fam!r} — pick a backend registered for that family"
+        )
     S = spec.code.n_states
     if caps.requires_mesh and ctx.mesh is None:
         raise ValueError(f"backend {decoder.name!r} requires a mesh (pass mesh=/ctx.mesh)")
@@ -155,7 +176,7 @@ def _validate(decoder: RegisteredDecoder, spec: CodecSpec, ctx: DecodeContext) -
 
 
 def plan_decode(
-    spec: Union[CodecSpec, ConvCode],
+    spec: Union[CodecSpec, ConvCode, TurboSpec],
     shape: Sequence[int],
     *,
     mesh: Optional[object] = None,
@@ -176,7 +197,7 @@ def plan_decode(
       DecodePlan; ``plan.execute(bm_tables)`` runs it, ``plan.explain()``
       says why.
     """
-    spec = CodecSpec.of(spec)
+    spec = _normalize_spec(spec)
     B, T = _normalize_shape(shape)
     ctx = ctx or DecodeContext()
     if mesh is not None:
@@ -184,8 +205,16 @@ def plan_decode(
     device_kind = jax.devices()[0].platform
     S = spec.code.n_states
 
+    fam = spec_family(spec)
     if backend is not None:
         choice, reason = backend, f"explicit backend={backend!r} override"
+    elif fam in FAMILY_BACKENDS:
+        choice = FAMILY_BACKENDS[fam]
+        reason = (
+            f"code family {fam!r} -> registry family rule routes to "
+            f"{choice!r} (shape rules below select only among 'conv'/Viterbi "
+            "backends)"
+        )
     elif ctx.streaming:
         n_data = (
             int(ctx.mesh.shape.get(ctx.batch_axis, 0)) if ctx.mesh is not None else 0
@@ -270,7 +299,7 @@ def decode(
     (B, T, M) bm table is built.
     """
     if not isinstance(request, DecodeRequest):
-        request = DecodeRequest(spec=CodecSpec.of(request), received=received)
+        request = DecodeRequest(spec=_normalize_spec(request), received=received)
     shape = request.shape()
     plan = plan_decode(request.spec, shape, mesh=mesh, backend=backend, ctx=ctx)
     return plan.execute_request(request)

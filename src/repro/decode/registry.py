@@ -10,10 +10,11 @@ and registers itself with a capability record:
     @register_decoder("fused", capabilities=BackendCapabilities(...))
     def _fused(spec, bm_tables, *, ctx): ...
 
-The registry replaces the old string ``if/elif`` dispatch chain in
-serve/viterbi_head.py: adding a backend (a ROADMAP item like sharded
-streaming or adaptive depth) is a registry entry, not a chain edit.  The
-planner (planner.py) reads the capability records to auto-select.
+The registry replaces the string ``if/elif`` dispatch chain of the old
+serving head: adding a backend (a ROADMAP item like sharded streaming or
+adaptive depth) — or a whole code family, like the SISO "bcjr"/"turbo"
+entries — is a registry entry, not a chain edit.  The planner (planner.py)
+reads the capability records to auto-select.
 """
 from __future__ import annotations
 
@@ -36,6 +37,11 @@ class BackendCapabilities:
     """What a backend can run — the planner's selection input.
 
     Attributes:
+      family: code family the backend decodes — ``"conv"`` (feed-forward
+        convolutional, Viterbi), ``"rsc"`` (recursive systematic, SISO
+        max-log-MAP) or ``"turbo"`` (iterative parallel concatenation).
+        Requests are routed within their family; a mismatch is a validation
+        error, never a silent wrong-algebra decode.
       supports_mesh: can shard the decode across a device mesh (and, if
         ``requires_mesh``, must be given one).
       requires_mesh: refuses to run without ``ctx.mesh``.
@@ -59,6 +65,7 @@ class BackendCapabilities:
         the flag tells serving layers which backends they can keep feeding.
     """
 
+    family: str = "conv"
     supports_mesh: bool = False
     requires_mesh: bool = False
     supports_streaming: bool = False
@@ -140,7 +147,7 @@ class DecoderRegistry:
         return self._decoders.items()
 
 
-#: The process-wide registry the five built-in backends are re-homed onto.
+#: The process-wide registry every built-in backend registers onto.
 REGISTRY = DecoderRegistry()
 register_decoder = REGISTRY.register
 get_decoder = REGISTRY.get

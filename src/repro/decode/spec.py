@@ -35,8 +35,17 @@ from repro.core.channel import (
 from repro.core.encoder import encode
 from repro.core.puncture import pattern_mask, punctured_hard_metrics
 from repro.core.trellis import CODE_K3_STD, ConvCode
+from repro.siso.rsc import RSCCode
 
 METRIC_KINDS = ("hard", "soft")
+
+
+def spec_family(spec) -> str:
+    """Code family of any decode spec: "conv" (feed-forward convolutional),
+    "rsc" (recursive systematic, SISO-decoded), or "turbo" (TurboSpec).
+    The planner and capability validation dispatch on this, so adding a
+    family stays a registry/property change, not an if/elif edit."""
+    return getattr(spec, "family", "conv")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,7 +53,9 @@ class CodecSpec:
     """Immutable codec description shared by every decode backend.
 
     Attributes:
-      code: the convolutional code (trellis structure + polynomials).
+      code: the convolutional code (trellis structure + polynomials) — a
+        feed-forward ConvCode (Viterbi-decoded) or a recursive systematic
+        RSCCode (SISO/BCJR-decoded; the planner routes by ``family``).
       metric: ``"hard"`` (Hamming distance over received bits) or ``"soft"``
         (correlation metric over real channel outputs / LLRs).
       puncture: optional (n_out, period) 0/1 pattern (see core/puncture.py);
@@ -55,7 +66,7 @@ class CodecSpec:
         blocks: the traceback starts from the best frontier state instead.
     """
 
-    code: ConvCode = CODE_K3_STD
+    code: Union[ConvCode, RSCCode] = CODE_K3_STD
     metric: str = "hard"
     puncture: Optional[Tuple[Tuple[int, ...], ...]] = None
     terminated: bool = True
@@ -86,6 +97,16 @@ class CodecSpec:
     # ------------------------------ derived ------------------------------ #
 
     @property
+    def family(self) -> str:
+        return "rsc" if isinstance(self.code, RSCCode) else "conv"
+
+    @property
+    def table_width(self) -> int:
+        """Last-axis width of the per-step decoder input: the (B, T, M)
+        bm-table for Viterbi families, per-bit LLR columns for SISO."""
+        return self.code.n_out if self.family == "rsc" else self.code.n_symbols
+
+    @property
     def soft(self) -> bool:
         return self.metric == "soft"
 
@@ -107,7 +128,10 @@ class CodecSpec:
     def encode(self, bits: jnp.ndarray) -> jnp.ndarray:
         """(..., T) info bits -> (..., T + n_flush, n_out) coded bits, with
         punctured positions zeroed (not transmitted)."""
-        coded = encode(self.code, bits, terminate=self.terminated)
+        if self.family == "rsc":
+            coded = self.code.encode(bits, terminate=self.terminated)
+        else:
+            coded = encode(self.code, bits, terminate=self.terminated)
         if self.puncture is not None:
             mask = pattern_mask(self.code, coded.shape[-2], self.puncture_array)
             coded = (coded * mask).astype(coded.dtype)
@@ -131,9 +155,22 @@ class CodecSpec:
     # ---------------------------- decode side ---------------------------- #
 
     def branch_metrics(self, received: jnp.ndarray) -> jnp.ndarray:
-        """(..., T, n_out) received bits / channel values -> (..., T, M)
-        branch-metric tables (to be minimized).  Punctured positions
-        contribute 0 to every branch metric (erasures)."""
+        """(..., T, n_out) received bits / channel values -> the per-step
+        decoder input.
+
+        Viterbi (conv) family: (..., T, M) branch-metric tables (to be
+        minimized).  SISO (rsc) family: (..., T, n_out) per-coded-bit LLRs
+        with the convention ``lambda = log P(0)/P(1)`` — soft channel values
+        pass through (max-log is scale-invariant), hard bits map to +-1.
+        Punctured positions are erasures (contribute 0) in both.
+        """
+        if self.family == "rsc":
+            r = received.astype(jnp.float32)
+            lam = r if self.soft else 1.0 - 2.0 * r
+            if self.puncture is not None:
+                mask = pattern_mask(self.code, received.shape[-2], self.puncture_array)
+                lam = lam * mask
+            return lam
         if self.soft:
             if self.puncture is not None:
                 mask = pattern_mask(self.code, received.shape[-2], self.puncture_array)
@@ -151,7 +188,14 @@ class CodecSpec:
     def describe(self) -> str:
         punct = "unpunctured" if self.puncture is None else f"punctured{self.puncture}"
         term = "terminated" if self.terminated else "open"
-        return (
-            f"ConvCode(K={self.code.constraint}, polys={tuple(oct(g) for g in self.code.polys)}, "
-            f"S={self.code.n_states}) {self.metric}/{punct}/{term}"
-        )
+        if self.family == "rsc":
+            head = (
+                f"RSCCode(K={self.code.constraint}, fb={oct(self.code.feedback)}, "
+                f"fwd={tuple(oct(g) for g in self.code.forward)}"
+            )
+        else:
+            head = (
+                f"ConvCode(K={self.code.constraint}, "
+                f"polys={tuple(oct(g) for g in self.code.polys)}"
+            )
+        return f"{head}, S={self.code.n_states}) {self.metric}/{punct}/{term}"

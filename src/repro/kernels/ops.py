@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.trellis import NEG_UNREACHABLE, ConvCode
 from repro.core.viterbi import _traceback
+from repro.kernels import bcjr as _bcjr
 from repro.kernels import minplus as _minplus
 from repro.kernels import survivors as _surv
 from repro.kernels import texpand as _texpand
@@ -248,6 +249,58 @@ def viterbi_decode_fused_packed(
     final_state, metric = _frontier(final_pm, terminated)
     bits = viterbi_traceback_op(plan.code, packed, final_state, T, interpret)
     return bits, metric
+
+
+def bcjr_llr_op(
+    code,
+    llr_coded: jnp.ndarray,
+    llr_apriori: Optional[jnp.ndarray] = None,
+    terminated: bool = False,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Max-log-MAP SISO decode of one RSC code block (kernels/bcjr.py).
+
+    The SISO analogue of viterbi_decode_fused: forward (alpha) scan with
+    VMEM-resident metrics, then a time-reversed backward scan that fuses the
+    beta recursion with per-step LLR extraction.
+
+    Args:
+      code: an RSCCode (duck-typed — kernels/ never imports siso/).
+      llr_coded: (B, T, n_out) per-coded-bit channel LLRs, convention
+        ``lambda = log P(0)/P(1)`` (punctured positions = 0).
+      llr_apriori: (B, T) a-priori LLRs on the info bits (None -> zeros).
+      terminated: trellis flushed to state 0 (beta seeded there) vs open.
+    Returns:
+      llr: (B, T) float32 a-posteriori LLRs (negative -> decide bit 1).
+      metric: (B,) float32 best-path terminal cost (renormalized per step,
+        so meaningful relative to other streams of the same T, not absolute).
+    """
+    B, T, n = llr_coded.shape
+    if llr_apriori is None:
+        llr_apriori = jnp.zeros((B, T), jnp.float32)
+    feat = jnp.concatenate(
+        [llr_coded.astype(jnp.float32), llr_apriori[..., None].astype(jnp.float32)],
+        axis=-1,
+    )
+    feat = feat.transpose(1, 2, 0)  # (T, F, B)
+    block_b = lane_block(B)
+    feat, _ = pad_axis_to(feat, 2, block_b, 0.0)
+    interpret = resolve_interpret(interpret)  # pinned once for both kernels
+    P0, P1 = code.select_matrices
+    b0, b1 = code.alpha_weights
+    alphas, final_pm = _bcjr.bcjr_alpha_scan(
+        tuple(jnp.asarray(m) for m in (P0, P1, b0, b1)), feat, block_b, interpret
+    )
+    N0, N1 = code.beta_matrices
+    U0, U1 = code.llr_matrices
+    c0, c1 = code.beta_weights
+    w0, w1 = code.llr_weights
+    llr = _bcjr.bcjr_beta_llr_scan(
+        tuple(jnp.asarray(m) for m in (N0, N1, U0, U1, c0, c1, w0, w1)),
+        alphas, feat, terminated, block_b, interpret,
+    )
+    metric = final_pm[0, :B] if terminated else final_pm[:, :B].min(axis=0)
+    return llr[:, :B].T, metric
 
 
 def minplus_matmul_op(

@@ -53,3 +53,50 @@ def viterbi_scan_ref(
 def minplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Oracle for the (min,+) matmul kernel.  a: (B, I, K), b: (B, K, J)."""
     return jnp.min(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+
+def bcjr_llr_ref(code, feat: jnp.ndarray, terminated: bool = False) -> jnp.ndarray:
+    """Oracle for the alpha + beta/LLR BCJR kernel pair (kernels/bcjr.py).
+
+    Same operand matrices, same min-domain algebra, kernel-native layout.
+
+    Args:
+      code: an RSCCode (duck-typed: only the cached table properties are
+        used, so kernels/ never imports siso/).
+      feat: (T, F, B) per-step feature columns (channel LLRs + a-priori).
+    Returns:
+      llr: (T, B) float32 max-log LLRs (negative -> decide 1).
+    """
+    from repro.core.trellis import NEG_UNREACHABLE
+
+    T, F, B = feat.shape
+    S = code.n_states
+    P0, P1 = (jnp.asarray(m) for m in code.select_matrices)
+    b0, b1 = (jnp.asarray(m) for m in code.alpha_weights)
+    N0, N1 = (jnp.asarray(m) for m in code.beta_matrices)
+    c0, c1 = (jnp.asarray(m) for m in code.beta_weights)
+    U0, U1 = (jnp.asarray(m) for m in code.llr_matrices)
+    w0, w1 = (jnp.asarray(m) for m in code.llr_weights)
+
+    col0 = jnp.where(jnp.arange(S)[:, None] == 0, 0.0, NEG_UNREACHABLE)
+    col0 = jnp.broadcast_to(col0, (S, B))
+
+    def fwd(alpha, f_t):
+        new = jnp.minimum(P0 @ alpha + b0 @ f_t, P1 @ alpha + b1 @ f_t)
+        new = jnp.minimum(new - new.min(axis=0, keepdims=True), NEG_UNREACHABLE)
+        return new, alpha  # emit the PRE-update A_t, like the kernel
+
+    _, alphas = jax.lax.scan(fwd, col0, feat)
+
+    def bwd(beta, inputs):
+        alpha, f_t = inputs
+        cost0 = alpha + w0 @ f_t + U0 @ beta
+        cost1 = alpha + w1 @ f_t + U1 @ beta
+        llr_t = cost1.min(axis=0) - cost0.min(axis=0)
+        new = jnp.minimum(N0 @ beta + c0 @ f_t, N1 @ beta + c1 @ f_t)
+        new = jnp.minimum(new - new.min(axis=0, keepdims=True), NEG_UNREACHABLE)
+        return new, llr_t
+
+    beta_T = col0 if terminated else jnp.zeros((S, B))
+    _, llr = jax.lax.scan(bwd, beta_T, (alphas, feat), reverse=True)
+    return llr

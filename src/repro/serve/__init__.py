@@ -1,4 +1,4 @@
+from repro.serve.bits import bits_to_tokens, tokens_to_bits
 from repro.serve.engine import ServeEngine
-from repro.serve.viterbi_head import ViterbiHead
 
-__all__ = ["ServeEngine", "ViterbiHead"]
+__all__ = ["ServeEngine", "bits_to_tokens", "tokens_to_bits"]

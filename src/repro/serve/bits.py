@@ -1,0 +1,23 @@
+"""Token <-> bitstream packing for the serving pipeline.
+
+The serving scenario treats LM output as a bitstream to be channel-coded:
+tokens are unpacked MSB-first into bits, pushed through a codec from
+``repro.decode`` / ``repro.siso``, and re-packed after decoding.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tokens_to_bits(tokens: jnp.ndarray, bits_per_token: int) -> jnp.ndarray:
+    """(B, T) int32 -> (B, T*bits) {0,1} MSB-first — LM output as a bitstream."""
+    shifts = jnp.arange(bits_per_token - 1, -1, -1)
+    bits = (tokens[..., None] >> shifts) & 1
+    return bits.reshape(tokens.shape[0], -1).astype(jnp.int32)
+
+
+def bits_to_tokens(bits: jnp.ndarray, bits_per_token: int) -> jnp.ndarray:
+    B, n = bits.shape
+    bits = bits.reshape(B, n // bits_per_token, bits_per_token)
+    weights = 1 << jnp.arange(bits_per_token - 1, -1, -1)
+    return jnp.einsum("btk,k->bt", bits, weights).astype(jnp.int32)

@@ -1,0 +1,27 @@
+"""Soft-in/soft-out (SISO) codec subsystem.
+
+rsc.py        recursive systematic convolutional codes: same de Bruijn
+              butterfly as ConvCode (the Pallas select matmuls carry over),
+              plus the gather/weight tables of the BCJR backward pass.
+interleave.py block and QPP interleavers as hashable specs.
+turbo.py      TurboSpec (the "turbo" code family) + the iterative
+              extrinsic-exchange loop over two RSC SISO passes.
+
+The kernels live in kernels/bcjr.py (alpha scan + fused beta/LLR scan),
+exposed as kernels/ops.bcjr_llr_op; registry backends ("bcjr", "turbo") in
+decode/backends.py route here via the planner's code-family rule.
+"""
+from repro.siso.interleave import BlockInterleaver, QPPInterleaver
+from repro.siso.rsc import RSC_K3_75, RSC_K4_LTE, RSCCode
+from repro.siso.turbo import TurboResult, TurboSpec, turbo_decode
+
+__all__ = [
+    "BlockInterleaver",
+    "QPPInterleaver",
+    "RSCCode",
+    "RSC_K3_75",
+    "RSC_K4_LTE",
+    "TurboResult",
+    "TurboSpec",
+    "turbo_decode",
+]

@@ -1,0 +1,305 @@
+"""Iterative turbo decoding: two RSC SISO passes exchanging extrinsic LLRs.
+
+A TurboSpec is the turbo-family analogue of CodecSpec: constituent RSC code
++ interleaver + optional puncture pattern + iteration policy, hashable so it
+keys jit caches and the decode registry the same way CodecSpec does.  The
+encoder emits [systematic, parity1, parity2(interleaved input)] — the
+classic rate-1/3 parallel concatenation; both constituent trellises are
+left open (no tails), which keeps the rate exactly 1/(1 + 2*n_parity) and
+both SISO passes shape-identical (one kernel compilation serves both).
+
+Decode loop (all LLRs min-domain, ``lambda = log P(0)/P(1)``):
+
+  La1 = deinterleave(Le2)
+  L1  = SISO1(lam_sys, lam_p1, La1)          Le1 = L1 - lam_sys - La1
+  La2 = interleave(Le1)
+  L2  = SISO2(lam_sys[pi], lam_p2, La2)      Le2 = L2 - lam_sys[pi] - La2
+
+Early exit: a stream whose hard decisions agree with its previous iteration
+is *frozen* — its extrinsic input is held at the value that produced the
+converged decisions, so every later iteration reproduces them exactly.
+That makes the early-exit path bit-exact with the fixed-iteration path by
+construction (gated in tests), and the loop stops once every stream froze.
+
+Observability: pass ``metrics=MetricsRegistry()`` (repro.obs) and the loop
+records per-iteration LLR-sign agreement, iteration counts, converged
+streams, and early exits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import awgn, bpsk_modulate
+from repro.core.puncture import pattern_mask
+from repro.kernels.ops import bcjr_llr_op
+from repro.siso.interleave import BlockInterleaver, QPPInterleaver
+from repro.siso.rsc import RSC_K3_75, RSCCode
+
+InterleaverSpec = Union[BlockInterleaver, QPPInterleaver]
+
+
+@dataclasses.dataclass(frozen=True)
+class TurboSpec:
+    """Immutable turbo-codec description (the "turbo" code family).
+
+    Attributes:
+      code: the constituent RSC code (both constituents are identical).
+      interleaver: hashable interleaver spec; fixes the block length N.
+      puncture: optional (n_streams, period) 0/1 pattern over the
+        [systematic, parities1..., parities2...] streams (WIMAX-style
+        rate-compatible puncturing); stored as nested tuples.
+      iterations: full decode iterations (two SISO passes each).
+      early_exit: stop once every stream's hard decisions stabilized
+        (bit-exact with running all ``iterations`` — see module docstring).
+      extrinsic_scale: damping on the exchanged extrinsic LLRs.  Max-log
+        SISO overestimates reliability; the classic 0.7 scaling recovers
+        most of the gap to true log-MAP (Vogt & Finger 2000).
+    """
+
+    code: RSCCode = RSC_K3_75
+    interleaver: InterleaverSpec = QPPInterleaver(64, 7, 16)
+    puncture: Optional[Tuple[Tuple[int, ...], ...]] = None
+    iterations: int = 6
+    early_exit: bool = True
+    extrinsic_scale: float = 0.7
+
+    def __post_init__(self):
+        if self.iterations < 1:
+            raise ValueError("iterations must be >= 1")
+        if self.puncture is not None:
+            pat = np.asarray(self.puncture)
+            if pat.ndim != 2 or pat.shape[0] != self.n_streams:
+                raise ValueError(
+                    f"puncture pattern must be (n_streams={self.n_streams}, "
+                    f"period), got shape {pat.shape}"
+                )
+            object.__setattr__(
+                self, "puncture", tuple(tuple(int(x) for x in row) for row in pat)
+            )
+
+    # ----------------------------- derived ----------------------------- #
+
+    @property
+    def family(self) -> str:
+        return "turbo"
+
+    @property
+    def n_streams(self) -> int:
+        """Coded streams per info bit: systematic + both constituents' parities."""
+        return 1 + 2 * self.code.n_parity
+
+    @property
+    def block_len(self) -> int:
+        return self.interleaver.n
+
+    @property
+    def terminated(self) -> bool:
+        """Constituent trellises are left open (no tail bits)."""
+        return False
+
+    @property
+    def metric(self) -> str:
+        return "soft"
+
+    @property
+    def puncture_array(self) -> Optional[np.ndarray]:
+        return None if self.puncture is None else np.asarray(self.puncture)
+
+    @property
+    def n_flush(self) -> int:
+        return 0
+
+    @property
+    def table_width(self) -> int:
+        """Width of the per-step decoder input (the bm-table analogue)."""
+        return self.n_streams
+
+    def n_steps(self, n_info_bits: int) -> int:
+        return n_info_bits
+
+    # --------------------------- encode side --------------------------- #
+
+    def encode(self, bits: jnp.ndarray) -> jnp.ndarray:
+        """(..., N) info bits -> (..., N, n_streams) coded bits, N =
+        interleaver.n; punctured positions zeroed (not transmitted)."""
+        if bits.shape[-1] != self.block_len:
+            raise ValueError(
+                f"turbo block length is fixed by the interleaver: expected "
+                f"{self.block_len} info bits, got {bits.shape[-1]}"
+            )
+        perm = jnp.asarray(self.interleaver.permutation)
+        c1 = self.code.encode(bits, terminate=False)  # (..., N, 1 + n_parity)
+        c2 = self.code.encode(bits[..., perm], terminate=False)
+        coded = jnp.concatenate([c1, c2[..., 1:]], axis=-1)
+        if self.puncture is not None:
+            mask = pattern_mask(self.n_streams, self.block_len, self.puncture_array)
+            coded = (coded * mask).astype(coded.dtype)
+        return coded
+
+    def channel(self, key: jax.Array, coded_bits: jnp.ndarray, *,
+                snr_db: float) -> jnp.ndarray:
+        """BPSK + AWGN — turbo decoding is soft-input by nature."""
+        return awgn(key, bpsk_modulate(coded_bits), snr_db)
+
+    # --------------------------- decode side --------------------------- #
+
+    def channel_llrs(self, received: jnp.ndarray,
+                     snr_db: Optional[float] = None) -> jnp.ndarray:
+        """(..., N, n_streams) channel values -> per-bit LLRs.
+
+        With BPSK (bit 0 -> +1) over AWGN at Es/N0 = snr, the exact LLR is
+        ``4 * snr * y``; max-log decoding is invariant to a positive scale,
+        so ``snr_db=None`` just uses y.  Punctured positions are erased to 0
+        whatever the channel delivered there.
+        """
+        lam = received.astype(jnp.float32)
+        if snr_db is not None:
+            lam = lam * (4.0 * 10.0 ** (snr_db / 10.0))
+        if self.puncture is not None:
+            mask = pattern_mask(self.n_streams, received.shape[-2], self.puncture_array)
+            lam = lam * mask
+        return lam
+
+    def branch_metrics(self, received: jnp.ndarray) -> jnp.ndarray:
+        """The bm-table analogue for the registry's normalized signature:
+        per-stream channel LLRs (scale-free; see channel_llrs)."""
+        return self.channel_llrs(received)
+
+    def strip_flush(self, bits: jnp.ndarray) -> jnp.ndarray:
+        return bits
+
+    def describe(self) -> str:
+        punct = "unpunctured" if self.puncture is None else f"punctured{self.puncture}"
+        return (
+            f"Turbo(RSC K={self.code.constraint}, fb={oct(self.code.feedback)}, "
+            f"fwd={tuple(oct(g) for g in self.code.forward)}, "
+            f"{type(self.interleaver).__name__} N={self.block_len}) "
+            f"rate-1/{self.n_streams} {punct}/"
+            f"{self.iterations}it{'/early-exit' if self.early_exit else ''}"
+        )
+
+
+@dataclasses.dataclass
+class TurboResult:
+    """Outcome of one turbo decode."""
+
+    bits: jnp.ndarray            #: (B, N) int32 hard decisions
+    llr: jnp.ndarray             #: (B, N) float32 a-posteriori LLRs
+    iterations_run: int          #: iterations actually executed
+    agreement: Tuple[float, ...]  #: per-iteration LLR-sign agreement fraction
+    converged: jnp.ndarray       #: (B,) bool — streams whose decisions froze
+
+
+@functools.lru_cache(maxsize=None)
+def _iteration_fn(spec: TurboSpec, interpret: Optional[bool]):
+    """Jitted single turbo iteration, cached per (spec, interpret)."""
+    code = spec.code
+    perm = jnp.asarray(spec.interleaver.permutation)
+    inv = jnp.asarray(spec.interleaver.inverse)
+    npar = code.n_parity
+    scale = float(spec.extrinsic_scale)
+
+    @jax.jit
+    def step(llrs, le2, prev_bits, done):
+        lam_sys = llrs[..., 0]
+        lam_p1 = llrs[..., 1:1 + npar]
+        lam_p2 = llrs[..., 1 + npar:]
+        # SISO 1 (natural order)
+        la1 = le2[:, inv]
+        l1, _ = bcjr_llr_op(
+            code, jnp.concatenate([lam_sys[..., None], lam_p1], axis=-1),
+            la1, terminated=False, interpret=interpret,
+        )
+        le1 = scale * (l1 - lam_sys - la1)
+        # SISO 2 (interleaved order)
+        sys2 = lam_sys[:, perm]
+        la2 = le1[:, perm]
+        l2, _ = bcjr_llr_op(
+            code, jnp.concatenate([sys2[..., None], lam_p2], axis=-1),
+            la2, terminated=False, interpret=interpret,
+        )
+        le2_new = scale * (l2 - sys2 - la2)
+        llr_full = l2[:, inv]
+        bits = (llr_full < 0).astype(jnp.int32)
+        agree_stream = jnp.mean((bits == prev_bits).astype(jnp.float32), axis=1)
+        done_new = done | (agree_stream >= 1.0)
+        # freeze converged streams at the extrinsic INPUT that produced their
+        # decisions: every later iteration replays them bit-exactly
+        le2_out = jnp.where(done_new[:, None], le2, le2_new)
+        agree_frac = jnp.mean((bits == prev_bits).astype(jnp.float32))
+        return le2_out, bits, llr_full, done_new, agree_frac
+
+    return step
+
+
+def turbo_decode(
+    spec: TurboSpec,
+    llrs: jnp.ndarray,
+    *,
+    iterations: Optional[int] = None,
+    early_exit: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    metrics=None,
+) -> TurboResult:
+    """Iteratively decode (B, N, n_streams) channel LLRs.
+
+    Args:
+      llrs: per-bit channel LLRs (spec.channel_llrs of the received block).
+      iterations / early_exit: override the spec's policy.
+      metrics: optional repro.obs MetricsRegistry — records
+        ``turbo_iterations_total``, ``turbo_llr_agreement`` (per-iteration
+        sign-agreement histogram), ``turbo_converged_streams`` and
+        ``turbo_early_exits_total``.
+    """
+    iterations = spec.iterations if iterations is None else int(iterations)
+    early_exit = spec.early_exit if early_exit is None else bool(early_exit)
+    B, N, ns = llrs.shape
+    if N != spec.block_len or ns != spec.n_streams:
+        raise ValueError(
+            f"expected (B, {spec.block_len}, {spec.n_streams}) LLRs, "
+            f"got {llrs.shape}"
+        )
+    step = _iteration_fn(spec, interpret)
+    llrs = jnp.asarray(llrs, jnp.float32)
+    le2 = jnp.zeros((B, N), jnp.float32)
+    prev_bits = jnp.full((B, N), -1, jnp.int32)  # never matches: no false freeze
+    done = jnp.zeros((B,), bool)
+    agreements = []
+    bits = llr_full = None
+    n_run = 0
+    for _ in range(iterations):
+        le2, bits, llr_full, done, agree = step(llrs, le2, prev_bits, done)
+        prev_bits = bits
+        n_run += 1
+        agree = float(agree)
+        agreements.append(agree)
+        if metrics is not None:
+            metrics.counter(
+                "turbo_iterations_total", "turbo decode iterations executed"
+            ).inc()
+            metrics.histogram(
+                "turbo_llr_agreement",
+                buckets=(0.5, 0.9, 0.99, 0.999, 1.0),
+                help="per-iteration LLR-sign agreement with the previous iteration",
+            ).observe(agree)
+        if early_exit and bool(done.all()):
+            if metrics is not None:
+                metrics.counter(
+                    "turbo_early_exits_total",
+                    "decodes stopped before the iteration budget",
+                ).inc()
+            break
+    if metrics is not None:
+        metrics.gauge(
+            "turbo_converged_streams", "streams whose decisions froze"
+        ).set(float(done.sum()))
+    return TurboResult(
+        bits=bits, llr=llr_full, iterations_run=n_run,
+        agreement=tuple(agreements), converged=done,
+    )

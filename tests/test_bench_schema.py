@@ -1,7 +1,7 @@
-"""BENCH_viterbi.json schema gate (v4): the validator the CI bench-smoke job
-runs must accept well-formed payloads — including the ``stream.online`` and
-telemetry-acceptance ``obs`` sections — and reject the invariants it exists
-to guard."""
+"""BENCH_viterbi.json schema gate (v5): the validator the CI bench-smoke job
+runs must accept well-formed payloads — including the ``stream.online``,
+telemetry-acceptance ``obs``, and SISO ``turbo`` sections — and reject the
+invariants it exists to guard."""
 import copy
 
 import pytest
@@ -75,11 +75,28 @@ def _payload():
             },
             "bit_exact_with_telemetry": True,
         },
+        "turbo": {
+            "workload": {
+                "code": "rsc_k4_lte", "interleaver": "qpp(512,31,64)",
+                "batch": 8, "block_len": 512, "iterations": 6,
+            },
+            "ebn0_db": 1.0,
+            "ber": {"turbo": 0.0007, "viterbi": 0.012},
+            "by_iterations": {
+                "1": {"time_s": 0.02, "bits_per_s": 1.6e5},
+                "2": {"time_s": 0.05, "bits_per_s": 8.2e4},
+                "6": {"time_s": 0.15, "bits_per_s": 2.6e4},
+            },
+            "early_exit": {
+                "time_s": 0.13, "bits_per_s": 3.1e4,
+                "iterations_run": 5, "converged_frac": 1.0,
+            },
+        },
     }
 
 
-def test_schema_is_v4():
-    assert BENCH_SCHEMA == "bench_viterbi/v4"
+def test_schema_is_v5():
+    assert BENCH_SCHEMA == "bench_viterbi/v5"
 
 
 def test_check_schema_accepts_valid_payload():
@@ -90,6 +107,7 @@ def test_check_schema_accepts_payload_without_optional_sections():
     payload = _payload()
     del payload["stream"]
     del payload["obs"]
+    del payload["turbo"]
     check_schema(payload)
     payload = _payload()
     del payload["stream"]["online"]  # by_shards alone (pre-v3 content) is fine
@@ -140,6 +158,29 @@ def test_check_schema_rejects_broken_online_sections(mutate):
     ],
 )
 def test_check_schema_rejects_broken_obs_sections(mutate):
+    payload = copy.deepcopy(_payload())
+    mutate(payload)
+    with pytest.raises((AssertionError, KeyError)):
+        check_schema(payload)
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        # the whole point of the section: turbo worse than Viterbi = rejected
+        lambda p: p["turbo"]["ber"].__setitem__("turbo", 0.05),
+        lambda p: p["turbo"]["ber"].__setitem__("viterbi", -0.01),
+        lambda p: p["turbo"].pop("ber"),
+        lambda p: p["turbo"].pop("early_exit"),
+        lambda p: p["turbo"].__setitem__("by_iterations", {}),
+        lambda p: p["turbo"]["by_iterations"]["6"].__setitem__("bits_per_s", 0),
+        lambda p: p["turbo"]["by_iterations"]["1"].__setitem__("time_s", -1.0),
+        # early exit cannot have run more iterations than the spec allows
+        lambda p: p["turbo"]["early_exit"].__setitem__("iterations_run", 7),
+        lambda p: p["turbo"]["early_exit"].__setitem__("bits_per_s", 0),
+    ],
+)
+def test_check_schema_rejects_broken_turbo_sections(mutate):
     payload = copy.deepcopy(_payload())
     mutate(payload)
     with pytest.raises((AssertionError, KeyError)):

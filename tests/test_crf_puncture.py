@@ -6,9 +6,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+# hypothesis gates ONLY the property test below — the CRF and puncture
+# coverage must run even on containers without it
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.crf import (
     crf_decode,
@@ -20,7 +26,10 @@ from repro.core.crf import (
 from repro.core.puncture import (
     PUNCTURE_2_3,
     PUNCTURE_3_4,
+    PUNCTURE_5_6,
+    PUNCTURE_TURBO_1_2,
     effective_rate,
+    pattern_mask,
     punctured_hard_metrics,
 )
 from repro.core import CODE_K3_STD, bsc, encode, viterbi_decode
@@ -93,16 +102,18 @@ def test_crf_trains(rng):
     assert float((dec == tags).mean()) > 0.9
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2 ** 16), T=st.integers(2, 10))
-def test_crf_loss_nonnegative_and_zero_gap(seed, T):
-    """log Z >= score(any path): NLL of every labeling is >= 0."""
-    key = jax.random.PRNGKey(seed)
-    trans = jax.random.normal(key, (3, 3))
-    emis = jax.random.normal(jax.random.fold_in(key, 1), (1, T, 3))
-    tags = jax.random.randint(jax.random.fold_in(key, 2), (1, T), 0, 3)
-    nll = crf_log_norm(trans, emis) - crf_score(trans, emis, tags)
-    assert float(nll[0]) >= -1e-5
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), T=st.integers(2, 10))
+    def test_crf_loss_nonnegative_and_zero_gap(seed, T):
+        """log Z >= score(any path): NLL of every labeling is >= 0."""
+        key = jax.random.PRNGKey(seed)
+        trans = jax.random.normal(key, (3, 3))
+        emis = jax.random.normal(jax.random.fold_in(key, 1), (1, T, 3))
+        tags = jax.random.randint(jax.random.fold_in(key, 2), (1, T), 0, 3)
+        nll = crf_log_norm(trans, emis) - crf_score(trans, emis, tags)
+        assert float(nll[0]) >= -1e-5
 
 
 # ----------------------------- puncturing -------------------------------- #
@@ -111,6 +122,41 @@ def test_crf_loss_nonnegative_and_zero_gap(seed, T):
 def test_effective_rates():
     assert effective_rate(CODE_K3_STD, PUNCTURE_2_3) == pytest.approx(2 / 3)
     assert effective_rate(CODE_K3_STD, PUNCTURE_3_4) == pytest.approx(3 / 4)
+    assert effective_rate(CODE_K3_STD, PUNCTURE_5_6) == pytest.approx(5 / 6)
+    assert effective_rate(CODE_K3_STD, PUNCTURE_TURBO_1_2) == pytest.approx(1 / 2)
+
+
+def test_pattern_mask_tiles_and_accepts_any_stream_count():
+    """pattern_mask works from a ConvCode, an RSCCode, or a bare stream
+    count (the turbo 3-stream layout belongs to no single trellis), and
+    tiles correctly when T is not a multiple of the pattern period."""
+    from repro.siso import RSC_K3_75
+
+    T = 7  # not a multiple of PUNCTURE_3_4's period (3)
+    m_code = np.asarray(pattern_mask(CODE_K3_STD, T, PUNCTURE_3_4))
+    m_int = np.asarray(pattern_mask(2, T, PUNCTURE_3_4))
+    m_rsc = np.asarray(pattern_mask(RSC_K3_75, T, PUNCTURE_3_4))
+    want = np.tile(PUNCTURE_3_4.T, (3, 1))[:T]
+    for m in (m_code, m_int, m_rsc):
+        assert m.shape == (T, 2)
+        np.testing.assert_array_equal(m, want)
+    m3 = np.asarray(pattern_mask(3, 5, PUNCTURE_TURBO_1_2))
+    assert m3.shape == (5, 3)
+    assert (m3[:, 0] == 1).all()  # systematic stream never punctured
+    with pytest.raises(AssertionError):
+        pattern_mask(3, 4, PUNCTURE_2_3)  # stream-count mismatch
+
+
+def test_punctured_5_6_noiseless_roundtrip(rng):
+    """The most aggressive WIMAX rate still decodes exactly without noise
+    through the same erasure-metric Viterbi path."""
+    code = CODE_K3_STD
+    bits = jax.random.bernoulli(rng, 0.5, (8, 50)).astype(jnp.int32)
+    coded = encode(code, bits, terminate=True)
+    bm = punctured_hard_metrics(code, coded, PUNCTURE_5_6)
+    dec, metric = viterbi_decode(code, bm)
+    assert (metric == 0).all()
+    assert (dec[:, :50] == bits).all()
 
 
 def test_punctured_noiseless_roundtrip(rng):

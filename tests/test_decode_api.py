@@ -1,12 +1,14 @@
-"""Unified decode API: CodecSpec, DecoderRegistry, shape-aware planner,
-backend-equivalence golden grid, and the deprecated ViterbiHead shim.
+"""Unified decode API: CodecSpec, DecoderRegistry, shape-aware planner, and
+the backend-equivalence golden grid.
 
 The golden grid is the acceptance gate for the registry re-home: every
-registered backend must agree bit-exactly with core.viterbi.viterbi_decode
-over (code K3/K7 x punctured/unpunctured x hard/soft x terminated/open).
+registered Viterbi ("conv"-family) backend must agree bit-exactly with
+core.viterbi.viterbi_decode over (code K3/K7 x punctured/unpunctured x
+hard/soft x terminated/open).  The SISO "bcjr"/"turbo" entries are a
+different code family (routed by spec.family, never by shape) and are gated
+in tests/test_siso.py.
 """
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -26,21 +28,17 @@ from repro.decode import (
     list_decoders,
     plan_decode,
 )
-from repro.serve import viterbi_head as vh
-from repro.serve.viterbi_head import ViterbiHead
 
 GRID_CODES = {"k3": CODE_K3_STD, "k7": CODE_K7_NASA}
 EXPECTED_BACKENDS = (
-    "fused", "fused_packed", "parallel", "seqparallel", "sequential",
-    "sharded_stream", "streaming",
+    "bcjr", "fused", "fused_packed", "parallel", "seqparallel", "sequential",
+    "sharded_stream", "streaming", "turbo",
 )
-
-
-def _quiet_head(**kw) -> ViterbiHead:
-    """Construct the deprecated shim without tripping -W error legs."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return ViterbiHead(**kw)
+#: the Viterbi backends the bit-exact equivalence grid sweeps (same family,
+#: same algebra); SISO backends decode a different family and are excluded.
+CONV_BACKENDS = tuple(
+    n for n in EXPECTED_BACKENDS if n not in ("bcjr", "turbo")
+)
 
 
 def _grid_tables(spec: CodecSpec, key, batch=2, n_info=30):
@@ -131,6 +129,10 @@ def test_capability_records():
     assert get_decoder("fused").capabilities.max_states is not None
     caps = get_decoder("sharded_stream").capabilities
     assert caps.sharded_stream and caps.requires_mesh and caps.supports_streaming
+    for name in CONV_BACKENDS:
+        assert get_decoder(name).capabilities.family == "conv"
+    assert get_decoder("bcjr").capabilities.family == "rsc"
+    assert get_decoder("turbo").capabilities.family == "turbo"
 
 
 # --------------------------------------------------------------------------- #
@@ -160,7 +162,7 @@ def test_backend_equivalence_grid(code_name, punctured, metric, terminated,
     T = bm.shape[1]
     ref_bits, ref_metric = viterbi_decode(code, bm, terminated=terminated)
 
-    for name in list_decoders():
+    for name in CONV_BACKENDS:
         needs_mesh = get_decoder(name).capabilities.requires_mesh
         ctx = DecodeContext(
             mesh=mesh11 if needs_mesh else None,
@@ -327,54 +329,38 @@ def test_decode_one_shot_roundtrip(rng):
 
 
 # --------------------------------------------------------------------------- #
-# deprecated ViterbiHead shim                                                  #
+# shim removal: repro.decode is the only decode entry point                    #
 # --------------------------------------------------------------------------- #
 
 
-def test_shim_warns_once_then_stays_quiet():
-    vh._DEPRECATION_WARNED = False
-    with pytest.warns(DeprecationWarning, match="ViterbiHead is deprecated"):
-        ViterbiHead()
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        ViterbiHead()
-    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+def test_viterbi_head_shim_is_gone():
+    """The deprecated serve.viterbi_head module was removed (PR 7); the
+    token-packing helpers live on in repro.serve.bits."""
+    with pytest.raises(ImportError):
+        import repro.serve.viterbi_head  # noqa: F401
+    import repro.serve as serve
+
+    assert not hasattr(serve, "ViterbiHead")
+    assert callable(serve.tokens_to_bits) and callable(serve.bits_to_tokens)
 
 
-def test_shim_mode_maps_to_registry(rng):
-    _, bm = _grid_tables(CodecSpec(), rng)
-    ref_bits, ref_metric = viterbi_decode(CODE_K3_STD, bm)
-    for mode in ("fused", "sequential", "parallel"):
-        head = _quiet_head(mode=mode)
-        bits, metric = head.decode_from_metrics(bm)
-        np.testing.assert_array_equal(np.asarray(bits), np.asarray(ref_bits))
-    with pytest.raises(KeyError):
-        _quiet_head(mode="nope").decode_from_metrics(bm)
-
-
-def test_shim_auto_mode_uses_planner(rng):
-    head = _quiet_head()  # mode=None -> planner auto-select
+def test_open_spec_plumbs_terminated_end_to_end(rng):
+    """terminated=False flows spec -> encoder (no flush bits) -> backend ->
+    traceback through the decode() surface."""
+    spec = CodecSpec(terminated=False)
     bits = jax.random.bernoulli(rng, 0.5, (4, 40)).astype(jnp.int32)
-    dec, ber, exact = head.roundtrip(jax.random.fold_in(rng, 1), bits,
-                                     flip_prob=0.0)
-    assert exact and dec.shape == bits.shape
-
-
-def test_shim_plumbs_terminated_end_to_end(rng):
-    """ViterbiHead used to hardcode the terminated path; terminated=False now
-    flows spec -> encoder (no flush bits) -> backend -> traceback."""
-    head = _quiet_head(mode="sequential", terminated=False)
-    bits = jax.random.bernoulli(rng, 0.5, (4, 40)).astype(jnp.int32)
-    coded = head.encode_bits(bits)
+    coded = spec.encode(bits)
     assert coded.shape == (4, 40, 2)  # no flush steps appended
-    bm = head.branch_metrics(coded)
-    dec, metric = head.decode(coded)
-    assert dec.shape == bits.shape  # nothing stripped for open trellises
+    bm = spec.branch_metrics(coded)
+    res = decode(spec, coded, backend="sequential")
+    assert res.info_bits.shape == bits.shape  # nothing stripped when open
     ref_bits, ref_metric = viterbi_decode(CODE_K3_STD, bm, terminated=False)
-    np.testing.assert_array_equal(np.asarray(dec), np.asarray(ref_bits))
-    np.testing.assert_allclose(np.asarray(metric), np.asarray(ref_metric), rtol=1e-6)
-    # terminated head on the same noiseless block: flush stripped, exact
-    term = _quiet_head(mode="sequential", terminated=True)
-    dec_t, _ = term.decode(term.encode_bits(bits))
-    assert dec_t.shape == bits.shape
-    np.testing.assert_array_equal(np.asarray(dec_t), np.asarray(bits))
+    np.testing.assert_array_equal(np.asarray(res.bits), np.asarray(ref_bits))
+    np.testing.assert_allclose(
+        np.asarray(res.path_metric), np.asarray(ref_metric), rtol=1e-6
+    )
+    # terminated spec on the same noiseless block: flush stripped, exact
+    term = CodecSpec(terminated=True)
+    res_t = decode(term, term.encode(bits), backend="sequential")
+    assert res_t.info_bits.shape == bits.shape
+    np.testing.assert_array_equal(np.asarray(res_t.info_bits), np.asarray(bits))

@@ -1,15 +1,24 @@
 """Golden BER regression: decode quality must not drift across kernel PRs.
 
-A seeded K=7 (NASA code) noise sweep is decoded by every hot-path backend
-and the resulting bit-error rates are pinned in ``tests/golden/ber_k7.json``.
-Any future kernel/scheduler change that silently degrades decode quality by
-more than 1e-3 absolute BER fails here — catching the class of bug where a
-kernel stays shape-correct but decodes the wrong path.
+Every entry in the CODECS registry pins a seeded noise sweep for one codec
+family into its own ``tests/golden/ber_<name>.json``:
+
+  k7     the K=7 NASA Viterbi code decoded by every hot-path backend over a
+         BSC flip sweep — catches kernels that stay shape-correct but decode
+         the wrong path.
+  turbo  the rate-1/3 LTE-constituent turbo code (K=4 RSC, N=512 QPP) vs the
+         equivalent-rate K=7 soft Viterbi baseline over an Eb/N0 sweep — the
+         SISO subsystem's acceptance gate: turbo must BEAT Viterbi at the
+         1.0 dB waterfall point, not merely not drift.
 
 Regenerate (only when a change is *supposed* to move BER, e.g. a new
 truncation policy) with:
 
-    PYTHONPATH=src python tests/test_golden_ber.py --regen
+    PYTHONPATH=src python tests/test_golden_ber.py --regen [name ...]
+
+No names = every registered codec.  Adding a codec = one registry entry
+(filename + payload function); the drift gate and the --regen CLI pick it
+up generically.
 """
 import json
 from pathlib import Path
@@ -17,84 +26,181 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import CODE_K7_NASA
-from repro.decode import CodecSpec, DecodeContext, get_decoder
+from repro.core.trellis import ConvCode
+from repro.decode import CodecSpec, DecodeContext, decode, get_decoder
+from repro.siso import QPPInterleaver, RSC_K4_LTE, TurboSpec, turbo_decode
 
-GOLDEN = Path(__file__).resolve().parent / "golden" / "ber_k7.json"
+GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
 TOLERANCE = 1e-3  # absolute BER drift that fails the gate
-
 SEED = 2026
-BATCH = 16
-INFO_BITS = 96
-FLIPS = (0.02, 0.06, 0.11)  # clean floor -> waterfall knee -> lossy region
+
+# ---------------------------- k7 Viterbi sweep ---------------------------- #
+
+K7_BATCH = 16
+K7_INFO_BITS = 96
+K7_FLIPS = (0.02, 0.06, 0.11)  # clean floor -> waterfall knee -> lossy region
 #: every decode path whose quality the file pins: the oracle, the (min,+)
 #: scan, the packed Pallas pipeline, and the truncated-window streamer.
-BACKENDS = ("sequential", "parallel", "fused_packed", "streaming")
+K7_BACKENDS = ("sequential", "parallel", "fused_packed", "streaming")
 
 
-def compute_ber_grid():
+def compute_k7_payload():
     """{flip: {backend: ber}} on the pinned seeded workload."""
     spec = CodecSpec(code=CODE_K7_NASA, metric="hard")
     key = jax.random.PRNGKey(SEED)
-    bits = jax.random.bernoulli(key, 0.5, (BATCH, INFO_BITS)).astype(jnp.int32)
+    bits = jax.random.bernoulli(key, 0.5, (K7_BATCH, K7_INFO_BITS)).astype(jnp.int32)
     coded = spec.encode(bits)
     truth = np.asarray(bits)
     grid = {}
-    for i, flip in enumerate(FLIPS):
+    for i, flip in enumerate(K7_FLIPS):
         rx = spec.channel(jax.random.fold_in(key, 100 + i), coded, flip_prob=flip)
         bm = spec.branch_metrics(rx)
         row = {}
-        for name in BACKENDS:
+        for name in K7_BACKENDS:
             res = get_decoder(name)(spec, bm, ctx=DecodeContext(chunk=16))
             row[name] = float((np.asarray(res.info_bits) != truth).mean())
         grid[f"{flip:g}"] = row
-    return grid
+    return {
+        "code": "k7_nasa",
+        "metric": "hard",
+        "seed": SEED,
+        "batch": K7_BATCH,
+        "info_bits": K7_INFO_BITS,
+        "tolerance": TOLERANCE,
+        "ber": grid,
+    }
 
 
-def test_golden_ber_no_drift():
-    assert GOLDEN.exists(), (
-        f"{GOLDEN} missing — regenerate with "
-        "PYTHONPATH=src python tests/test_golden_ber.py --regen"
+# ------------------------- turbo vs Viterbi sweep ------------------------- #
+
+TURBO_SPEC = TurboSpec(code=RSC_K4_LTE, interleaver=QPPInterleaver(512, 31, 64))
+TURBO_BASELINE = CodecSpec(
+    code=ConvCode(7, (0o133, 0o171, 0o165)), metric="soft", terminated=False
+)
+TURBO_RATE = 1.0 / 3.0
+TURBO_BATCH = 8
+TURBO_EBN0S = (0.5, 1.0, 1.5)
+#: the Eb/N0 point where the iterative gain must show: turbo strictly
+#: below the equivalent-rate one-shot Viterbi baseline.
+TURBO_GATE_EBN0 = 1.0
+
+
+def compute_turbo_payload():
+    """{ebn0: {"turbo": ber, "viterbi": ber}} — same info bits, same rate,
+    independent AWGN draws per codec (both channels carry 3 coded bits per
+    info bit at snr = ebn0 + 10*log10(1/3))."""
+    rng = np.random.default_rng(SEED)
+    bits = jnp.asarray(
+        rng.integers(0, 2, size=(TURBO_BATCH, TURBO_SPEC.block_len)), jnp.int32
     )
-    golden = json.loads(GOLDEN.read_text())
-    assert golden["code"] == "k7_nasa" and golden["seed"] == SEED
-    grid = compute_ber_grid()
-    for flip, row in golden["ber"].items():
-        for backend, want in row.items():
-            got = grid[flip][backend]
+    tcoded = TURBO_SPEC.encode(bits)
+    ccoded = TURBO_BASELINE.encode(bits)
+    grid = {}
+    for i, ebn0 in enumerate(TURBO_EBN0S):
+        snr_db = float(ebn0 + 10 * np.log10(TURBO_RATE))
+        k1, k2 = jax.random.split(jax.random.PRNGKey(SEED + i))
+        rx_t = TURBO_SPEC.channel(k1, tcoded, snr_db=snr_db)
+        res_t = turbo_decode(
+            TURBO_SPEC, TURBO_SPEC.channel_llrs(rx_t, snr_db=snr_db)
+        )
+        rx_c = TURBO_BASELINE.channel(k2, ccoded, snr_db=snr_db)
+        res_c = decode(TURBO_BASELINE, rx_c)
+        grid[f"{ebn0:g}"] = {
+            "turbo": float((res_t.bits != bits).mean()),
+            "viterbi": float((res_c.info_bits != bits).mean()),
+        }
+    return {
+        "code": "turbo_k4_qpp512 vs k7_soft",
+        "seed": SEED,
+        "batch": TURBO_BATCH,
+        "block_len": TURBO_SPEC.block_len,
+        "rate": TURBO_RATE,
+        "iterations": TURBO_SPEC.iterations,
+        "extrinsic_scale": TURBO_SPEC.extrinsic_scale,
+        "gate_ebn0_db": TURBO_GATE_EBN0,
+        "tolerance": TOLERANCE,
+        "ber": grid,
+    }
+
+
+# ------------------------------- registry -------------------------------- #
+
+#: name -> (golden filename, payload function).  --regen and the drift gate
+#: below iterate this; a new codec family is one entry here.
+CODECS = {
+    "k7": ("ber_k7.json", compute_k7_payload),
+    "turbo": ("ber_turbo.json", compute_turbo_payload),
+}
+
+
+def _golden_path(name: str) -> Path:
+    return GOLDEN_DIR / CODECS[name][0]
+
+
+def _load_golden(name: str) -> dict:
+    path = _golden_path(name)
+    assert path.exists(), (
+        f"{path} missing — regenerate with "
+        f"PYTHONPATH=src python tests/test_golden_ber.py --regen {name}"
+    )
+    return json.loads(path.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(CODECS))
+def test_golden_ber_no_drift(name):
+    golden = _load_golden(name)
+    assert golden["seed"] == SEED
+    grid = CODECS[name][1]()["ber"]
+    for point, row in golden["ber"].items():
+        for series, want in row.items():
+            got = grid[point][series]
             assert abs(got - want) <= TOLERANCE, (
-                f"BER drift for backend {backend!r} at flip={flip}: "
+                f"BER drift for {name}/{series} at {point}: "
                 f"golden {want:.6f} vs current {got:.6f} "
                 f"(|diff| > {TOLERANCE:g})"
             )
 
 
 def test_golden_covers_every_pinned_backend():
-    golden = json.loads(GOLDEN.read_text())
-    for flip in FLIPS:
-        assert set(golden["ber"][f"{flip:g}"]) == set(BACKENDS)
+    golden = _load_golden("k7")
+    for flip in K7_FLIPS:
+        assert set(golden["ber"][f"{flip:g}"]) == set(K7_BACKENDS)
 
 
-def _regen():
-    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
-    payload = {
-        "code": "k7_nasa",
-        "metric": "hard",
-        "seed": SEED,
-        "batch": BATCH,
-        "info_bits": INFO_BITS,
-        "tolerance": TOLERANCE,
-        "ber": compute_ber_grid(),
-    }
-    GOLDEN.write_text(json.dumps(payload, indent=1) + "\n")
-    print(f"wrote {GOLDEN}")
-    print(json.dumps(payload["ber"], indent=1))
+def test_golden_turbo_beats_viterbi_at_gate():
+    """The SISO acceptance gate: at the pinned 1.0 dB waterfall point the
+    6-iteration turbo decode must be strictly better than the
+    equivalent-rate soft Viterbi baseline — in the golden file AND in the
+    recomputed grid (a stale-but-passing golden file cannot hide a
+    regression)."""
+    golden = _load_golden("turbo")
+    point = f"{TURBO_GATE_EBN0:g}"
+    assert golden["ber"][point]["turbo"] < golden["ber"][point]["viterbi"]
+    grid = compute_turbo_payload()["ber"]
+    assert grid[point]["turbo"] < grid[point]["viterbi"], grid[point]
+
+
+def _regen(names):
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    for name in names:
+        path = _golden_path(name)
+        payload = CODECS[name][1]()
+        path.write_text(json.dumps(payload, indent=1) + "\n")
+        print(f"wrote {path}")
+        print(json.dumps(payload["ber"], indent=1))
 
 
 if __name__ == "__main__":
     import sys
 
-    if "--regen" not in sys.argv:
-        sys.exit("refusing to overwrite the golden file: pass --regen")
-    _regen()
+    argv = sys.argv[1:]
+    if "--regen" not in argv:
+        sys.exit("refusing to overwrite golden files: pass --regen [name ...]")
+    picked = [a for a in argv if a != "--regen"]
+    unknown = set(picked) - set(CODECS)
+    if unknown:
+        sys.exit(f"unknown codec(s) {sorted(unknown)}; have {sorted(CODECS)}")
+    _regen(picked or sorted(CODECS))

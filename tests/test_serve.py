@@ -1,13 +1,14 @@
-"""Serving engine + Viterbi head end-to-end."""
+"""Serving engine + decode-API transport end-to-end."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs.base import get_smoke_arch
+from repro.decode import CodecSpec, decode
 from repro.models.model_zoo import build
-from repro.serve.engine import ServeEngine
+from repro.serve import ServeEngine, bits_to_tokens, tokens_to_bits
 from repro.serve.kv_cache import SlotAllocator, cache_bytes, pick_bucket
-from repro.serve.viterbi_head import ViterbiHead, bits_to_tokens, tokens_to_bits
 
 
 def test_engine_generates(rng):
@@ -32,21 +33,23 @@ def test_engine_greedy_is_deterministic(rng):
     assert (a == b).all()
 
 
-@pytest.mark.parametrize("mode", ["fused", "sequential", "parallel"])
-def test_viterbi_head_roundtrip(mode, rng):
-    head = ViterbiHead(mode=mode)
+@pytest.mark.parametrize("backend", ["fused", "sequential", "parallel"])
+def test_decode_transport_roundtrip(backend, rng):
+    spec = CodecSpec()
     bits = jax.random.bernoulli(rng, 0.5, (8, 64)).astype(jnp.int32)
-    dec, ber, exact = head.roundtrip(jax.random.fold_in(rng, 1), bits,
-                                     flip_prob=0.01)
-    assert dec.shape == bits.shape
-    assert float(ber) < 0.05
+    rx = spec.channel(jax.random.fold_in(rng, 1), spec.encode(bits),
+                      flip_prob=0.01)
+    res = decode(spec, rx, backend=backend)
+    assert res.info_bits.shape == bits.shape
+    assert float((res.info_bits != bits).mean()) < 0.05
 
 
-def test_viterbi_head_soft_decoding(rng):
-    head = ViterbiHead(soft=True)
+def test_decode_transport_soft(rng):
+    spec = CodecSpec(metric="soft")
     bits = jax.random.bernoulli(rng, 0.5, (8, 64)).astype(jnp.int32)
-    dec, ber, _ = head.roundtrip(jax.random.fold_in(rng, 1), bits, snr_db=4.0)
-    assert float(ber) < 0.03
+    rx = spec.channel(jax.random.fold_in(rng, 1), spec.encode(bits), snr_db=4.0)
+    res = decode(spec, rx)
+    assert float((res.info_bits != bits).mean()) < 0.03
 
 
 def test_lm_to_viterbi_pipeline(rng):
@@ -59,10 +62,13 @@ def test_lm_to_viterbi_pipeline(rng):
                                  model.cfg.vocab)
     toks = engine.generate(prompts, 8)["tokens"]
     bits = tokens_to_bits(toks, bits_per_token=9)  # vocab 512
-    head = ViterbiHead()
-    dec, ber, exact = head.roundtrip(jax.random.fold_in(rng, 2), bits,
-                                     flip_prob=0.005)
-    assert exact or float(ber) < 0.01
+    spec = CodecSpec()
+    rx = spec.channel(jax.random.fold_in(rng, 2), spec.encode(bits),
+                      flip_prob=0.005)
+    res = decode(spec, rx)
+    dec = res.info_bits
+    exact = bool((dec == bits).all())
+    assert exact or float((np.asarray(dec) != np.asarray(bits)).mean()) < 0.01
     recovered = bits_to_tokens(dec, 9)
     if exact:
         assert (recovered == toks).all()

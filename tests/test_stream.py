@@ -13,7 +13,6 @@ from repro.core import (
     viterbi_decode,
 )
 from repro.kernels.ops import viterbi_forward_chunk_op, viterbi_forward_op
-from repro.serve.viterbi_head import ViterbiHead
 from repro.stream import (
     StreamScheduler,
     StreamSession,
@@ -585,16 +584,20 @@ def test_sharded_scheduler_validates_mesh(mesh11):
 
 
 # --------------------------------------------------------------------------- #
-# serving head integration                                                     #
+# decode-API streaming integration                                             #
 # --------------------------------------------------------------------------- #
 
 
-def test_viterbi_head_streaming_mode(rng):
-    head = ViterbiHead(mode="streaming", chunk=32)
+def test_decode_api_streaming_backend(rng):
+    from repro.decode import CodecSpec, DecodeContext, decode
+
+    spec = CodecSpec()
     bits = jax.random.bernoulli(rng, 0.5, (4, 94)).astype(jnp.int32)
-    dec, ber, exact = head.roundtrip(jax.random.fold_in(rng, 1), bits, flip_prob=0.01)
-    assert dec.shape == bits.shape
-    assert float(ber) < 0.05
+    rx = spec.channel(jax.random.fold_in(rng, 1), spec.encode(bits),
+                      flip_prob=0.01)
+    res = decode(spec, rx, backend="streaming", ctx=DecodeContext(chunk=32))
+    assert res.info_bits.shape == bits.shape
+    assert float((res.info_bits != bits).mean()) < 0.05
 
 
 # --------------------------------------------------------------------------- #

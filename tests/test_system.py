@@ -19,17 +19,16 @@ def test_paper_workload_end_to_end(rng):
     TPU-throughput batch."""
     from repro.configs.paper_viterbi import ARCH
     from repro.data.pipeline import ViterbiStream
-    from repro.serve.viterbi_head import ViterbiHead
+    from repro.decode import CodecSpec, get_decoder
+    from repro.decode.request import DecodeContext
 
-    head = ViterbiHead(mode="fused")
+    spec = CodecSpec(code=ARCH.code)
     for shape in ARCH.shapes[:5]:  # the paper's Fig. 3 sweep
         stream = ViterbiStream(ARCH.code, shape.n_info_bits, batch=8,
                                flip_prob=0.02)
         batch = stream(0)
-        bits, metric = head.decode_from_metrics(batch["bm_tables"])
-        K = ARCH.code.constraint
-        dec = bits[:, : bits.shape[1] - (K - 1)]
-        ber = float((dec != batch["info_bits"]).mean())
+        res = get_decoder("fused")(spec, batch["bm_tables"], ctx=DecodeContext())
+        ber = float((res.info_bits != batch["info_bits"]).mean())
         assert ber < 0.2, (shape.name, ber)
 
 
@@ -62,11 +61,12 @@ def test_dryrun_cell_subprocess():
     assert cell["memory_analysis"]["temp_size_in_bytes"] < 16 * 2 ** 30
 
 
-def test_seqparallel_head_on_mesh(mesh11, rng):
-    from repro.serve.viterbi_head import ViterbiHead
+def test_seqparallel_decode_on_mesh(mesh11, rng):
+    from repro.decode import CodecSpec, decode
 
-    head = ViterbiHead(mode="seqparallel", mesh=mesh11)
+    spec = CodecSpec()
     bits = jax.random.bernoulli(rng, 0.5, (4, 62)).astype(jnp.int32)
-    dec, ber, exact = head.roundtrip(jax.random.fold_in(rng, 1), bits,
-                                     flip_prob=0.01)
-    assert float(ber) < 0.05
+    rx = spec.channel(jax.random.fold_in(rng, 1), spec.encode(bits),
+                      flip_prob=0.01)
+    res = decode(spec, rx, backend="seqparallel", mesh=mesh11)
+    assert float((res.info_bits != bits).mean()) < 0.05
