@@ -5,7 +5,7 @@ All results merge into the ONE benchmark artifact,
 section and preserves the others, so any invocation order converges to the
 same file.  No mode writes a private side-car JSON.
 
-Four modes:
+Five modes:
 
 * default: drives the continuous-batching StreamScheduler with >= 64
   concurrent decode sessions multiplexed through ONE jitted chunked Pallas
@@ -48,12 +48,22 @@ Four modes:
   comparable to the whole tick on toy interpret-mode shapes), and merge an
   ``obs`` section into BENCH_viterbi.json (schema v4).
 
+* ``--chaos``: the resilience acceptance run — drain the workload under
+  seeded fault injection (~``--fault-rate`` producer faults per poll via
+  ``ChaosPolicy.producer_mix`` plus simulated device-step failures on the
+  tick), assert every stream either finishes bit-exact vs a fault-free
+  reference drain or is quarantined with a structured error and a metrics
+  trail, then measure snapshot/restore recovery latency mid-drain and
+  assert the restored drain is bit-exact.  Results land in
+  ``stream.resilience`` of BENCH_viterbi.json (schema v6).
+
   PYTHONPATH=src python benchmarks/stream_throughput.py [--sessions 64]
       [--steps 512] [--chunk 64] [--flip 0.02] [--backend fused]
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --shards 1
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --shards 8
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --online
   PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --telemetry
+  PYTHONPATH=src python benchmarks/stream_throughput.py --smoke --chaos
 
 Numbers from the CPU container are interpret-mode / host-platform proxies
 (shape + scheduling parity only); on a real TPU the same code runs the
@@ -504,6 +514,156 @@ def run_telemetry(args) -> None:
     log.info(f"merged obs section into {BENCH_JSON}")
 
 
+def run_chaos(args) -> None:
+    """Resilience acceptance run: drain the workload under seeded fault
+    injection (``ChaosPolicy.producer_mix`` producer faults + simulated
+    device-step failures), verify every stream is accounted for (finished
+    bit-exact or quarantined with a structured error), then measure
+    snapshot/restore recovery latency on a clean mid-drain scheduler.
+    Merges a ``stream.resilience`` section into BENCH_viterbi.json
+    (schema v6)."""
+    import pickle
+
+    from repro.stream import ChaosPolicy, ChaosProducer, install_tick_faults
+
+    spec = DECODE_SPEC
+    depth = STREAM.depth(spec.code)
+    sessions = args.sessions or (8 if args.smoke else 32)
+    steps = args.steps or (384 if args.smoke else 1024)
+    backend = args.backend or "scan"
+    chunk = args.chunk
+    seed = args.seed
+    rate = args.fault_rate
+    key = jax.random.PRNGKey(0)
+    info_bits = steps - spec.n_flush
+    _, bm = make_workload(spec, key, sessions, info_bits, args.flip)
+    bm = np.asarray(bm)
+
+    # fault-free reference drain: the bit-exactness oracle
+    _, _, ref, _ = run_scheduler(spec, bm, sessions, chunk, depth, backend)
+
+    # ---- chaotic drain: producer faults + injected device-step failures ----
+    sched = StreamScheduler(
+        spec, n_slots=sessions, chunk=chunk, depth=depth, backend=backend,
+        max_buffered=STREAM.max_buffered,
+    )
+    policy = ChaosPolicy.producer_mix(rate, seed=seed)
+    tick_injector = install_tick_faults(
+        sched, ChaosPolicy(seed=seed, device_step_failure=rate / 2)
+    )
+    def _chunked(table):
+        # bind the table now: a bare genexp in the loop would close over the
+        # loop variable and feed every stream the LAST table
+        return (table[j:j + chunk] for j in range(0, len(table), chunk))
+
+    producers = {}
+    for i in range(sessions):
+        sid = f"s{i}"
+        producers[sid] = ChaosProducer(
+            _chunked(bm[i]), policy, stream_id=sid,
+            metrics=sched.telemetry.metrics,
+        )
+        sched.open_stream(sid, producer=producers[sid],
+                          max_buffered=STREAM.max_buffered)
+
+    t0 = time.perf_counter()
+    guard = 0
+    while sched.pending_work():
+        sched.step()
+        guard += 1
+        assert guard < 200_000, "chaotic drain failed to converge"
+    elapsed = time.perf_counter() - t0
+
+    injected: dict = dict(tick_injector.injected)
+    for p in producers.values():
+        for cls, n in p.injected.items():
+            injected[cls] = injected.get(cls, 0) + n
+    quarantined = sorted(sched.errors)
+    survivors = [f"s{i}" for i in range(sessions) if f"s{i}" not in sched.errors]
+    # timing faults (stall, drip, dropped ticks) must never change the
+    # decode: every non-quarantined stream is bit-identical to the
+    # fault-free drain
+    for sid in survivors:
+        assert (sched.results[sid][0] == ref[sid][0]).all(), (
+            f"chaos changed the decode of surviving stream {sid}"
+        )
+    metrics = sched.metrics_text()
+    for cls, n in injected.items():
+        assert f"chaos_{cls}_total {n}" in metrics, (
+            f"injected {cls} not visible in metrics_text()"
+        )
+    bits_committed = sum(len(b) for b, _ in sched.results.values())
+
+    # ---- snapshot/restore recovery latency on a clean mid-drain state ----
+    snap_sched = StreamScheduler(
+        spec, n_slots=sessions, chunk=chunk, depth=depth, backend=backend,
+    )
+    for i in range(sessions):
+        snap_sched.submit(f"s{i}", bm[i])
+    snap_tick = max(1, (steps // chunk) // 2)
+    for _ in range(snap_tick):
+        snap_sched.step()
+    t0 = time.perf_counter()
+    blob = pickle.dumps(snap_sched.snapshot())
+    save_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    restored = StreamScheduler.restore(pickle.loads(blob))
+    restore_s = time.perf_counter() - t0
+    out = restored.run()
+    snap_exact = all(
+        (out[f"s{i}"][0] == ref[f"s{i}"][0]).all() for i in range(sessions)
+    )
+    assert snap_exact, "restore diverged from the uninterrupted drain"
+
+    row = {
+        "sessions": sessions,
+        "steps": steps,
+        "chunk": chunk,
+        "depth": depth,
+        "backend": backend,
+        "device": jax.devices()[0].platform,
+        "seed": seed,
+        "producer_fault_rate": rate,
+        "elapsed_s": elapsed,
+        "injected": injected,
+        "streams_finished": len(survivors),
+        "streams_quarantined": len(quarantined),
+        "quarantine_reasons": {
+            sid: sched.errors[sid].reason for sid in quarantined
+        },
+        "ticks": sched.stats.ticks,
+        "ticks_dropped": sched.stats.tick_device_failures,
+        "bits_committed": bits_committed,
+        "timing_faults_bit_exact": True,  # asserted above
+        "snapshot": {
+            "tick": snap_tick,
+            "streams": len(out),
+            "bytes": len(blob),
+            "save_s": save_s,
+            "restore_s": restore_s,
+            "bit_exact": bool(snap_exact),
+        },
+    }
+    n_inj = sum(injected.values())
+    log.info(f"chaos: {sessions} streams x {steps} steps (backend {backend}, "
+             f"fault rate {rate}, seed {seed})")
+    log.info(f"  {n_inj} faults injected {injected}; "
+             f"{len(survivors)} streams finished bit-exact, "
+             f"{len(quarantined)} quarantined "
+             f"({row['quarantine_reasons']}); "
+             f"{row['ticks_dropped']} ticks dropped and retried")
+    log.info(f"  {bits_committed} bits committed in {elapsed:.3f}s; snapshot "
+             f"at tick {snap_tick}: save {save_s * 1e3:.1f}ms / restore "
+             f"{restore_s * 1e3:.1f}ms ({len(blob)} bytes), restored drain "
+             f"bit-exact")
+
+    bench = _load_bench()
+    bench.setdefault("stream", {})["resilience"] = row
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    BENCH_JSON.write_text(json.dumps(bench, indent=1))
+    log.info(f"merged stream.resilience into {BENCH_JSON}")
+
+
 def run_backend_comparison(args) -> None:
     spec = DECODE_SPEC
     code = spec.code
@@ -591,7 +751,8 @@ def run_backend_comparison(args) -> None:
     }
     bench = _load_bench()
     stream = bench.setdefault("stream", {})
-    kept = {k: stream[k] for k in ("by_shards", "online") if k in stream}
+    kept = {k: stream[k] for k in ("by_shards", "online", "resilience")
+            if k in stream}
     stream.clear()
     stream.update(payload)
     stream.update(kept)
@@ -623,6 +784,14 @@ def main():
                          "overhead, phase-span coverage, Perfetto export")
     ap.add_argument("--repeats", type=int, default=3,
                     help="--telemetry timing repeats (min is reported)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="resilience acceptance mode: seeded fault-injection "
+                         "drain + snapshot/restore recovery latency")
+    ap.add_argument("--fault-rate", type=float, default=0.1,
+                    help="--chaos producer fault probability per poll "
+                         "(split across the producer_mix classes)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="--chaos injection seed (same seed, same faults)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI shapes for the scaling/online modes")
     ap.add_argument("--quiet", action="store_true",
@@ -630,7 +799,9 @@ def main():
                          "the JSON artifact is the output")
     args = ap.parse_args()
     get_logger("bench.stream", quiet=args.quiet)  # reconfigure module logger
-    if args.telemetry:
+    if args.chaos:
+        run_chaos(args)
+    elif args.telemetry:
         run_telemetry(args)
     elif args.online:
         run_online(args)

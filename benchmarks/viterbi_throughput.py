@@ -56,8 +56,11 @@ log = get_logger("bench.viterbi")
 #: on/off overhead, tick-phase span coverage, device-counter drain); v5 adds
 #: the optional top-level ``turbo`` SISO section (siso_throughput.py: a BER
 #: point vs the equivalent-rate Viterbi baseline + decoded bits/s per
-#: iteration count).
-BENCH_SCHEMA = "bench_viterbi/v5"
+#: iteration count); v6 adds the optional ``stream.resilience`` section
+#: (stream_throughput.py --chaos: seeded fault-injection drain — injected
+#: fault counts by class, survival accounting, snapshot/restore recovery
+#: latency, bit-exactness flags).
+BENCH_SCHEMA = "bench_viterbi/v6"
 DEFAULT_OUT = Path(__file__).resolve().parent / "results" / "BENCH_viterbi.json"
 
 
@@ -269,6 +272,38 @@ def check_schema(payload: Dict) -> None:
         # R+1 is the sentinel for "never merged"
         window = obs["depth"] + obs["chunk"]
         assert 1 <= md["p50"] <= md["max"] <= window + 1
+    # optional resilience / fault-injection section (--chaos): v6
+    res = (payload.get("stream") or {}).get("resilience")
+    if res is not None:
+        for field in ("sessions", "steps", "chunk", "depth", "backend", "seed",
+                      "producer_fault_rate", "injected", "streams_finished",
+                      "streams_quarantined", "ticks_dropped", "snapshot",
+                      "bits_committed", "timing_faults_bit_exact"):
+            assert field in res, f"stream.resilience missing {field}"
+        inj = res["injected"]
+        assert inj and all(int(v) >= 0 for v in inj.values()), inj
+        # the drain must actually have been chaotic: at least one injected
+        # fault, and every stream accounted for — finished or quarantined,
+        # none lost
+        assert sum(int(v) for v in inj.values()) > 0
+        assert (res["streams_finished"] + res["streams_quarantined"]
+                == res["sessions"])
+        # only fatal fault classes may quarantine; timing faults never do
+        fatal = (inj.get("producer_exception", 0) + inj.get("corrupt_nan", 0)
+                 + inj.get("corrupt_inf", 0) + inj.get("corrupt_shape", 0))
+        assert res["streams_quarantined"] <= res["sessions"]
+        if fatal == 0:
+            assert res["streams_quarantined"] == 0
+        # dropped ticks are exactly the injected device-step failures
+        assert res["ticks_dropped"] == inj.get("device_step_failure", 0)
+        assert res["timing_faults_bit_exact"] is True
+        assert res["bits_committed"] > 0
+        snap = res["snapshot"]
+        for field in ("tick", "streams", "save_s", "restore_s", "bit_exact"):
+            assert field in snap, f"stream.resilience.snapshot missing {field}"
+        assert snap["bit_exact"] is True
+        assert snap["save_s"] >= 0 and snap["restore_s"] >= 0
+        assert 0 < snap["streams"] <= res["sessions"]
     # optional SISO turbo section (siso_throughput.py): v5
     turbo = payload.get("turbo")
     if turbo is not None:

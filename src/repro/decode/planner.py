@@ -29,6 +29,7 @@ import dataclasses
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 
 from repro.core.trellis import ConvCode
 from repro.decode import backends as _backends  # noqa: F401  (populates the registry)
@@ -124,6 +125,17 @@ class DecodePlan:
             and request.received is not None
             and self.decoder.from_received is not None
         ):
+            received = np.asarray(request.received)
+            if not np.isfinite(received).all():
+                # the in-kernel metric path skips every host-side table
+                # build where bad values would otherwise surface — guard
+                # here, or a single NaN symbol poisons the whole decode
+                bad = int(np.count_nonzero(~np.isfinite(received)))
+                raise ValueError(
+                    f"non-finite input: {bad} NaN/Inf value(s) in received "
+                    f"symbols {received.shape} — in-kernel branch metrics "
+                    "would silently corrupt the path metrics"
+                )
             result = self.decoder.decode_received(
                 self.spec, request.received, ctx=self.ctx
             )

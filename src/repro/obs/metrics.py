@@ -52,6 +52,10 @@ LATENCY_BUCKETS_S: Tuple[float, ...] = tuple(0.001 * 2 ** i for i in range(20))
 DEPTH_BUCKETS: Tuple[float, ...] = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64, 96,
                                     128, 192, 256, 384, 512)
 
+#: Tick wall-time buckets (seconds): 100 µs .. ~1.6 s, doubling — the input
+#: resolution the StragglerDetector's z-score flags against.
+TICK_BUCKETS: Tuple[float, ...] = tuple(0.0001 * 2 ** i for i in range(15))
+
 
 @dataclasses.dataclass
 class Counter:

@@ -1,12 +1,25 @@
 """Streaming Viterbi subsystem: online decode for unbounded bitstreams.
 
-window.py    — truncated-traceback sliding-window core (jittable)
-session.py   — stateful per-stream sessions, O(depth + chunk) memory
-scheduler.py — continuous batching of many streams into one jitted call,
-               chunk-fed with per-stream backpressure
-ingest.py    — ChunkProducer adapters (generator / callable / push-fed) and
-               the StreamBusy backpressure signal
+window.py     — truncated-traceback sliding-window core (jittable)
+session.py    — stateful per-stream sessions, O(depth + chunk) memory
+scheduler.py  — continuous batching of many streams into one jitted call,
+                chunk-fed with per-stream backpressure
+ingest.py     — ChunkProducer adapters (generator / callable / push-fed) and
+                the StreamBusy backpressure signal
+resilience.py — crash-consistent snapshot/restore (drain/migrate primitive)
+                + the StreamError / TickFault degradation types
+chaos.py      — deterministic seeded fault injection harness
 """
+from repro.stream.chaos import (
+    FAULT_CLASSES,
+    ChaosClock,
+    ChaosPolicy,
+    ChaosProducer,
+    ChaosProducerError,
+    FaultInjector,
+    InjectedDeviceFault,
+    install_tick_faults,
+)
 from repro.stream.ingest import (
     CallableProducer,
     ChunkProducer,
@@ -15,6 +28,12 @@ from repro.stream.ingest import (
     RateLimitedProducer,
     StreamBusy,
     as_producer,
+)
+from repro.stream.resilience import (
+    SNAPSHOT_VERSION,
+    StreamError,
+    StreamSnapshot,
+    TickFault,
 )
 from repro.stream.scheduler import SchedulerStats, StreamScheduler
 from repro.stream.session import StreamSession
@@ -38,6 +57,18 @@ __all__ = [
     "StreamScheduler",
     "SchedulerStats",
     "StreamBusy",
+    "StreamError",
+    "StreamSnapshot",
+    "SNAPSHOT_VERSION",
+    "TickFault",
+    "FAULT_CLASSES",
+    "ChaosClock",
+    "ChaosPolicy",
+    "ChaosProducer",
+    "ChaosProducerError",
+    "FaultInjector",
+    "InjectedDeviceFault",
+    "install_tick_faults",
     "ChunkProducer",
     "GeneratorProducer",
     "CallableProducer",

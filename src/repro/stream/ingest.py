@@ -48,15 +48,26 @@ class StreamBusy(RuntimeError):
       stream_id: the stream whose queue is full.
       credit: rows the queue can still take right now (retry with a chunk of
         at most this many rows, or wait for ticks to drain the queue).
+      retry_after_ticks: scheduler's drain-rate estimate of how many ticks
+        until the queue can take this chunk — back off this many ticks
+        instead of hot-spinning (see RateLimitedProducer.pump).
     """
 
-    def __init__(self, stream_id: str, credit: int, offered: int):
+    def __init__(
+        self,
+        stream_id: str,
+        credit: int,
+        offered: int,
+        retry_after_ticks: int = 1,
+    ):
         self.stream_id = stream_id
         self.credit = credit
         self.offered = offered
+        self.retry_after_ticks = retry_after_ticks
         super().__init__(
             f"stream {stream_id!r} queue full: offered {offered} rows, "
-            f"credit {credit} — wait for ticks to drain or send <= credit rows"
+            f"credit {credit} — retry in ~{retry_after_ticks} tick(s) or "
+            "send <= credit rows"
         )
 
 
@@ -267,6 +278,13 @@ class RateLimitedProducer:
         #: (end_row_exclusive, arrival_time) per released chunk — the
         #: latency bookkeeping the benchmark reads.
         self.arrivals: List[tuple] = []
+        # push-side (pump) state: rows a StreamBusy refused, ticks left to
+        # back off, and the convergence counters tests/benches assert on
+        self._hold: Optional[np.ndarray] = None
+        self._backoff = 0
+        self._closed_sent = False
+        self.busy_events = 0  # StreamBusy raised against this producer
+        self.skipped_pumps = 0  # pump calls skipped while backing off
 
     def poll(self, max_rows: int) -> Optional[np.ndarray]:
         if max_rows <= 0 or self._served >= self._table.shape[0]:
@@ -285,6 +303,51 @@ class RateLimitedProducer:
     @property
     def exhausted(self) -> bool:
         return self._served >= self._table.shape[0]
+
+    def pump(self, sched, stream_id: str, *, close: bool = True) -> int:
+        """Push-side driver honoring ``StreamBusy.retry_after_ticks``.
+
+        Call once per scheduler tick from the serving loop (instead of
+        attaching the producer for pull-side polling): releases whatever the
+        rate limit has made available and submits it with ``submit_chunk``.
+        On StreamBusy the refused rows are held and the next
+        ``retry_after_ticks`` pump calls are skipped entirely — the backoff
+        loop converges to the drain rate instead of hot-spinning one
+        rejected submit per tick (``busy_events`` / ``skipped_pumps`` count
+        both sides, so tests can assert convergence).  Returns the rows
+        accepted this call; closes the stream at EOF when ``close``.
+        """
+        if self._backoff > 0:
+            self._backoff -= 1
+            self.skipped_pumps += 1
+            return 0
+        rows = self._hold
+        self._hold = None
+        if rows is None:
+            rows = self.poll(self._table.shape[0])
+        accepted = 0
+        if rows is not None and rows.shape[0]:
+            try:
+                sched.submit_chunk(stream_id, rows)
+                accepted = rows.shape[0]
+            except StreamBusy as e:
+                self.busy_events += 1
+                if e.credit > 0:
+                    # partial acceptance: fill the remaining credit now
+                    # (guaranteed to fit) and hold only the overflow
+                    sched.submit_chunk(stream_id, rows[: e.credit])
+                    accepted = e.credit
+                self._hold = rows[accepted:]
+                self._backoff = max(1, int(e.retry_after_ticks))
+        if (
+            close
+            and not self._closed_sent
+            and self.exhausted
+            and self._hold is None
+        ):
+            sched.close(stream_id)
+            self._closed_sent = True
+        return accepted
 
 
 def as_producer(source) -> ChunkProducer:

@@ -78,11 +78,13 @@ from repro.core.viterbi import _initial_pm
 from repro.decode.spec import CodecSpec
 from repro.kernels.common import resolve_interpret
 from repro.obs import Telemetry
-from repro.obs.metrics import DEPTH_BUCKETS, LATENCY_BUCKETS_S
+from repro.obs.metrics import DEPTH_BUCKETS, LATENCY_BUCKETS_S, TICK_BUCKETS
 from repro.obs.trace import span
 from repro.serve.kv_cache import SlotAllocator
 from repro.stream import window as _w
 from repro.stream.ingest import ChunkProducer, StreamBusy, as_producer
+from repro.stream.resilience import StreamError, TickFault
+from repro.train.fault_tolerance import StragglerDetector
 
 #: Tick-phase span names, in order, as they nest under the "tick" parent —
 #: the children list Tracer.coverage() checks the tick against.
@@ -102,6 +104,9 @@ class _Stream:
     closed: bool = False  # no more input will arrive (close() / EOF)
     slot: Optional[int] = None  # decode slot while admitted
     shard: int = 0  # mesh shard hosting the stream's slot (0 unsharded)
+    priority: int = 0  # overload shedding victimizes the lowest first
+    deadline_tick: Optional[int] = None  # evict_expired() retires past this
+    seq: int = 0  # admission sequence (shed tie-break: newest loses)
     fed: int = 0  # rows accepted into the device arena
     pos: int = 0  # steps consumed by the kernel
     committed: int = 0  # bits already emitted
@@ -141,6 +146,12 @@ class SchedulerStats:
     chunks_submitted: int = 0  # submit_chunk / producer deliveries accepted
     busy_rejections: int = 0  # StreamBusy raised by submit_chunk
     starved_slot_ticks: int = 0  # slot-ticks spent admitted-but-starved
+    poisoned_rejections: int = 0  # chunks rejected for non-finite values
+    streams_quarantined: int = 0  # streams failed by poison / producer crash
+    streams_expired: int = 0  # streams retired by evict_expired (TTL)
+    streams_shed: int = 0  # streams dropped by the overload policy
+    tick_device_failures: int = 0  # step-phase TickFaults absorbed (retried)
+    straggler_ticks: int = 0  # tick wall times flagged by StragglerDetector
 
     def asdict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -199,6 +210,7 @@ class StreamScheduler:
         interpret: Optional[bool] = None,
         inputs: str = "bm",
         max_buffered: Optional[int] = None,
+        max_pending: Optional[int] = None,
         mesh: Optional[object] = None,
         mesh_axis: str = "data",
         telemetry: Optional[Telemetry] = None,
@@ -210,7 +222,11 @@ class StreamScheduler:
         self.chunk = chunk
         self.depth = _w.default_depth(code) if depth is None else depth
         self.backend = backend
+        self.normalize = normalize
         self.inputs = inputs
+        if max_pending is not None and max_pending < 0:
+            raise ValueError(f"max_pending must be >= 0, got {max_pending}")
+        self.max_pending = max_pending
         self.max_buffered = 8 * chunk if max_buffered is None else int(max_buffered)
         if self.max_buffered < chunk:
             # rows only leave the queue in full-chunk ticks: a bound below
@@ -250,7 +266,15 @@ class StreamScheduler:
         self.pending: Deque[_Stream] = deque()
         self._by_id: Dict[str, _Stream] = {}  # every OPEN stream, by id
         self.results: Dict[str, Tuple[np.ndarray, float]] = {}
+        self.errors: Dict[str, StreamError] = {}  # early-terminated streams
         self.stats = SchedulerStats()
+        self._seq = 0  # admission sequence counter (shed tie-break)
+        #: straggler detection over per-tick wall time (only ticks that
+        #: dispatched real work — idle ticks would poison the EMA).
+        self.straggler = StragglerDetector()
+        #: test/chaos seam: called with the tick number at the top of the
+        #: step phase; a raised TickFault drops the tick (state untouched).
+        self.tick_fault_hook = None
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self._tracer = self.telemetry.tracer
         self._latency_hist = self.telemetry.metrics.histogram(
@@ -262,6 +286,39 @@ class StreamScheduler:
             "stream_merge_depth",
             buckets=DEPTH_BUCKETS,
             help="survivor merge depth of retiring streams (trellis steps)",
+        )
+        self._tick_hist = self.telemetry.metrics.histogram(
+            "stream_tick_seconds",
+            buckets=TICK_BUCKETS,
+            help="wall time of scheduler ticks that dispatched work",
+        )
+        self._retry_hist = self.telemetry.metrics.histogram(
+            "stream_busy_retry_ticks",
+            buckets=DEPTH_BUCKETS,
+            help="retry_after_ticks hints handed out with StreamBusy",
+        )
+        m = self.telemetry.metrics
+        self._straggler_ctr = m.counter(
+            "stream_tick_straggler_total",
+            help="ticks whose wall time the StragglerDetector flagged",
+        )
+        self._quarantine_ctr = m.counter(
+            "stream_quarantined_total",
+            help="streams quarantined (poisoned chunk / producer error)",
+        )
+        self._expired_ctr = m.counter(
+            "stream_expired_total", help="streams retired by TTL deadline"
+        )
+        self._shed_ctr = m.counter(
+            "stream_shed_total", help="streams dropped by the overload policy"
+        )
+        self._device_failure_ctr = m.counter(
+            "stream_tick_device_failures_total",
+            help="tick device-step failures absorbed (tick dropped + retried)",
+        )
+        self._poison_ctr = m.counter(
+            "stream_poisoned_chunks_total",
+            help="chunks rejected for non-finite values or bad shape",
         )
         self._counters = (
             _w.init_device_counters(n_slots)
@@ -322,6 +379,8 @@ class StreamScheduler:
         terminated: Optional[bool] = None,
         producer=None,
         max_buffered: Optional[int] = None,
+        priority: int = 0,
+        ttl_ticks: Optional[int] = None,
     ) -> None:
         """Register a stream for chunk-fed decode.  It queues for a slot
         immediately (FIFO) and may sit admitted-but-starved until rows
@@ -334,6 +393,13 @@ class StreamScheduler:
             arrays, or a poll callable (see stream/ingest.py).  When it
             reports ``exhausted`` the stream is closed automatically.
           max_buffered: per-stream override of the input-queue bound.
+          priority: overload-shedding rank — when ``max_pending`` is
+            exceeded the LOWEST priority open stream is shed first (newest
+            among equals; see ``errors`` for the structured record).
+          ttl_ticks: optional deadline, in scheduler ticks from now; once it
+            passes, ``evict_expired()`` (run at the top of every tick)
+            retires the stream with a partial-result flush and an "expired"
+            StreamError.
         """
         if terminated is None:
             terminated = self.spec.terminated
@@ -346,16 +412,25 @@ class StreamScheduler:
                 "smaller bound can never buffer a full decode chunk, so the "
                 "stream would starve forever"
             )
+        if ttl_ticks is not None and ttl_ticks <= 0:
+            raise ValueError(f"ttl_ticks must be > 0, got {ttl_ticks}")
         st = _Stream(
             stream_id=stream_id,
             terminated=bool(terminated),
             max_buffered=bound,
             producer=as_producer(producer) if producer is not None else None,
+            priority=int(priority),
+            deadline_tick=(
+                None if ttl_ticks is None else self.stats.ticks + int(ttl_ticks)
+            ),
+            seq=self._seq,
         )
+        self._seq += 1
         self._by_id[stream_id] = st
         self.pending.append(st)
         self.stats.streams_submitted += 1
         self._admit()
+        self._shed_overload()
 
     def submit_chunk(self, stream_id: str, rows, *, close: bool = False) -> int:
         """Feed ``rows`` ((t, M) bm rows or (t, n_out) received symbols per
@@ -376,13 +451,31 @@ class StreamScheduler:
             credit = st.max_buffered - st.buffered
             if n > credit:
                 self.stats.busy_rejections += 1
-                raise StreamBusy(stream_id, max(0, credit), n)
+                # hint horizon: ticks until the queue can take this chunk —
+                # capped at the queue bound, since a chunk larger than
+                # max_buffered must be split and can never fit whole
+                retry = self._retry_after_ticks(
+                    st, min(n, st.max_buffered) - max(0, credit)
+                )
+                self._retry_hist.observe(retry)
+                raise StreamBusy(
+                    stream_id, max(0, credit), n, retry_after_ticks=retry
+                )
             self._accept_rows(st, rows)
             self.stats.chunks_submitted += 1
         if close:
             st.closed = True
         self._admit()
         return max(0, st.max_buffered - st.buffered)
+
+    def attach_producer(self, stream_id: str, producer) -> None:
+        """Attach (or replace) a chunk source on an open stream — the
+        re-attach half of snapshot/restore, since producers are deliberately
+        not serialized (see stream/resilience.py)."""
+        st = self._open(stream_id)
+        if st.closed:
+            raise RuntimeError(f"stream {stream_id!r} is closed")
+        st.producer = as_producer(producer)
 
     def close(self, stream_id: str) -> None:
         """Mark EOF: no more chunks will arrive.  The stream retires once its
@@ -412,10 +505,13 @@ class StreamScheduler:
 
     def evict(self, stream_id: str) -> Optional[np.ndarray]:
         """Cancel a stream.  Returns the bits committed so far (or None if it
-        was still awaiting a slot); the slot is recycled immediately."""
+        was still awaiting a slot); the slot is recycled immediately.  Any
+        attached producer is detached (its undelivered rows — pending credit
+        included — are simply never polled again)."""
         st = self._by_id.pop(stream_id, None)
         if st is None:
             raise KeyError(stream_id)
+        st.producer = None
         if st.slot is None:
             self.pending.remove(st)
             return None
@@ -425,6 +521,30 @@ class StreamScheduler:
         st.slot = None
         self._admit()
         return partial
+
+    def evict_expired(self) -> List[str]:
+        """Retire every open stream whose TTL deadline has passed: partial
+        result flushed into ``results``, an "expired" StreamError recorded in
+        ``errors``, slot recycled.  Runs at the top of every tick; callable
+        directly too.  Returns the expired stream ids."""
+        now_tick = self.stats.ticks
+        expired = [
+            st for st in list(self._by_id.values())
+            if st.deadline_tick is not None and now_tick >= st.deadline_tick
+        ]
+        for st in expired:
+            self._retire_early(
+                st, "expired",
+                f"deadline tick {st.deadline_tick} passed at tick {now_tick}",
+            )
+            self.stats.streams_expired += 1
+            self._expired_ctr.inc()
+        return [st.stream_id for st in expired]
+
+    def pop_error(self, stream_id: str) -> StreamError:
+        """Structured record of an early-terminated stream (+ drop), the
+        error-side sibling of ``pop_result``."""
+        return self.errors.pop(stream_id)
 
     # ------------------------------ ticking ------------------------------ #
 
@@ -440,12 +560,27 @@ class StreamScheduler:
         When a tracer is attached the tick records a parent ``tick`` span
         with the TICK_PHASES children; disabled tracing costs one ``is
         None`` check per phase (see obs.trace.span)."""
+        t0 = time.monotonic()
+        ticks_before = self.stats.ticks
         with span(self._tracer, "tick"):
-            return self._step_traced()
+            out = self._step_traced()
+        # straggler detection: only ticks that dispatched real device work
+        # feed the EMA — idle/starved ticks are microseconds and would make
+        # every working tick look like an outlier.
+        if self.stats.ticks > ticks_before:
+            self._observe_tick_time(time.monotonic() - t0)
+        return out
+
+    def _observe_tick_time(self, dt: float) -> None:
+        self._tick_hist.observe(dt)
+        if self.straggler.observe(self.stats.ticks, dt):
+            self.stats.straggler_ticks += 1
+            self._straggler_ctr.inc()
 
     def _step_traced(self) -> Dict[str, np.ndarray]:
         tr = self._tracer
         with span(tr, "ingest"):
+            self.evict_expired()
             self._poll_producers()
         # 1. retire closed streams that cannot fill a full chunk (tail +
         #    flush run batched over all slots retiring this tick — off the
@@ -487,27 +622,38 @@ class StreamScheduler:
         #    The span measures dispatch, not device time: the only forced
         #    sync stays the bits transfer in the commit phase.
         with span(tr, "step"):
-            if self._sharded_step is not None:
-                if self._counters is not None:
-                    self.state, bits, delta, self._counters = self._sharded_step(
-                        self._arena, idx_j, mask_j, self.state, self._counters
-                    )
+            try:
+                if self.tick_fault_hook is not None:
+                    # chaos/test seam: a raised TickFault simulates a
+                    # transient device-step failure BEFORE any carried state
+                    # is reassigned — the tick drops, the next one retries
+                    # the identical gather, the decode is unchanged.
+                    self.tick_fault_hook(self.stats.ticks)
+                if self._sharded_step is not None:
+                    if self._counters is not None:
+                        self.state, bits, delta, self._counters = self._sharded_step(
+                            self._arena, idx_j, mask_j, self.state, self._counters
+                        )
+                    else:
+                        self.state, bits, delta = self._sharded_step(
+                            self._arena, idx_j, mask_j, self.state
+                        )
                 else:
-                    self.state, bits, delta = self._sharded_step(
-                        self._arena, idx_j, mask_j, self.state
-                    )
-            else:
-                block = self._gather(self._arena, idx_j)  # (n_slots, chunk, ·)
-                weights = self._weights if self.packed else None
-                if self._counters is not None:
-                    self.state, bits, delta, self._counters = self._step_fn(
-                        self.state, block, weights, mask_j,
-                        counters=self._counters,
-                    )
-                else:
-                    self.state, bits, delta = self._step_fn(
-                        self.state, block, weights, mask_j
-                    )
+                    block = self._gather(self._arena, idx_j)  # (n_slots, chunk, ·)
+                    weights = self._weights if self.packed else None
+                    if self._counters is not None:
+                        self.state, bits, delta, self._counters = self._step_fn(
+                            self.state, block, weights, mask_j,
+                            counters=self._counters,
+                        )
+                    else:
+                        self.state, bits, delta = self._step_fn(
+                            self.state, block, weights, mask_j
+                        )
+            except TickFault:
+                self.stats.tick_device_failures += 1
+                self._device_failure_ctr.inc()
+                return {}
             self.offset = self.offset + delta
 
         # 4. the tick's ONE host sync, then distribute newly-final bits.
@@ -691,6 +837,39 @@ class StreamScheduler:
         self.metrics_snapshot()
         return self.telemetry.metrics.render()
 
+    # --------------------------- snapshot/restore --------------------------- #
+
+    def snapshot(self):
+        """Freeze the full serving state — slot table, device arena rows,
+        path metrics, survivor ring, renorm offsets, DeviceCounters,
+        per-stream queues/credits, stats/results/errors — into a versioned
+        on-host :class:`~repro.stream.resilience.StreamSnapshot`.  The
+        scheduler is untouched and keeps serving.  Call between ticks (every
+        call site is one: the API is host-driven)."""
+        from repro.stream.resilience import snapshot_scheduler
+
+        return snapshot_scheduler(self)
+
+    @classmethod
+    def restore(
+        cls,
+        snap,
+        *,
+        mesh: Optional[object] = None,
+        mesh_axis: str = "data",
+        telemetry: Optional[Telemetry] = None,
+        interpret: Optional[bool] = None,
+    ) -> "StreamScheduler":
+        """Resume a snapshot on a fresh scheduler — same or different mesh
+        shape — with committed output bit-exact vs the uninterrupted run.
+        Producers are not restored; re-attach with ``attach_producer``."""
+        from repro.stream.resilience import restore_scheduler
+
+        return restore_scheduler(
+            snap, mesh=mesh, mesh_axis=mesh_axis,
+            telemetry=telemetry, interpret=interpret,
+        )
+
     # ------------------------------ internals ------------------------------ #
 
     def _shard_of(self, slot: int) -> int:
@@ -713,6 +892,18 @@ class StreamScheduler:
             raise ValueError(
                 f"{self.inputs!r} streams take {kind} shaped (t, {expected}), "
                 f"got {rows.shape}"
+            )
+        if rows.size and not np.isfinite(rows).all():
+            # a single NaN/Inf symbol would corrupt path metrics for EVERY
+            # stream in the batch tick (renormalization subtracts a max over
+            # the slot axis) — reject at the boundary, poison nothing.
+            bad = int(np.count_nonzero(~np.isfinite(rows)))
+            self.stats.poisoned_rejections += 1
+            self._poison_ctr.inc()
+            raise ValueError(
+                f"non-finite input: {bad} NaN/Inf value(s) in a {rows.shape} "
+                "chunk — non-finite symbols corrupt path metrics for the "
+                "whole batch tick"
             )
 
     def _accept_rows(self, st: _Stream, rows: np.ndarray) -> None:
@@ -750,26 +941,109 @@ class StreamScheduler:
 
     def _poll_producers(self) -> None:
         """Pull from attached producers into each stream's queue, never past
-        its credit — the scheduler-side half of the backpressure contract."""
+        its credit — the scheduler-side half of the backpressure contract.
+
+        One stream's fault never fails the tick: a poisoned chunk (bad
+        values/shape) or a raised producer exception quarantines THAT stream
+        — partial result flushed, structured StreamError recorded — and the
+        loop moves on to the next producer."""
         for st in list(self.active.values()) + list(self.pending):
             if st.producer is None or st.closed:
                 continue
-            credit = st.max_buffered - st.buffered
-            if credit > 0:
-                got = st.producer.poll(credit)
-                if got is not None:
-                    got = np.asarray(got, dtype=np.float32)
-                    if got.shape[0]:
-                        self._check_rows(got)
-                        if got.shape[0] > credit:
-                            raise ValueError(
-                                f"producer for {st.stream_id!r} returned "
-                                f"{got.shape[0]} rows against credit {credit}"
-                            )
-                        self._accept_rows(st, got)
-                        self.stats.chunks_submitted += 1
-            if st.producer.exhausted:
-                st.closed = True
+            try:
+                credit = st.max_buffered - st.buffered
+                if credit > 0:
+                    got = st.producer.poll(credit)
+                    if got is not None:
+                        got = np.asarray(got, dtype=np.float32)
+                        if got.shape[0]:
+                            self._check_rows(got)
+                            if got.shape[0] > credit:
+                                raise ValueError(
+                                    f"producer for {st.stream_id!r} returned "
+                                    f"{got.shape[0]} rows against credit {credit}"
+                                )
+                            self._accept_rows(st, got)
+                            self.stats.chunks_submitted += 1
+                if st.producer.exhausted:
+                    st.closed = True
+            except ValueError as e:
+                self._quarantine(st, "poisoned_chunk", repr(e))
+            except Exception as e:  # noqa: BLE001 — producer code is untrusted
+                self._quarantine(st, "producer_error", repr(e))
+
+    # --------------------- graceful degradation --------------------- #
+
+    def _quarantine(self, st: _Stream, reason: str, detail: str) -> None:
+        self._retire_early(st, reason, detail)
+        self.stats.streams_quarantined += 1
+        self._quarantine_ctr.inc()
+
+    def _retire_early(self, st: _Stream, reason: str, detail: str) -> None:
+        """Fail ONE stream without failing the tick: flush the partial
+        result it already DECODED (committed prefix + the traceback window),
+        recycle the slot, and record a structured StreamError in ``errors``.
+        Buffered-but-undecoded input is dropped — a failing stream's salvage
+        is its decoded prefix, and a multi-hundred-row backlog cannot pass
+        through the flush tail-feed (the survivor ring only spans
+        depth + chunk steps)."""
+        st.producer = None
+        st.closed = True
+        st.queued, st.queued_rows = [], 0
+        st.rows = st.rows[:0]
+        st.fed = st.pos
+        # an early cut is a truncation: the encoder never flushed to state 0
+        # at the cut point, so the final traceback must start from the best
+        # state, not the terminated=True state-0 path
+        st.terminated = False
+        if st.slot is not None:
+            self._finish_slots([st.slot])
+        else:
+            self.pending.remove(st)
+            del self._by_id[st.stream_id]
+        result = self.results.get(st.stream_id)
+        self.errors[st.stream_id] = StreamError(
+            stream_id=st.stream_id,
+            reason=reason,
+            detail=detail,
+            tick=self.stats.ticks,
+            committed_bits=0 if result is None else int(result[0].shape[0]),
+        )
+        self._admit()
+
+    def _shed_overload(self) -> None:
+        """Overload policy: when the pending queue outgrows ``max_pending``,
+        shed the globally lowest-priority open stream (pending preferred over
+        active among equals, newest last-in first) with a partial-result
+        flush — admission never stalls, and the victim is recorded in
+        ``errors`` rather than silently dropped."""
+        if self.max_pending is None:
+            return
+        while len(self.pending) > self.max_pending:
+            victim = min(
+                self._by_id.values(),
+                key=lambda s: (s.priority, 0 if s.slot is None else 1, -s.seq),
+            )
+            self._retire_early(
+                victim, "shed",
+                f"overload: {len(self.pending)} pending > max_pending "
+                f"{self.max_pending}; priority {victim.priority} shed",
+            )
+            self.stats.streams_shed += 1
+            self._shed_ctr.inc()
+
+    def _retry_after_ticks(self, st: _Stream, deficit: int) -> int:
+        """Backoff hint handed out with StreamBusy: admitted streams drain
+        one chunk per tick, so the deficit converts directly; a pending
+        stream first waits out its FIFO position (approximated as one tick
+        per admission ahead of it)."""
+        ticks = max(1, -(-int(deficit) // self.chunk))
+        if st.slot is None:
+            try:
+                ticks += self.pending.index(st) + 1
+            except ValueError:
+                ticks += 1
+        return ticks
 
     def _pin_arena(self) -> None:
         """Re-assert the per-shard arena placement after an eager mutation

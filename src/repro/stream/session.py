@@ -82,9 +82,15 @@ class StreamSession:
         mesh: Optional[object] = None,
         mesh_axis: str = "data",
         telemetry: Optional[Telemetry] = None,
+        validate: bool = True,
     ):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
+        #: reject non-finite chunks at push time (a single NaN/Inf poisons
+        #: the carried path metrics for every stream in the batch, silently).
+        #: ``validate=False`` skips the host-side isfinite scan for callers
+        #: feeding device arrays on a measured hot path.
+        self.validate = bool(validate)
         self.spec = CodecSpec.of(spec)
         code = self.spec.code
         self.code = code
@@ -164,6 +170,16 @@ class StreamSession:
             raise ValueError(
                 f"expected ({self.batch}, {self.chunk}, ·) chunk, got {chunk_data.shape}"
             )
+        if self.validate:
+            flat = np.asarray(chunk_data)
+            if not np.isfinite(flat).all():
+                bad = int(np.count_nonzero(~np.isfinite(flat)))
+                raise ValueError(
+                    f"non-finite input: {bad} NaN/Inf value(s) in a "
+                    f"{flat.shape} chunk — they would silently corrupt the "
+                    "carried path metrics for the whole batch "
+                    "(validate=False to skip this check)"
+                )
         if self.inputs == "received":
             chunk_data = self._plan.features(chunk_data, t0=self.t)
         if self._chunk_sharding is not None:
@@ -216,6 +232,11 @@ class StreamSession:
             r = bm_tail.shape[1]
             if r >= self.chunk or bm_tail.shape[0] != self.batch:
                 raise ValueError(f"tail must be (B, <chunk, ·), got {bm_tail.shape}")
+            if self.validate and not np.isfinite(np.asarray(bm_tail)).all():
+                raise ValueError(
+                    "non-finite input: NaN/Inf value(s) in the finish() tail "
+                    "(validate=False to skip this check)"
+                )
             tail_bm = self._tail_bm(bm_tail)
             ring = self.state.ring
             if self.packed:

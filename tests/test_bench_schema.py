@@ -1,7 +1,8 @@
-"""BENCH_viterbi.json schema gate (v5): the validator the CI bench-smoke job
+"""BENCH_viterbi.json schema gate (v6): the validator the CI bench-smoke job
 runs must accept well-formed payloads — including the ``stream.online``,
-telemetry-acceptance ``obs``, and SISO ``turbo`` sections — and reject the
-invariants it exists to guard."""
+telemetry-acceptance ``obs``, SISO ``turbo``, and fault-injection
+``stream.resilience`` sections — and reject the invariants it exists to
+guard."""
 import copy
 
 import pytest
@@ -51,6 +52,39 @@ def _payload():
                 "queue_depth_rows": {"mean": 640.0, "max": 1650,
                                      "max_stream": 244},
             },
+            "resilience": {
+                "sessions": 8,
+                "steps": 384,
+                "chunk": 64,
+                "depth": 15,
+                "backend": "scan",
+                "seed": 0,
+                "producer_fault_rate": 0.1,
+                "elapsed_s": 2.5,
+                "injected": {
+                    "producer_stall": 21,
+                    "slow_drip": 9,
+                    "producer_exception": 1,
+                    "corrupt_nan": 1,
+                    "device_step_failure": 2,
+                },
+                "streams_finished": 6,
+                "streams_quarantined": 2,
+                "quarantine_reasons": {"s1": "producer_error",
+                                       "s4": "poisoned_chunk"},
+                "ticks": 19,
+                "ticks_dropped": 2,
+                "bits_committed": 2500,
+                "timing_faults_bit_exact": True,
+                "snapshot": {
+                    "tick": 3,
+                    "streams": 8,
+                    "bytes": 120000,
+                    "save_s": 0.004,
+                    "restore_s": 0.02,
+                    "bit_exact": True,
+                },
+            },
         },
         "obs": {
             "sessions": 4,
@@ -95,8 +129,8 @@ def _payload():
     }
 
 
-def test_schema_is_v5():
-    assert BENCH_SCHEMA == "bench_viterbi/v5"
+def test_schema_is_v6():
+    assert BENCH_SCHEMA == "bench_viterbi/v6"
 
 
 def test_check_schema_accepts_valid_payload():
@@ -111,6 +145,20 @@ def test_check_schema_accepts_payload_without_optional_sections():
     check_schema(payload)
     payload = _payload()
     del payload["stream"]["online"]  # by_shards alone (pre-v3 content) is fine
+    del payload["stream"]["resilience"]  # pre-v6 content is fine too
+    check_schema(payload)
+
+
+def test_check_schema_accepts_chaos_run_with_no_fatal_faults():
+    # a lucky seed can inject only timing faults: nothing quarantined
+    payload = _payload()
+    res = payload["stream"]["resilience"]
+    res["injected"] = {"producer_stall": 4, "slow_drip": 2,
+                       "device_step_failure": 1}
+    res["streams_finished"] = 8
+    res["streams_quarantined"] = 0
+    res["quarantine_reasons"] = {}
+    res["ticks_dropped"] = 1
     check_schema(payload)
 
 
@@ -158,6 +206,43 @@ def test_check_schema_rejects_broken_online_sections(mutate):
     ],
 )
 def test_check_schema_rejects_broken_obs_sections(mutate):
+    payload = copy.deepcopy(_payload())
+    mutate(payload)
+    with pytest.raises((AssertionError, KeyError)):
+        check_schema(payload)
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        # a chaos run with zero injected faults is not a chaos run
+        lambda p: p["stream"]["resilience"].__setitem__("injected", {}),
+        # stream accounting broken: finished + quarantined != sessions
+        lambda p: p["stream"]["resilience"].__setitem__("streams_finished", 7),
+        # quarantine without any fatal fault class injected
+        lambda p: p["stream"]["resilience"].__setitem__(
+            "injected", {"producer_stall": 5, "device_step_failure": 2}
+        ),
+        # dropped ticks must equal injected device-step failures
+        lambda p: p["stream"]["resilience"].__setitem__("ticks_dropped", 5),
+        # timing faults changing the decode = arrival invariance broken
+        lambda p: p["stream"]["resilience"].__setitem__(
+            "timing_faults_bit_exact", False
+        ),
+        lambda p: p["stream"]["resilience"].pop("snapshot"),
+        lambda p: p["stream"]["resilience"]["snapshot"].__setitem__(
+            "bit_exact", False
+        ),
+        lambda p: p["stream"]["resilience"]["snapshot"].__setitem__(
+            "restore_s", -0.01
+        ),
+        lambda p: p["stream"]["resilience"]["snapshot"].__setitem__(
+            "streams", 0
+        ),
+        lambda p: p["stream"]["resilience"].__setitem__("bits_committed", 0),
+    ],
+)
+def test_check_schema_rejects_broken_resilience_sections(mutate):
     payload = copy.deepcopy(_payload())
     mutate(payload)
     with pytest.raises((AssertionError, KeyError)):

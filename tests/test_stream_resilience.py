@@ -1,0 +1,636 @@
+"""Serving resilience: snapshot/restore, chaos injection, degradation.
+
+Two acceptance gates live here:
+
+  1. SNAPSHOT FIDELITY — freezing a live scheduler at ANY tick boundary and
+     restoring onto a fresh one (producers re-attached) must commit exactly
+     the bits the uninterrupted run commits, fuzzed over arrival schedules
+     and snapshot points (the sharded legs are in tests/multidevice/).
+  2. CHAOS SURVIVAL + DETECTION — every fault class the harness can inject
+     (producer exception/stall/slow-drip, NaN/Inf/shape corruption, device
+     step failure, clock skew) must leave the scheduler serving, with the
+     injection AND the scheduler's reaction visible in ``metrics_text()``.
+"""
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CODE_K3_STD, bsc, encode, hard_branch_metrics
+from repro.decode import DecodeRequest, decode
+from repro.obs import Telemetry
+from repro.stream import (
+    FAULT_CLASSES,
+    ChaosClock,
+    ChaosPolicy,
+    ChaosProducer,
+    RateLimitedProducer,
+    SNAPSHOT_VERSION,
+    StreamBusy,
+    StreamScheduler,
+    StreamSession,
+    install_tick_faults,
+)
+from repro.train.fault_tolerance import StragglerDetector
+
+CODE = CODE_K3_STD
+
+
+def _noisy_bm(seed, info_bits, flip=0.02):
+    key = jax.random.PRNGKey(seed)
+    bits = jax.random.bernoulli(key, 0.5, (1, info_bits)).astype(jnp.int32)
+    coded = encode(CODE, bits, terminate=True)
+    rx = bsc(jax.random.fold_in(key, 1), coded, flip)
+    return np.asarray(hard_branch_metrics(CODE, rx))[0]
+
+
+def _chunks_of(table, sizes):
+    out, i = [], 0
+    for sz in sizes:
+        out.append(table[i : i + sz])
+        i += sz
+        if i >= len(table):
+            break
+    if i < len(table):
+        out.append(table[i:])
+    return [c for c in out if len(c)]
+
+
+def _run_uninterrupted(tables, **kw):
+    sched = StreamScheduler(CODE, **kw)
+    for sid, t in tables.items():
+        sched.open_stream(sid, max_buffered=max(kw.get("chunk", 64), len(t)))
+        sched.submit_chunk(sid, t, close=True)
+    return sched.run()
+
+
+def _assert_same_results(ref, got, atol=1e-2):
+    assert set(ref) <= set(got)
+    for sid in ref:
+        np.testing.assert_array_equal(
+            ref[sid][0], got[sid][0], err_msg=f"bits differ for {sid!r}"
+        )
+        assert abs(ref[sid][1] - got[sid][1]) < atol, sid
+
+
+# --------------------------------------------------------------------------- #
+# snapshot / restore                                                          #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("backend", ["scan", "fused_packed"])
+@pytest.mark.parametrize("snap_tick", [0, 1, 4])
+def test_snapshot_restore_bit_exact(backend, snap_tick):
+    tables = {f"s{i}": _noisy_bm(i, 180) for i in range(5)}
+    kw = dict(n_slots=4, chunk=32, backend=backend)
+    ref = _run_uninterrupted(tables, **kw)
+
+    sched = StreamScheduler(CODE, **kw)
+    for sid, t in tables.items():
+        sched.open_stream(sid, max_buffered=max(64, len(t)))
+        sched.submit_chunk(sid, t, close=True)
+    for _ in range(snap_tick):
+        sched.step()
+    snap = pickle.loads(pickle.dumps(sched.snapshot()))  # across-host shape
+    restored = StreamScheduler.restore(snap)
+    _assert_same_results(ref, restored.run())
+
+
+def test_snapshot_restore_mid_drip_with_device_counters():
+    """Streams frozen at arbitrary window positions — some starved, some
+    with pre-admission queued rows — restore bit-exact, DeviceCounters
+    included."""
+    tables = {f"s{i}": _noisy_bm(10 + i, 240) for i in range(6)}
+    kw = dict(n_slots=4, chunk=32, backend="fused_packed")
+    ref = _run_uninterrupted(tables, **kw)
+
+    sched = StreamScheduler(
+        CODE, telemetry=Telemetry(device_counters=True), **kw
+    )
+    served = {sid: 0 for sid in tables}
+
+    def drip(s, upto):
+        for sid, t in tables.items():
+            while served[sid] < min(upto, len(t)):
+                n = min(50, len(t) - served[sid], upto - served[sid])
+                try:
+                    s.submit_chunk(sid, t[served[sid] : served[sid] + n])
+                    served[sid] += n
+                except StreamBusy:
+                    break
+            if served[sid] >= len(t):
+                try:
+                    s.close(sid)
+                except KeyError:
+                    pass  # already retired
+
+    for sid in tables:
+        sched.open_stream(sid, max_buffered=256)
+    for _ in range(6):
+        drip(sched, 120)
+        sched.step()
+    snap = sched.snapshot()
+    restored = StreamScheduler.restore(
+        snap, telemetry=Telemetry(device_counters=True)
+    )
+    # the original keeps serving after a snapshot — it is non-destructive
+    sched.step()
+    while restored.pending_work():
+        drip(restored, 10**9)
+        restored.step()
+    _assert_same_results(ref, restored.results)
+    # counters survived: the restored streams kept their tick history
+    assert restored.stats.ticks >= 6
+
+
+def test_snapshot_restore_received_inputs():
+    """inputs='received': arena rows are stored POST-feature-transform, so a
+    restore must not re-apply the transform — this is the regression test."""
+    key = jax.random.PRNGKey(3)
+    bits = jax.random.bernoulli(key, 0.5, (1, 200)).astype(jnp.int32)
+    coded = encode(CODE, bits, terminate=True)
+    rx = np.asarray(bsc(jax.random.fold_in(key, 1), coded, 0.02))[0].astype(
+        np.float32
+    )
+    kw = dict(n_slots=2, chunk=32, backend="fused_packed", inputs="received")
+    ref = _run_uninterrupted({"rx": rx}, **kw)
+
+    sched = StreamScheduler(CODE, **kw)
+    sched.open_stream("rx", max_buffered=max(64, len(rx)))
+    sched.submit_chunk("rx", rx, close=True)
+    for _ in range(3):
+        sched.step()
+    restored = StreamScheduler.restore(sched.snapshot())
+    _assert_same_results(ref, restored.run())
+
+
+def test_snapshot_save_load_and_version_gate(tmp_path):
+    tables = {"a": _noisy_bm(1, 100)}
+    sched = StreamScheduler(CODE, n_slots=2, chunk=32, backend="scan")
+    sched.open_stream("a", max_buffered=128)
+    sched.submit_chunk("a", tables["a"], close=True)
+    sched.step()
+    snap = sched.snapshot()
+    path = tmp_path / "sched.snap"
+    snap.save(path)
+    loaded = type(snap).load(path)
+    assert loaded.version == SNAPSHOT_VERSION
+    assert loaded.stream_ids == ["a"]
+    _assert_same_results(
+        _run_uninterrupted(tables, n_slots=2, chunk=32, backend="scan"),
+        StreamScheduler.restore(loaded).run(),
+    )
+    loaded.version = SNAPSHOT_VERSION + 1
+    with pytest.raises(ValueError, match="snapshot version"):
+        StreamScheduler.restore(loaded)
+    (tmp_path / "junk").write_bytes(pickle.dumps({"not": "a snapshot"}))
+    with pytest.raises(TypeError):
+        type(snap).load(tmp_path / "junk")
+
+
+def test_snapshot_carries_stats_results_errors():
+    sched = StreamScheduler(CODE, n_slots=2, chunk=32, backend="scan")
+    done = _noisy_bm(4, 80)
+    sched.submit("done", done)
+    sched.run()
+    sched.open_stream("poisoned", max_buffered=128)
+    bad = _noisy_bm(5, 80).copy()
+    bad[3, 1] = np.nan
+    sched.open_stream("live", max_buffered=128)
+    sched.submit_chunk("live", _noisy_bm(6, 80), close=True)
+    # poison via producer so it quarantines instead of raising to us
+    sched.attach_producer("poisoned", iter([bad]))
+    sched.step()
+    assert sched.errors["poisoned"].reason == "poisoned_chunk"
+    snap = sched.snapshot()
+    restored = StreamScheduler.restore(snap)
+    assert restored.stats.ticks == sched.stats.ticks
+    assert restored.stats.streams_quarantined == 1
+    assert "poisoned" in restored.errors
+    np.testing.assert_array_equal(
+        restored.results["done"][0], sched.results["done"][0]
+    )
+    restored.run()
+    assert "live" in restored.results
+
+
+def test_snapshot_restore_fuzz_seeded():
+    """Always-on seeded fuzz over (arrival schedule, snapshot point) — the
+    hypothesis variant below widens the search when the dep is installed."""
+    rng = np.random.RandomState(0)
+    for case in range(6):
+        sizes = rng.randint(1, 90, size=24).tolist()
+        snap_tick = int(rng.randint(0, 8))
+        _fuzz_one(sizes, snap_tick, n_streams=int(rng.randint(2, 6)))
+
+
+def _fuzz_one(sizes, snap_tick, n_streams):
+    tables = {f"s{i}": _noisy_bm(100 + i, 150) for i in range(n_streams)}
+    kw = dict(n_slots=2, chunk=32, backend="fused_packed")
+    ref = _run_uninterrupted(tables, **kw)
+
+    sched = StreamScheduler(CODE, **kw)
+    feeds = {
+        sid: list(_chunks_of(t, sizes)) for sid, t in tables.items()
+    }
+    for sid in tables:
+        sched.open_stream(sid, max_buffered=256)
+
+    def feed(s):
+        for sid, chunks in feeds.items():
+            while chunks:
+                try:
+                    s.submit_chunk(sid, chunks[0])
+                    chunks.pop(0)
+                except StreamBusy:
+                    break
+                except KeyError:
+                    chunks.clear()
+            if not chunks:
+                try:
+                    s.close(sid)
+                except KeyError:
+                    pass
+
+    for _ in range(snap_tick):
+        feed(sched)
+        sched.step()
+    restored = StreamScheduler.restore(
+        pickle.loads(pickle.dumps(sched.snapshot()))
+    )
+    guard = 0
+    while restored.pending_work():
+        feed(restored)
+        restored.step()
+        guard += 1
+        assert guard < 1000
+    _assert_same_results(ref, restored.results)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        sizes=st.lists(st.integers(1, 90), min_size=3, max_size=20),
+        snap_tick=st.integers(0, 8),
+        n_streams=st.integers(1, 5),
+    )
+    def test_snapshot_restore_fuzz_hypothesis(sizes, snap_tick, n_streams):
+        _fuzz_one(sizes, snap_tick, n_streams)
+
+except ImportError:  # dev-only dep — the seeded fuzz above always runs
+    pass
+
+
+# --------------------------------------------------------------------------- #
+# chaos harness: every fault class survived AND detected                       #
+# --------------------------------------------------------------------------- #
+
+
+def test_chaos_policy_catalog_covers_all_classes():
+    pol = ChaosPolicy(seed=1, **{cls: 0.5 for cls in FAULT_CLASSES})
+    for cls in FAULT_CLASSES:
+        assert pol.rate(cls) == 0.5
+    mix = ChaosPolicy.producer_mix(0.4, seed=9)
+    assert mix.producer_stall == pytest.approx(0.2)
+    assert mix.seed == 9
+
+
+def test_chaos_injection_is_deterministic():
+    table = _noisy_bm(7, 120)
+    pol = ChaosPolicy(seed=42, producer_stall=0.5, slow_drip=0.3)
+
+    def run():
+        prod = ChaosProducer(iter([table]), pol, "det")
+        out = []
+        for _ in range(40):
+            got = prod.poll(16)
+            out.append(None if got is None else got.shape[0])
+            if prod.exhausted:
+                break
+        return out, dict(prod.injected)
+
+    assert run() == run()
+
+
+@pytest.mark.parametrize(
+    "cls", ["producer_exception", "corrupt_nan", "corrupt_inf", "corrupt_shape"]
+)
+def test_chaos_fatal_faults_quarantine_one_stream(cls):
+    """A crashed or poisoning producer fails ITS stream with a structured
+    error; the co-resident healthy stream decodes bit-exact and the fault is
+    visible in the metrics exposition."""
+    good_t = _noisy_bm(20, 160)
+    bad_t = _noisy_bm(21, 160)
+    ref = _run_uninterrupted({"good": good_t}, n_slots=2, chunk=32, backend="scan")
+
+    sched = StreamScheduler(CODE, n_slots=2, chunk=32, backend="scan")
+    pol = ChaosPolicy(seed=5, **{cls: 1.0})
+    sched.open_stream("good", max_buffered=256)
+    sched.submit_chunk("good", good_t, close=True)
+    sched.open_stream(
+        "bad",
+        producer=ChaosProducer(iter([bad_t]), pol, "bad", sched.telemetry.metrics),
+        max_buffered=256,
+    )
+    while sched.pending_work():
+        sched.step()
+    _assert_same_results(ref, sched.results)
+    err = sched.pop_error("bad")
+    expected = (
+        "producer_error" if cls == "producer_exception" else "poisoned_chunk"
+    )
+    assert err.reason == expected
+    assert sched.stats.streams_quarantined == 1
+    text = sched.metrics_text()
+    assert f"chaos_{cls}_total" in text  # injected (detection half)
+    assert "stream_quarantined_total 1" in text  # survived (reaction half)
+
+
+@pytest.mark.parametrize("cls", ["producer_stall", "slow_drip"])
+def test_chaos_timing_faults_never_change_the_decode(cls):
+    """Stalls and slow drips are arrival-schedule perturbations: the
+    arrival-invariance contract absorbs them bit-exactly."""
+    tables = {f"s{i}": _noisy_bm(30 + i, 140) for i in range(3)}
+    ref = _run_uninterrupted(tables, n_slots=2, chunk=32, backend="scan")
+    sched = StreamScheduler(CODE, n_slots=2, chunk=32, backend="scan")
+    pol = ChaosPolicy(seed=11, **{cls: 0.6})
+    for sid, t in tables.items():
+        sched.open_stream(
+            sid,
+            producer=ChaosProducer(iter([t]), pol, sid, sched.telemetry.metrics),
+            max_buffered=256,
+        )
+    guard = 0
+    while sched.pending_work():
+        sched.step()
+        guard += 1
+        assert guard < 2000
+    _assert_same_results(ref, sched.results)
+    assert not sched.errors
+    assert f"chaos_{cls}_total" in sched.metrics_text()
+
+
+def test_chaos_device_step_failure_drops_tick_and_retries():
+    table = _noisy_bm(40, 200)
+    ref = _run_uninterrupted({"a": table}, n_slots=2, chunk=32, backend="scan")
+    sched = StreamScheduler(CODE, n_slots=2, chunk=32, backend="scan")
+    injector = install_tick_faults(
+        sched, ChaosPolicy(seed=3, device_step_failure=0.3)
+    )
+    sched.open_stream("a", max_buffered=256)
+    sched.submit_chunk("a", table, close=True)
+    guard = 0
+    while sched.pending_work():
+        sched.step()
+        guard += 1
+        assert guard < 1000
+    _assert_same_results(ref, sched.results)
+    n_faults = injector.injected["device_step_failure"]
+    assert n_faults > 0
+    assert sched.stats.tick_device_failures == n_faults
+    assert (
+        f"stream_tick_device_failures_total {n_faults}" in sched.metrics_text()
+    )
+    # uninstall restores a clean tick path
+    sched.tick_fault_hook = None
+
+
+def test_chaos_clock_skew_is_bit_exact():
+    table = _noisy_bm(41, 160)
+    ref = _run_uninterrupted({"r": table}, n_slots=1, chunk=32, backend="scan")
+    sched = StreamScheduler(CODE, n_slots=1, chunk=32, backend="scan")
+    fake = {"t": 0.0}
+
+    def base_clock():
+        fake["t"] += 0.005
+        return fake["t"]
+
+    clock = ChaosClock(
+        ChaosPolicy(seed=13, clock_skew=0.5),
+        max_skew_s=0.5,
+        clock=base_clock,
+        metrics=sched.telemetry.metrics,
+    )
+    sched.open_stream(
+        "r",
+        producer=RateLimitedProducer(table, rows_per_s=2000.0, clock=clock),
+        max_buffered=256,
+    )
+    guard = 0
+    while sched.pending_work():
+        sched.step()
+        guard += 1
+        assert guard < 5000
+    _assert_same_results(ref, sched.results)
+    assert clock.injector.injected["clock_skew"] > 0
+    assert "chaos_clock_skew_total" in sched.metrics_text()
+
+
+# --------------------------------------------------------------------------- #
+# graceful degradation                                                         #
+# --------------------------------------------------------------------------- #
+
+
+def test_non_finite_chunk_rejected_at_submit():
+    sched = StreamScheduler(CODE, n_slots=2, chunk=32, backend="scan")
+    sched.open_stream("a", max_buffered=128)
+    bad = _noisy_bm(1, 60).copy()
+    bad[5, 0] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        sched.submit_chunk("a", bad)
+    assert sched.stats.poisoned_rejections == 1
+    # direct submit_chunk rejection does NOT kill the stream — the caller
+    # holds the bad chunk, the stream keeps its slot
+    good = _noisy_bm(1, 60)
+    sched.submit_chunk("a", good, close=True)
+    sched.run()
+    assert "a" in sched.results
+
+
+def test_session_push_rejects_non_finite():
+    sess = StreamSession(CODE, batch=1, chunk=32, backend="scan")
+    bad = np.zeros((1, 32, CODE.n_symbols), dtype=np.float32)
+    bad[0, 3, 1] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        sess.push(bad)
+    with pytest.raises(ValueError, match="non-finite"):
+        sess.finish(jnp.asarray(bad[:, :5] * np.nan))
+    # opt-out for measured hot paths
+    lax = StreamSession(CODE, batch=1, chunk=32, backend="scan", validate=False)
+    lax.push(jnp.asarray(bad))  # no raise
+
+
+def test_decode_from_received_rejects_non_finite():
+    key = jax.random.PRNGKey(0)
+    bits = jax.random.bernoulli(key, 0.5, (2, 64)).astype(jnp.int32)
+    rx = np.asarray(encode(CODE, bits, terminate=True), dtype=np.float32)
+    rx[0, 3, 0] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        decode(DecodeRequest(spec=CODE, received=jnp.asarray(rx)))
+
+
+def test_ttl_expiry_flushes_partial_and_records_error():
+    table = _noisy_bm(8, 300)
+    sched = StreamScheduler(CODE, n_slots=2, chunk=32, backend="scan")
+    sched.open_stream("t", ttl_ticks=3, max_buffered=512)
+    sched.submit_chunk("t", table)  # never closed: would serve forever
+    for _ in range(6):
+        sched.step()
+    err = sched.errors["t"]
+    assert err.reason == "expired"
+    bits, _ = sched.results["t"]
+    assert err.committed_bits == bits.shape[0] > 0
+    assert sched.stats.streams_expired == 1
+    assert "stream_expired_total 1" in sched.metrics_text()
+    # bits committed BEFORE the cut agree with the uninterrupted decode;
+    # the final traceback-window tail may differ (the full run had future
+    # evidence the truncated one does not)
+    ref_bits = _run_uninterrupted(
+        {"t": table}, n_slots=2, chunk=32, backend="scan"
+    )["t"][0]
+    firm = bits.shape[0] - sched.depth
+    np.testing.assert_array_equal(bits[:firm], ref_bits[:firm])
+
+
+def test_overload_sheds_lowest_priority_with_partial_flush():
+    sched = StreamScheduler(
+        CODE, n_slots=2, chunk=32, backend="scan", max_pending=1
+    )
+    t = _noisy_bm(9, 100)
+    for i in range(3):
+        sched.open_stream(f"p{i}", priority=i, max_buffered=256)
+        sched.submit_chunk(f"p{i}", t)
+    sched.step()
+    assert not sched.errors  # within bounds: nothing shed yet
+    # two more arrivals push pending past the bound; the lowest-priority
+    # open streams lose, even though they are the ACTIVE ones
+    sched.open_stream("p3", priority=3, max_buffered=256)
+    sched.open_stream("p4", priority=4, max_buffered=256)
+    assert sorted(sched.errors) == ["p0", "p1"]
+    assert all(e.reason == "shed" for e in sched.errors.values())
+    assert sched.stats.streams_shed == 2
+    # p0 was active and had committed bits — partial result flushed
+    assert "p0" in sched.results
+    assert sched.errors["p0"].committed_bits == sched.results["p0"][0].shape[0]
+    # the survivors (higher priority) are being served
+    live = {st.stream_id for st in sched.active.values()} | {
+        st.stream_id for st in sched.pending
+    }
+    assert live == {"p2", "p3", "p4"}
+    assert "stream_shed_total 2" in sched.metrics_text()
+
+
+def test_evict_while_producer_has_pending_credit():
+    """Lifecycle: evicting a producer-fed stream mid-flight (its producer
+    still holding undelivered rows within credit) detaches cleanly — no
+    error records, the slot recycles, and other streams are unaffected."""
+    t_long = _noisy_bm(14, 400)
+    t_other = _noisy_bm(15, 120)
+    ref = _run_uninterrupted({"other": t_other}, n_slots=2, chunk=32, backend="scan")
+    sched = StreamScheduler(CODE, n_slots=2, chunk=32, backend="scan")
+    prod = RateLimitedProducer(t_long, rows_per_s=1e9)
+    sched.open_stream("victim", producer=prod, max_buffered=64)
+    sched.open_stream("other", max_buffered=256)
+    sched.submit_chunk("other", t_other, close=True)
+    for _ in range(3):
+        sched.step()
+    assert not prod.exhausted  # credit-bounded: rows still undelivered
+    partial = sched.evict("victim")
+    assert partial is not None
+    assert "victim" not in sched.errors  # evict is a caller action, not a fault
+    with pytest.raises(KeyError):
+        sched.credit("victim")
+    while sched.pending_work():
+        sched.step()
+    _assert_same_results(ref, sched.results)
+    assert "victim" not in sched.results
+    # the freed slot is reusable immediately
+    sched.open_stream("next", max_buffered=256)
+    sched.submit_chunk("next", t_other, close=True)
+    sched.run()
+    np.testing.assert_array_equal(sched.results["next"][0], ref["other"][0])
+
+
+def test_evict_pending_stream_returns_none():
+    sched = StreamScheduler(CODE, n_slots=1, chunk=32, backend="scan")
+    sched.open_stream("a", max_buffered=64)
+    sched.open_stream("b", max_buffered=64)  # queued: slot taken by a
+    assert sched.evict("b") is None
+    with pytest.raises(KeyError):
+        sched.evict("b")
+
+
+# --------------------------------------------------------------------------- #
+# backpressure hint + straggler wiring                                         #
+# --------------------------------------------------------------------------- #
+
+
+def test_stream_busy_carries_retry_after_ticks():
+    sched = StreamScheduler(CODE, n_slots=1, chunk=32, backend="scan")
+    sched.open_stream("a", max_buffered=64)
+    big = _noisy_bm(2, 500)
+    with pytest.raises(StreamBusy) as exc:
+        sched.submit_chunk("a", big)
+    # queue empty: a split submit of <= credit rows would land NOW, so the
+    # hint is the 1-tick minimum even though the whole chunk can never fit
+    assert exc.value.retry_after_ticks == 1
+    assert "retry in ~1 tick(s)" in str(exc.value)
+    # queue full: 64 buffered rows drain at 32/tick -> 2 ticks
+    sched.submit_chunk("a", big[:64])
+    with pytest.raises(StreamBusy) as exc_full:
+        sched.submit_chunk("a", big[64:])
+    assert exc_full.value.retry_after_ticks == 2
+    # a pending (not yet admitted) stream's hint includes its queue position
+    sched.open_stream("b", max_buffered=64)
+    sched.submit_chunk("b", big[:64])
+    with pytest.raises(StreamBusy) as exc_b:
+        sched.submit_chunk("b", big[64:])
+    assert exc_b.value.retry_after_ticks > exc_full.value.retry_after_ticks
+
+
+def test_rate_limited_pump_backoff_converges():
+    """The pump honors retry_after_ticks: roughly half the pump calls are
+    skipped in backoff instead of hot-spinning a rejected submit per tick,
+    and the decode is still bit-exact."""
+    table = _noisy_bm(3, 2000)
+    ref = _run_uninterrupted({"r": table}, n_slots=1, chunk=32, backend="scan")
+    sched = StreamScheduler(CODE, n_slots=1, chunk=32, backend="scan")
+    sched.open_stream("r", max_buffered=64)
+    prod = RateLimitedProducer(table, rows_per_s=1e9)
+    ticks = 0
+    while sched.pending_work():
+        prod.pump(sched, "r")
+        sched.step()
+        ticks += 1
+        assert ticks < 500, "backoff loop did not converge"
+    _assert_same_results(ref, sched.results)
+    assert prod.busy_events > 0
+    assert prod.skipped_pumps >= prod.busy_events  # backed off, every time
+    # converged: rejections are bounded by the drain schedule, not one per tick
+    assert prod.busy_events <= ticks / 2 + 1
+
+
+def test_straggler_detector_wired_into_tick():
+    sched = StreamScheduler(CODE, n_slots=2, chunk=32, backend="scan")
+    # ticks that dispatch work feed the EMA
+    sched.submit("a", _noisy_bm(4, 200))
+    sched.run()
+    assert sched.straggler.n > 0
+    n_after_work = sched.straggler.n
+    # idle ticks (nothing admitted) must NOT feed it
+    sched.step()
+    assert sched.straggler.n == n_after_work
+    # a tick wildly slower than the baseline is flagged and counted
+    sched.straggler = StragglerDetector(zscore=2.0, warmup_steps=1)
+    sched._observe_tick_time(0.01)
+    sched._observe_tick_time(0.01)
+    sched._observe_tick_time(5.0)
+    assert sched.stats.straggler_ticks == 1
+    assert "stream_tick_straggler_total 1" in sched.metrics_text()
+    snap = sched.metrics_snapshot()
+    assert snap["stream_tick_seconds"]["count"] >= 3
