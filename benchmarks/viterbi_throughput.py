@@ -19,7 +19,12 @@ survivor words amortized over 32 steps, decoded bit out = 4):
   fused_packed+rx       4·(n + S/16 + 1)  raw symbols in (no bm table)
 
   PYTHONPATH=src python benchmarks/viterbi_throughput.py [--smoke]
-      [--out benchmarks/results/BENCH_viterbi.json]
+      [--long-blocks] [--out benchmarks/results/BENCH_viterbi.json]
+
+``--long-blocks`` adds the time-parallel section: the K=3 production code on
+single long streams, sequential scan vs the tiled decoder at several tile
+counts P — wall-clock, bit-exactness (the exact seam regime must never
+trade correctness for speed), and the crossover T where tiling first wins.
 """
 from __future__ import annotations
 
@@ -43,6 +48,7 @@ from repro.kernels.ops import (
     viterbi_decode_fused,
     viterbi_decode_fused_packed,
     viterbi_decode_packed,
+    viterbi_decode_tiled_op,
 )
 
 log = get_logger("bench.viterbi")
@@ -59,8 +65,12 @@ log = get_logger("bench.viterbi")
 #: iteration count); v6 adds the optional ``stream.resilience`` section
 #: (stream_throughput.py --chaos: seeded fault-injection drain — injected
 #: fault counts by class, survival accounting, snapshot/restore recovery
-#: latency, bit-exactness flags).
-BENCH_SCHEMA = "bench_viterbi/v6"
+#: latency, bit-exactness flags); v7 adds the optional top-level
+#: ``long_blocks`` section (--long-blocks: sequential vs time-parallel tiled
+#: decode on single long K=3 streams — time vs tile count P, per-row
+#: bit-exactness, and the crossover T where tiling first beats sequential;
+#: speedup-vs-P monotonicity is recorded, not asserted).
+BENCH_SCHEMA = "bench_viterbi/v7"
 DEFAULT_OUT = Path(__file__).resolve().parent / "results" / "BENCH_viterbi.json"
 
 
@@ -172,7 +182,83 @@ def bench_backends(spec: CodecSpec, batch: int, info_bits: int, iters: int) -> D
     }
 
 
-def run(quick: bool = True, out: Path = DEFAULT_OUT) -> Dict:
+#: --long-blocks sweep: single-stream lengths and tile counts.  Smoke keeps
+#: the CI job short; full adds the deep point where tiling matters most.
+LONG_BLOCK_SWEEP = {"Ts": (2048, 8192), "tile_counts": (4, 16)}
+LONG_BLOCK_SWEEP_FULL = {"Ts": (2048, 8192, 32768), "tile_counts": (4, 16, 32)}
+
+
+def bench_long_blocks(spec: CodecSpec, Ts, tile_counts, iters: int) -> Dict:
+    """Single long streams (B=1): the un-tiled packed pipeline walks a
+    T-step launch time grid, the tiled decoder a T/P-step one plus seam
+    work — measure where the crossover lands and that the exact seam regime
+    stays bit-exact while winning.
+
+    The ``sequential`` baseline is viterbi_decode_packed — the SAME kernel
+    pipeline with P=1, so the delta is the time-tiling and nothing else (the
+    only apples-to-apples wall-clock on an interpret-mode container, where
+    Pallas-vs-XLA ratios say nothing about TPU).  The XLA lax.scan oracle is
+    recorded alongside as ``xla_scan`` for context and the oracle check."""
+    code = spec.code
+    by_T: Dict[str, Dict] = {}
+    crossover = None
+    for T in Ts:
+        n_info = T - (code.constraint - 1)  # steps == T after flush
+        _, _, bm = _mk_inputs(spec, n_info, 1, seed=7)
+        assert bm.shape[1] == T, (bm.shape, T)
+        t_scan, out_scan = _timeit(
+            jax.jit(lambda b: viterbi_decode(code, b)[0]), bm, iters=iters
+        )
+        ref = np.asarray(out_scan)
+        t_seq, out_seq = _timeit(
+            jax.jit(lambda b: viterbi_decode_packed(code, b)[0]), bm,
+            iters=iters,
+        )
+        assert (np.asarray(out_seq) == ref).all(), "packed baseline diverged"
+        tiled_rows: Dict[str, Dict] = {}
+        for P in tile_counts:
+            fn = jax.jit(lambda b, P=P: viterbi_decode_tiled_op(code, b, P)[0])
+            t, out = _timeit(fn, bm, iters=iters)
+            tiled_rows[str(P)] = {
+                "time_s": t,
+                "bits_per_s": T / t,
+                "bit_exact": bool((np.asarray(out) == ref).all()),
+                "speedup_vs_sequential": t_seq / t,
+            }
+        best = max(tiled_rows, key=lambda p: tiled_rows[p]["speedup_vs_sequential"])
+        by_T[str(T)] = {
+            "sequential": {"time_s": t_seq, "bits_per_s": T / t_seq,
+                           "backend": "fused_packed (un-tiled, P=1)"},
+            "xla_scan": {"time_s": t_scan, "bits_per_s": T / t_scan},
+            "tiled": tiled_rows,
+            "best_tiles": int(best),
+            "best_speedup_vs_sequential": (
+                tiled_rows[best]["speedup_vs_sequential"]
+            ),
+        }
+        if crossover is None and by_T[str(T)]["best_speedup_vs_sequential"] > 1.0:
+            crossover = T
+    return {
+        "workload": {
+            "constraint": code.constraint,
+            "n_states": code.n_states,
+            "metric": spec.metric,
+            "batch": 1,
+            "Ts": [int(T) for T in Ts],
+            "tile_counts": [int(P) for P in tile_counts],
+            "sequential_backend": "fused_packed (un-tiled, P=1)",
+        },
+        "by_T": by_T,
+        # smallest swept T where the best tiled config beats the un-tiled run
+        "crossover_T_vs_sequential": crossover,
+        "note": ("measured wall-clock vs the un-tiled run of the same packed "
+                 "pipeline (interpret-mode off-TPU); speedup monotonicity in "
+                 "P is recorded, not asserted"),
+    }
+
+
+def run(quick: bool = True, out: Path = DEFAULT_OUT,
+        long_blocks: bool = False) -> Dict:
     """Benchmark + write BENCH_viterbi.json; returns the payload.  ``quick``
     is the CPU-container (--smoke) shape; full mode runs the production
     batch."""
@@ -192,15 +278,24 @@ def run(quick: bool = True, out: Path = DEFAULT_OUT) -> Dict:
         "paper_workload_k7": bench_backends(k7, *k7_shape, iters=iters),
         "paper_workload_k3": bench_backends(k3, *k3_shape, iters=iters),
         "planned_backend_short_block": plan_decode(k7, (k7_shape[0], 256)).backend,
+        "planned_backend_long_block": plan_decode(k3, (1, 8192)).backend,
     }
+    if long_blocks:
+        sweep = LONG_BLOCK_SWEEP if quick else LONG_BLOCK_SWEEP_FULL
+        payload["long_blocks"] = bench_long_blocks(
+            k3, sweep["Ts"], sweep["tile_counts"], iters=2 if quick else 3
+        )
     out = Path(out)
     out.parent.mkdir(parents=True, exist_ok=True)
-    if out.exists():  # preserve sections merged in by other benchmarks
+    if out.exists():  # preserve sections merged in by other benchmarks/runs
         try:
             existing = json.loads(out.read_text())
         except (ValueError, OSError):
             existing = {}
-        for section in ("stream", "obs", "turbo"):
+        preserved = ["stream", "obs", "turbo"]
+        if not long_blocks:
+            preserved.append("long_blocks")
+        for section in preserved:
             if existing.get(section) is not None:
                 payload[section] = existing[section]
     out.write_text(json.dumps(payload, indent=1))
@@ -304,6 +399,41 @@ def check_schema(payload: Dict) -> None:
         assert snap["bit_exact"] is True
         assert snap["save_s"] >= 0 and snap["restore_s"] >= 0
         assert 0 < snap["streams"] <= res["sessions"]
+    # optional time-parallel tiled section (--long-blocks): v7
+    lb = payload.get("long_blocks")
+    if lb is not None:
+        for field in ("workload", "by_T", "crossover_T_vs_sequential", "note"):
+            assert field in lb, f"long_blocks missing {field}"
+        assert lb["by_T"], "long_blocks.by_T must be non-empty"
+        for T, row in lb["by_T"].items():
+            assert int(T) >= 1
+            assert row["sequential"]["time_s"] > 0
+            if "xla_scan" in row:
+                assert row["xla_scan"]["time_s"] > 0
+            assert row["tiled"], f"long_blocks.by_T[{T}] has no tiled rows"
+            for P, trow in row["tiled"].items():
+                assert int(P) >= 1
+                assert trow["time_s"] > 0 and trow["bits_per_s"] > 0
+                # the exact seam regime may never trade correctness for
+                # speed: every recorded tiled row must be bit-exact
+                assert trow["bit_exact"] is True, f"tiled P={P} at T={T}"
+                assert trow["speedup_vs_sequential"] > 0
+                # speedup monotonicity in P is recorded, NOT asserted: it
+                # legitimately rolls off past the lane budget
+            assert str(row["best_tiles"]) in row["tiled"]
+            best = row["tiled"][str(row["best_tiles"])]
+            assert abs(row["best_speedup_vs_sequential"]
+                       - best["speedup_vs_sequential"]) < 1e-9
+        cx = lb["crossover_T_vs_sequential"]
+        if cx is not None:
+            row = lb["by_T"][str(cx)]
+            assert row["best_speedup_vs_sequential"] > 1.0, (
+                "crossover recorded at a T where tiling does not win"
+            )
+            # no smaller swept T already won
+            for T, r in lb["by_T"].items():
+                if int(T) < int(cx):
+                    assert r["best_speedup_vs_sequential"] <= 1.0
     # optional SISO turbo section (siso_throughput.py): v5
     turbo = payload.get("turbo")
     if turbo is not None:
@@ -330,13 +460,16 @@ def main() -> None:
     size.add_argument("--smoke", action="store_true",
                       help="small CPU-container shapes (the CI gate; default)")
     size.add_argument("--full", action="store_true", help="production batch shapes")
+    ap.add_argument("--long-blocks", action="store_true",
+                    help="add the sequential-vs-tiled long-stream sweep")
     ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
     ap.add_argument("--quiet", action="store_true",
                     help="warnings only (the JSON artifact is still written)")
     args = ap.parse_args()
     global log
     log = get_logger("bench.viterbi", quiet=args.quiet)
-    payload = run(quick=not args.full, out=args.out)
+    payload = run(quick=not args.full, out=args.out,
+                  long_blocks=args.long_blocks)
     check_schema(payload)
     for wl_key in ("paper_workload_k7", "paper_workload_k3"):
         wl = payload[wl_key]
@@ -354,6 +487,17 @@ def main() -> None:
                 wl["speedup"]["fused_packed_vs_sequential_measured"]
             ),
         )
+    lb = payload.get("long_blocks")
+    if lb is not None:
+        for T, row in lb["by_T"].items():
+            log.info(
+                f"long_blocks/T={T}",
+                sequential_s=row["sequential"]["time_s"],
+                best_tiles=row["best_tiles"],
+                best_speedup=row["best_speedup_vs_sequential"],
+            )
+        log.info("long_blocks/crossover",
+                 T=lb["crossover_T_vs_sequential"])
     log.info("wrote", path=str(args.out), schema=payload["schema"],
              smoke=payload["smoke"], interpret=payload["interpret_mode"])
 

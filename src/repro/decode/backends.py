@@ -75,6 +75,62 @@ def decode_fused_packed(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> De
     return _result(spec, bits, metric, backend="fused_packed", metrics="table")
 
 
+def _tile_count(ctx: DecodeContext, B: int, T: int, S: int) -> int:
+    """ctx.tiles when the caller (or the planner) pinned one, else the
+    shape-derived default."""
+    if ctx.tiles is not None:
+        return max(1, int(ctx.tiles))
+    from repro.kernels.tiling import default_tiles
+
+    return default_tiles(B, T, S)
+
+
+def _tiled_from_received(
+    spec: CodecSpec, received, *, ctx: DecodeContext
+) -> DecodeResult:
+    """Raw-symbol entry: each tile computes its branch metrics in-kernel."""
+    from repro.kernels.metrics import fused_metric_plan
+    from repro.kernels.ops import viterbi_decode_tiled_fused
+
+    B, T = received.shape[:2]
+    n = _tile_count(ctx, B, T, spec.code.n_states)
+    plan = fused_metric_plan(spec.code, spec.metric, spec.puncture_array)
+    bits, metric = viterbi_decode_tiled_fused(
+        plan, received, n_tiles=n, overlap=ctx.tile_overlap,
+        terminated=spec.terminated, interpret=ctx.interpret,
+    )
+    return _result(
+        spec, bits, metric, backend="tiled", tiles=n,
+        overlap=ctx.tile_overlap, metrics="in-kernel",
+    )
+
+
+@register_decoder(
+    "tiled",
+    capabilities=BackendCapabilities(
+        max_states=FUSED_MAX_STATES, accepts_received=True
+    ),
+    from_received=_tiled_from_received,
+)
+def decode_tiled(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
+    """Time-parallel tiled decode: T splits into ctx.tiles tiles that run
+    through the packed Pallas scan as ONE batched launch (tiles on the lane
+    axis), seams resolved via the min-plus state-map composition — O(T/P)
+    critical path, bit-exact in the default exact-overlap regime."""
+    from repro.kernels.ops import viterbi_decode_tiled_op
+
+    B, T = bm_tables.shape[:2]
+    n = _tile_count(ctx, B, T, spec.code.n_states)
+    bits, metric = viterbi_decode_tiled_op(
+        spec.code, bm_tables, n_tiles=n, overlap=ctx.tile_overlap,
+        terminated=spec.terminated, interpret=ctx.interpret,
+    )
+    return _result(
+        spec, bits, metric, backend="tiled", tiles=n,
+        overlap=ctx.tile_overlap, metrics="table",
+    )
+
+
 @register_decoder("sequential", capabilities=BackendCapabilities())
 def decode_sequential(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
     """lax.scan reference decoder — the oracle every other backend is tested

@@ -17,7 +17,11 @@ Selection policy (each branch has a planner unit test):
     (``ctx.batch_axis``) mesh axis -> ``sharded_stream`` (one scheduler
     spanning the axis); otherwise -> ``streaming``;
   * long blocks (T >= LONG_BLOCK_T) -> ``seqparallel`` when a mesh is
-    present and T divides across it, else ``parallel``;
+    present and T divides across it; without a usable mesh the rule
+    ``long-conv-tiled`` routes to the time-parallel ``tiled`` backend and
+    picks the tile count P by scoring ``predicted_costs()`` over candidate
+    counts (``_pick_tiles``; ``parallel`` remains the fallback for
+    trellises past the tiled VMEM cap);
   * everything else (short batched blocks) -> ``fused_packed`` (bit-packed
     survivors + on-device traceback; in-kernel branch metrics when the
     request carries raw symbols), falling back to ``parallel`` for
@@ -26,6 +30,7 @@ Selection policy (each branch has a planner unit test):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
@@ -144,6 +149,44 @@ class DecodePlan:
         return self.execute(request.metrics())
 
 
+@functools.lru_cache(maxsize=128)
+def _pick_tiles(
+    spec: CodecSpec, B: int, T: int, device_kind: str, chunk: int,
+    interpret: Optional[bool],
+) -> Tuple[int, str]:
+    """Tile count for a long-block tiled decode, chosen from the roofline
+    cost model: trace the tiled backend once per candidate P (the same
+    ``predicted_costs()`` surface ``explain(costs=True)`` reports) and take
+    the argmin of predicted (flops + bytes) / P — the critical path when the
+    P tiles run time-parallel on the lane axis.  Candidates that the tracer
+    cannot follow are skipped; if none trace, fall back to the shape-derived
+    default.  Cached per (spec, shape, device): planning stays cheap and
+    deterministic."""
+    from repro.kernels.tiling import MIN_TILE_CORE, default_tiles
+
+    S = spec.code.n_states
+    fallback = default_tiles(B, T, S)
+    cap = max(1, T // MIN_TILE_CORE)
+    candidates = sorted({p for p in (1, 2, 4, 8, 16, 32) if p <= cap} | {fallback})
+    scored = {}
+    for p in candidates:
+        plan = DecodePlan(
+            spec=spec, backend="tiled", batch=B, steps=T,
+            ctx=DecodeContext(chunk=chunk, interpret=interpret, tiles=p),
+            reason="tile-count candidate", device_kind=device_kind,
+        )
+        c = plan.predicted_costs()
+        if c is not None:
+            scored[p] = (c["flops"] + c["bytes"]) / p
+    if not scored:
+        return fallback, "predicted_costs untraceable -> shape default"
+    best = min(scored, key=scored.get)
+    return best, (
+        f"argmin of predicted (flops+bytes)/P over P in {list(scored)} "
+        "(roofline predicted_costs)"
+    )
+
+
 def _normalize_shape(shape: Sequence[int]) -> Tuple[int, int]:
     """Accept (B, T) or a full (B, T, M) bm-table shape."""
     if len(shape) == 2:
@@ -258,17 +301,34 @@ def plan_decode(
                 f"({ctx.mesh_axis}={n}, T divisible) -> shard the time axis"
             )
         else:
-            choice = "parallel"
             if ctx.mesh is None:
                 why_not = "no mesh"
             elif not n:
                 why_not = f"mesh lacks axis {ctx.mesh_axis!r}"
             else:
                 why_not = f"T % {ctx.mesh_axis}={n} != 0"
-            reason = (
-                f"long block (T={T} >= {LONG_BLOCK_T}), {why_not} -> "
-                "single-device (min,+) associative scan"
-            )
+            tiled_max = get_decoder("tiled").capabilities.max_states
+            if tiled_max is not None and S > tiled_max:
+                choice = "parallel"
+                reason = (
+                    f"long block (T={T} >= {LONG_BLOCK_T}), {why_not}, and "
+                    f"S={S} exceeds the tiled VMEM cap ({tiled_max}) -> "
+                    "single-device (min,+) associative scan"
+                )
+            else:
+                choice = "tiled"
+                if ctx.tiles is not None:
+                    tiles, how = int(ctx.tiles), "ctx.tiles pinned by caller"
+                else:
+                    tiles, how = _pick_tiles(
+                        spec, B, T, device_kind, ctx.chunk, ctx.interpret
+                    )
+                    ctx = dataclasses.replace(ctx, tiles=tiles)
+                reason = (
+                    f"long block (T={T} >= {LONG_BLOCK_T}), {why_not} -> "
+                    f"rule 'long-conv-tiled': time-parallel tiled decode, "
+                    f"P={tiles} ({how})"
+                )
     else:
         fused_max = get_decoder("fused_packed").capabilities.max_states
         if fused_max is not None and S > fused_max:

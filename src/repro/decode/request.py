@@ -36,6 +36,12 @@ class DecodeContext:
         (None = the textbook 5*K).
       streaming: a live session context — the caller consumes bits a fixed
         lag behind the channel, so the planner must pick a windowed backend.
+      tiles: time-tile count for the ``tiled`` backend (None = the planner
+        picks one from predicted costs, or kernels/tiling.default_tiles).
+      tile_overlap: per-tile warm-up steps for the ``tiled`` backend.  None
+        (the default) and any value >= the truncation depth 5·K select the
+        exact min-plus seam resolution (bit-exact); smaller values select
+        the cheaper truncated warm-up approximation.
       interpret: force Pallas interpret mode (None = auto: interpret off-TPU).
     """
 
@@ -45,6 +51,8 @@ class DecodeContext:
     chunk: int = 64
     stream_depth: Optional[int] = None
     streaming: bool = False
+    tiles: Optional[int] = None
+    tile_overlap: Optional[int] = None
     interpret: Optional[bool] = None
 
 

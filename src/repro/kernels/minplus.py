@@ -1,4 +1,5 @@
-"""(min,+) semiring matrix multiply as a Pallas kernel.
+"""(min,+) semiring matrix multiply as a Pallas kernel, plus the state-map
+algebra built on it.
 
 Used by the block-parallel Viterbi decoder (chunk transfer-matrix products)
 and the general HMM Viterbi: ``C[i,j] = min_k A[i,k] + B[k,j]``.
@@ -8,6 +9,19 @@ float32 accumulator tile in VMEM scratch that is min-reduced across k-tiles.
 The inner body broadcasts an (bi, bk, 1) tile against a (1, bk, bj) tile on
 the VPU — the (min,+) semiring has no MXU path, so this is deliberately a
 VPU kernel with MXU-friendly tile shapes (multiples of 8×128).
+
+State-map algebra (the seam calculus shared by the sequence-parallel
+collectives and the tiled time-parallel decoder): a span of trellis steps is
+summarized by its (S, S) *state map* M[i, j] = best metric of any path that
+enters the span in state i and leaves it in state j.  Maps compose in the
+(min,+) semiring (``compose_maps``), ``identity_map`` is the semiring unit,
+and ``prefix_maps`` left-folds a stack of per-tile maps into exclusive
+prefixes — prefix p applied to the initial metric vector is *exactly* the
+full-length forward path metrics at tile p's entry seam (for integer-valued
+hard metrics, bit-exactly: the sums are small integers in float32).
+``seam_argmin`` pins the tie-break: the lowest state index among minimizers
+(jnp.argmin's first-occurrence rule — the same rule ops._frontier applies to
+an open trellis frontier).
 """
 from __future__ import annotations
 
@@ -72,3 +86,60 @@ def minplus_matmul(
         interpret=resolve_interpret(interpret),
     )(a, b)
     return out
+
+
+# --------------------------------------------------------------------------- #
+# State-map algebra: compose / prefix-fold per-tile (S, S) transfer maps.     #
+# --------------------------------------------------------------------------- #
+
+
+def identity_map(n_states: int, batch_shape: tuple = ()) -> jnp.ndarray:
+    """The (min,+) unit: 0 on the diagonal, +inf (NEG_UNREACHABLE) off it."""
+    eye = jnp.where(jnp.eye(n_states, dtype=bool), 0.0, NEG_UNREACHABLE)
+    return jnp.broadcast_to(eye, tuple(batch_shape) + (n_states, n_states))
+
+
+def compose_maps(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Sequence a's span followed by b's: ``c[i,j] = min_k a[i,k] + b[k,j]``,
+    clamped so stacked unreachable (BIG + BIG) entries stay at the semiring
+    +inf.  a, b: (..., S, S) with matching batch dims."""
+    c = jnp.min(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+    return jnp.minimum(c, NEG_UNREACHABLE)
+
+
+def prefix_maps(mats: jnp.ndarray):
+    """Exclusive (min,+) prefixes of a stack of per-tile state maps.
+
+    mats: (P, ..., S, S), tile 0 first.  Returns ``(excl, total)`` where
+    ``excl[p] = mats[0] ∘ ... ∘ mats[p-1]`` (the identity at p = 0) and
+    ``total`` composes all P maps.  A left fold (lax.scan), matching the
+    association order of the seqparallel decoder; since each compose does a
+    single add then an exact min-reduction, the results are independent of
+    reduction order — integer-metric maps compose bit-exactly.
+    """
+    S = mats.shape[-1]
+    eye = identity_map(S, mats.shape[1:-2])
+
+    def step(acc, m):
+        return compose_maps(acc, m), acc  # emit the *exclusive* prefix
+
+    total, excl = jax.lax.scan(step, eye, mats)
+    return excl, total
+
+
+def tile_entry_metrics(excl: jnp.ndarray, init_state: int = 0) -> jnp.ndarray:
+    """Forward path metrics entering each tile, for paths that start the
+    full sequence in ``init_state``: excl (P, ..., S, S) -> (P, ..., S).
+    Row p equals the full-length forward pass's metric vector at tile p's
+    entry seam."""
+    return excl[..., init_state, :]
+
+
+def seam_argmin(metrics: jnp.ndarray) -> jnp.ndarray:
+    """Winning state on a seam metric vector (..., S) -> (...) int32.
+
+    Tie-break rule (pinned, tested): among equal-metric minimizers the
+    LOWEST state index wins — jnp.argmin's first-occurrence rule, identical
+    to the open-trellis frontier rule in kernels/ops._frontier.
+    """
+    return jnp.argmin(metrics, axis=-1).astype(jnp.int32)

@@ -18,6 +18,7 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.trellis import NEG_UNREACHABLE, ConvCode
 from repro.core.viterbi import _traceback
@@ -25,6 +26,7 @@ from repro.kernels import bcjr as _bcjr
 from repro.kernels import minplus as _minplus
 from repro.kernels import survivors as _surv
 from repro.kernels import texpand as _texpand
+from repro.kernels import tiling as _tiling
 from repro.kernels import viterbi_scan as _vscan
 from repro.kernels.common import lane_block, pad_axis_to, resolve_interpret
 from repro.kernels.metrics import FusedMetricPlan
@@ -249,6 +251,179 @@ def viterbi_decode_fused_packed(
     final_state, metric = _frontier(final_pm, terminated)
     bits = viterbi_traceback_op(plan.code, packed, final_state, T, interpret)
     return bits, metric
+
+
+# --------------------------------------------------------------------------- #
+# Time-parallel tiled decode: P tiles of one long block ride the lane axis.   #
+# --------------------------------------------------------------------------- #
+
+
+def _tile_lane_row(per_tile: np.ndarray, B: int, S: int = 1) -> jnp.ndarray:
+    """Per-tile (P,) int vector -> per-lane (1, B*P*S) row in the canonical
+    lane order (b outer, p middle, s inner)."""
+    v = np.tile(np.asarray(per_tile, np.int32), B)
+    if S > 1:
+        v = np.repeat(v, S)
+    return jnp.asarray(v.reshape(1, -1))
+
+
+def _tiled_weighted_decode(
+    code: ConvCode,
+    data_btf: jnp.ndarray,
+    weights: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    n_tiles: int,
+    overlap: Optional[int],
+    terminated: bool,
+    interpret: Optional[bool],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shared tiled-decode core (see viterbi_decode_tiled_op for the
+    contract).  data_btf: (B, T, F) user layout + (b0, b1, rb) weights."""
+    B, T, F = data_btf.shape
+    S = code.n_states
+    interpret = resolve_interpret(interpret)  # pinned across all launches
+    # any overlap covering the truncation depth is promoted to the exact
+    # two-pass seam resolution: strictly better and guaranteed bit-exact
+    exact = overlap is None or int(overlap) >= _tiling.truncation_depth(code)
+    tp = _tiling.plan_tiles(T, n_tiles, 0 if exact else int(overlap))
+    P, V = tp.n_tiles, tp.span
+    if P == 1:
+        # degenerate tiling: the plain packed pipeline IS the exact decode
+        final_pm, packed = viterbi_forward_weighted_op(
+            code, None, data_btf, weights, interpret
+        )
+        final_state, metric = _frontier(final_pm, terminated)
+        bits = viterbi_traceback_op(code, packed, final_state, T, interpret)
+        return bits, metric
+
+    b0, b1, rb = weights
+    lo_np, hi_np = tp.windows()
+    data = data_btf.transpose(1, 2, 0).astype(jnp.float32)  # (T, F, B)
+    # (V, F, B*P): every tile's span gathered onto the lane axis
+    tiles = data[jnp.asarray(tp.gather_index())].transpose(1, 2, 3, 0)
+    tiles = tiles.reshape(V, F, B * P)
+    eye = jnp.where(jnp.arange(S)[:, None] == jnp.arange(S)[None, :],
+                    0.0, NEG_UNREACHABLE)
+
+    if exact:
+        # pass 1 — per-tile (S, S) transfer maps: the S unit-entry-state
+        # problems of every tile also ride the lane axis (lanes (b, p, j)),
+        # so the map build costs one span-deep launch, not S of them
+        lanes1 = B * P * S
+        blk1 = lane_block(lanes1)
+        t1, _ = pad_axis_to(jnp.repeat(tiles, S, axis=2), 2, blk1, 0.0)
+        p1, _ = pad_axis_to(jnp.tile(eye, (1, B * P)), 1, blk1, NEG_UNREACHABLE)
+        l1, _ = pad_axis_to(_tile_lane_row(lo_np, B, S), 1, blk1, 0)
+        h1, _ = pad_axis_to(_tile_lane_row(hi_np, B, S), 1, blk1, 0)
+        fpm1, _ = _vscan.viterbi_scan_packed_window(
+            code, p1, t1, b0, b1, rb, l1, h1, blk1, interpret
+        )
+        # map[b, p, i, j] = best metric entering tile p in state i, leaving j
+        maps = fpm1[:, :lanes1].reshape(S, B, P, S).transpose(2, 1, 3, 0)
+        excl, total = _minplus.prefix_maps(maps)
+        entry = _minplus.tile_entry_metrics(excl)  # (P, B, S): exact seam pms
+        final_pm = total[:, 0, :]  # (B, S) full-sequence metrics from state 0
+        final_state, metric = _frontier(final_pm, terminated)
+        pm0 = entry.transpose(2, 1, 0).reshape(S, B * P)  # lanes (b, p)
+    else:
+        # truncated warm-up: tile 0 enters in state 0, later tiles enter
+        # "cold" (uniform 0) and converge over the overlap steps
+        is_first = jnp.asarray((np.arange(B * P) % P) == 0)[None, :]
+        pm0 = jnp.where(is_first, eye[:, :1], 0.0)  # (S, B*P)
+
+    # forward over all tiles at once — survivors for V steps per tile
+    lanes2 = B * P
+    blk2 = lane_block(lanes2)
+    t2, _ = pad_axis_to(tiles, 2, blk2, 0.0)
+    p2, _ = pad_axis_to(pm0, 1, blk2, NEG_UNREACHABLE)
+    l2, _ = pad_axis_to(_tile_lane_row(lo_np, B), 1, blk2, 0)
+    h2, _ = pad_axis_to(_tile_lane_row(hi_np, B), 1, blk2, 0)
+    fpm2, packed2 = _vscan.viterbi_scan_packed_window(
+        code, p2, t2, b0, b1, rb, l2, h2, blk2, interpret
+    )
+    packed2 = packed2[:, :, :lanes2]  # (ceil(V/32), S, B*P)
+    if not exact:
+        # approximate frontier: the last tile's span covers the block end;
+        # its metric is relative (warm-up re-zeroed the earlier history)
+        last_pm = fpm2[:, :lanes2].reshape(S, B, P)[:, :, -1].T  # (B, S)
+        final_state, metric = _frontier(last_pm, terminated)
+
+    # traceback — every tile from EVERY candidate exit state in one launch
+    # (lanes (b, p, s)); each lane also reports the state it entered on, so
+    # seam states resolve by chaining exit -> entry from the final frontier:
+    # exactly the walk the sequential traceback would have done, tie-breaks
+    # included
+    lanesT = B * P * S
+    blkT = lane_block(lanesT)
+    pkT, _ = pad_axis_to(jnp.repeat(packed2, S, axis=2), 2, blkT, 0)
+    stT, _ = pad_axis_to(_tile_lane_row(np.arange(S), B * P), 1, blkT, 0)
+    ov = tp.overlap
+    ltT, _ = pad_axis_to(jnp.full((1, lanesT), ov, jnp.int32), 1, blkT, 0)
+    htT, _ = pad_axis_to(_tile_lane_row(hi_np, B, S), 1, blkT, 0)
+    bits_all, ent = _surv.traceback_packed_window(
+        code, pkT, stT, ltT, htT, blkT, interpret
+    )
+    bits_r = bits_all[:V, :lanesT].reshape(V, B, P, S)
+    ent = ent[0, :lanesT].reshape(B, P, S)
+
+    # stitch: walk the seam chain backwards, keep each tile's core bits
+    state = final_state  # (B,) exit state of the last tile
+    pieces = []
+    for p in range(P - 1, -1, -1):
+        sel = bits_r[:, :, p, :]  # (V, B, S) bits per candidate exit state
+        piece = jnp.take_along_axis(sel, state[None, :, None], axis=2)[..., 0]
+        pieces.append(piece[ov:int(hi_np[p])].T)  # (B, tile_length(p))
+        state = jnp.take_along_axis(ent[:, p, :], state[:, None], axis=1)[:, 0]
+    bits = jnp.concatenate(pieces[::-1], axis=1)  # (B, T)
+    return bits, metric
+
+
+def viterbi_decode_tiled_op(
+    code: ConvCode,
+    bm_tables: jnp.ndarray,
+    n_tiles: int,
+    overlap: Optional[int] = None,
+    terminated: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Time-parallel tiled decode: split T into ``n_tiles`` tiles that all
+    run through the packed Pallas scan in one launch, resolve the tile seams,
+    and trace every tile back in parallel — O(T/P + seam work) wall-clock.
+
+    ``overlap`` picks the seam regime (kernels/tiling.py): ``None`` or any
+    value >= the truncation depth 5·K -> **exact** two-pass mode — per-tile
+    (S, S) transfer maps composed with the min-plus algebra of
+    kernels/minplus.py seed each tile's re-scan with the *exact* full-length
+    forward metrics, so survivors, bits, and metric are bit-exact vs
+    viterbi_decode_packed for integer-valued (hard) branch metrics (soft
+    metrics agree to float32 rounding, exactly the kernels/metrics.py
+    contract).  ``0 <= overlap < 5·K`` -> single-pass truncated warm-up:
+    each tile re-converges from a cold metric vector over ``overlap`` extra
+    steps — approximate, with BER drift bounded by the usual truncated
+    -traceback argument (tests/test_tiled.py pins a seeded bound).
+
+    bm_tables: (B, T, M) -> (bits (B, T), metric (B,)).
+    """
+    return _tiled_weighted_decode(
+        code, bm_tables, _vscan.table_weights(code), n_tiles, overlap,
+        terminated, interpret,
+    )
+
+
+def viterbi_decode_tiled_fused(
+    plan: FusedMetricPlan,
+    received: jnp.ndarray,
+    n_tiles: int,
+    overlap: Optional[int] = None,
+    terminated: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`viterbi_decode_tiled_op` fed raw received symbols — branch
+    metrics are computed in-kernel per tile (kernels/metrics.py), so the
+    (B, T, M) table never exists.  received: (B, T, n_out)."""
+    feats = plan.features(received, 0)
+    return _tiled_weighted_decode(
+        plan.code, feats, plan.folded(), n_tiles, overlap, terminated, interpret
+    )
 
 
 def bcjr_llr_op(

@@ -18,6 +18,16 @@ survey).  This module is that unit for the TPU pipeline:
       select bits are consumed by an in-register unrolled walk — the decoded
       (T, B) bits are the only tensor that ever reaches HBM.  Replaces the
       sequential XLA scan-of-gathers traceback for the fused decode path.
+
+  traceback_packed_window
+      The same walk restricted to a per-lane step window [lo, hi): outside
+      it the state passes through unchanged and the emitted bit is 0.  Also
+      returns the state each lane holds after the walk — the state at step
+      ``lo``, i.e. the lane's *entry* state.  The tiled decoder uses this to
+      run every tile's traceback (from every candidate exit state) in one
+      launch and then resolve tile seams by chaining exit -> entry states —
+      the exact survivor walk the sequential traceback would have done,
+      including its tie-breaks.
 """
 from __future__ import annotations
 
@@ -105,6 +115,96 @@ def _make_traceback_kernel(code: ConvCode, T: int):
         out_ref[...] = jnp.concatenate(out_rows[::-1], axis=0)
 
     return kernel
+
+
+def _make_traceback_window_kernel(code: ConvCode):
+    """Traceback over packed words with a per-lane [lo, hi) walk window."""
+    K = code.constraint
+    half = code.n_states // 2
+
+    def kernel(packed_ref, fs_ref, lo_ref, hi_ref, out_ref, entry_ref, state_scratch):
+        i = pl.program_id(1)
+        W = pl.num_programs(1)
+
+        @pl.when(i == 0)
+        def _init():
+            state_scratch[...] = fs_ref[...]
+
+        w = W - 1 - i  # time-reversed word walk
+        word = packed_ref[0]  # (S, bB) uint32
+        state = state_scratch[...]  # (1, bB) int32
+        lo = lo_ref[...]  # (1, bB) int32
+        hi = hi_ref[...]  # (1, bB) int32
+        rows = jax.lax.broadcasted_iota(jnp.int32, word.shape, 0)
+        out_rows = []
+        for p in range(PACK_BITS - 1, -1, -1):
+            t = w * PACK_BITS + p
+            # per-lane window (vs the static tail guard of the full-T
+            # kernel): a lane's walk only consumes steps lo <= t < hi
+            valid = (t >= lo) & (t < hi)
+            onehot = rows == state
+            bit_p = ((word >> jnp.uint32(p)) & jnp.uint32(1)).astype(jnp.int32)
+            j = jnp.sum(jnp.where(onehot, bit_p, 0), axis=0, keepdims=True)
+            u = state >> (K - 2)  # input bit that produced this state
+            v = state & (half - 1) if half > 1 else jnp.zeros_like(state)
+            prev = 2 * v + j
+            out_rows.append(jnp.where(valid, u, 0))
+            state = jnp.where(valid, prev, state)
+        state_scratch[...] = state
+        # VMEM-resident out tile: the value of the *last* grid visit — the
+        # state after the whole walk, i.e. the state at step lo — lands in HBM
+        entry_ref[...] = state
+        out_ref[...] = jnp.concatenate(out_rows[::-1], axis=0)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def traceback_packed_window(
+    code: ConvCode,
+    packed: jnp.ndarray,
+    final_state: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Windowed traceback: walk packed survivors through per-lane [lo, hi).
+
+    Args:
+      packed: (W, S, B) uint32 survivor words (kernel layout).
+      final_state: (1, B) int32 state each lane starts walking from (its
+        state at step ``hi``).
+      lo, hi: (1, B) int32 per-lane walk windows; steps outside emit bit 0
+        and leave the state untouched.
+    Returns:
+      bits: (32*W, B) int32 decoded bits (0 outside the window).
+      entry_state: (1, B) int32 the state each lane reached at step ``lo`` —
+      for a time tile, the state on the seam with the previous tile.
+    """
+    W, S, B = packed.shape
+    grid = (B // block_b, W)
+    bits, entry = pl.pallas_call(
+        _make_traceback_window_kernel(code),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, block_b), lambda b, i: (W - 1 - i, 0, b)),
+            pl.BlockSpec((1, block_b), lambda b, i: (0, b)),
+            pl.BlockSpec((1, block_b), lambda b, i: (0, b)),
+            pl.BlockSpec((1, block_b), lambda b, i: (0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((PACK_BITS, block_b), lambda b, i: (W - 1 - i, b)),
+            pl.BlockSpec((1, block_b), lambda b, i: (0, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((W * PACK_BITS, B), jnp.int32),
+            jax.ShapeDtypeStruct((1, B), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_b), jnp.int32)],
+        interpret=resolve_interpret(interpret),
+    )(packed, final_state.astype(jnp.int32), lo.astype(jnp.int32), hi.astype(jnp.int32))
+    return bits, entry
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))

@@ -27,6 +27,13 @@ the old block/carry pair were byte-identical except for their init path:
                  ``(ceil(T/32), S, B)`` — a 32× smaller survivor tensor that
                  kernels/survivors.py traces back without ever unpacking in
                  HBM.
+  validity       ``windowed=True`` adds per-lane int32 ``(lo, hi)`` rows: a
+                 lane only runs ACS on steps ``lo <= t < hi`` and passes its
+                 path metrics through unchanged (survivor bit forced 0)
+                 elsewhere.  This is what lets the tiled decoder fold P
+                 time-tiles of *different* effective lengths (front warm-up,
+                 ragged T%P / T%32 tails) into one uniform batched launch —
+                 see kernels/tiling.py.
 
 Per grid step:  data tile (F, bB) streams in;  bp tile (S, bB) — or, packed,
                 1/32nd of one — streams out;  pm (S, bB) lives in scratch.
@@ -45,21 +52,21 @@ from repro.core.trellis import NEG_UNREACHABLE, ConvCode
 from repro.kernels.common import PACK_BITS, resolve_interpret
 
 
-def _make_scan_kernel(carry: bool, pack: bool):
-    """Build the ACS scan kernel for one (init path, survivor format) combo.
+def _make_scan_kernel(carry: bool, pack: bool, windowed: bool = False):
+    """Build the ACS scan kernel for one (init path, survivor format,
+    validity) combo.
 
-    Ref order: p0, p1, b0, b1, rb, [pm0], data, out_bp, out_pm, pm_scratch,
-    [pack_scratch].
+    Ref order: p0, p1, b0, b1, rb, [pm0], [lo, hi], data, out_bp, out_pm,
+    pm_scratch, [pack_scratch].
     """
 
     def kernel(*refs):
-        if carry:
-            p0_ref, p1_ref, b0_ref, b1_ref, rb_ref, pm0_ref, data_ref = refs[:7]
-            refs = refs[7:]
-        else:
-            p0_ref, p1_ref, b0_ref, b1_ref, rb_ref, data_ref = refs[:6]
-            refs = refs[6:]
-        out_bp_ref, out_pm_ref, pm_scratch = refs[:3]
+        refs = list(refs)
+        p0_ref, p1_ref, b0_ref, b1_ref, rb_ref = refs[:5]
+        del refs[:5]
+        pm0_ref = refs.pop(0) if carry else None
+        lo_ref, hi_ref = (refs.pop(0), refs.pop(0)) if windowed else (None, None)
+        data_ref, out_bp_ref, out_pm_ref, pm_scratch = refs[:4]
         t = pl.program_id(1)
 
         @pl.when(t == 0)
@@ -88,11 +95,18 @@ def _make_scan_kernel(carry: bool, pack: bool):
         new_pm = jnp.where(take1, cand1, cand0)
         # clamp: unreachable-state metrics grow by BIG per matmul otherwise
         new_pm = jnp.minimum(new_pm, NEG_UNREACHABLE)
+        if windowed:
+            # outside a lane's [lo, hi) validity window the metrics pass
+            # through untouched and the survivor bit is forced to 0 — the
+            # step simply does not exist for that lane
+            valid = (t >= lo_ref[...]) & (t < hi_ref[...])  # (1, bB)
+            take1 = take1 & valid
+            new_pm = jnp.where(valid, new_pm, pm)
         pm_scratch[...] = new_pm
         out_pm_ref[...] = new_pm.astype(out_pm_ref.dtype)
 
         if pack:
-            pack_scratch = refs[3]
+            pack_scratch = refs[4]
             pos = (t % PACK_BITS).astype(jnp.uint32)
             bit = take1.astype(jnp.uint32) << pos
             # pos == 0 starts a fresh word (the masked read of uninitialized
@@ -119,8 +133,9 @@ def _scan_call(
     block_b: int,
     interpret: Optional[bool],
     pack: bool,
+    window: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Shared pallas_call plumbing for all four scan variants."""
+    """Shared pallas_call plumbing for all the scan variants."""
     T, F, B = data.shape
     S = code.n_states
     P0, P1 = code.select_matrices
@@ -132,6 +147,11 @@ def _scan_call(
     if carry:
         in_specs.append(pl.BlockSpec((S, block_b), lambda b, t: (0, b)))
         args.append(pm0)
+    if window is not None:
+        lo, hi = window
+        for w in (lo, hi):
+            in_specs.append(pl.BlockSpec((1, block_b), lambda b, t: (0, b)))
+            args.append(w.astype(jnp.int32))
     in_specs.append(pl.BlockSpec((1, F, block_b), lambda b, t: (t, 0, b)))
     args.append(data)
     if pack:
@@ -147,7 +167,7 @@ def _scan_call(
     if pack:
         scratch.append(pltpu.VMEM((S, block_b), jnp.uint32))
     bps, final_pm = pl.pallas_call(
-        _make_scan_kernel(carry, pack),
+        _make_scan_kernel(carry, pack, windowed=window is not None),
         grid=grid,
         in_specs=in_specs,
         out_specs=[bp_spec, pl.BlockSpec((S, block_b), lambda b, t: (0, b))],
@@ -250,3 +270,33 @@ def viterbi_scan_packed_carry(
     """:func:`viterbi_scan_packed` seeded from carried path metrics — the
     streaming hot path (pm0: (S, B) float32 entering the chunk)."""
     return _scan_call(code, pm0, data, b0, b1, rb, block_b, interpret, pack=True)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 8, 9))
+def viterbi_scan_packed_window(
+    code: ConvCode,
+    pm0: jnp.ndarray,
+    data: jnp.ndarray,
+    b0: jnp.ndarray,
+    b1: jnp.ndarray,
+    rb: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    block_b: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`viterbi_scan_packed_carry` with a per-lane step-validity window
+    — the tiled-decode launch (kernels/tiling.py folds P time-tiles into the
+    lane axis; each lane's tile covers a different slice of the sequence).
+
+    Args:
+      pm0: (S, B) float32 metrics entering each lane's window (held
+        untouched through any leading invalid steps).
+      lo, hi: (1, B) int32 — lane b runs ACS only on steps lo[b] <= t <
+        hi[b]; elsewhere the metrics pass through and the survivor bit is 0.
+    Returns: final_pm (S, B) float32; packed (ceil(T/32), S, B) uint32.
+    """
+    return _scan_call(
+        code, pm0, data, b0, b1, rb, block_b, interpret, pack=True,
+        window=(lo, hi),
+    )

@@ -15,6 +15,12 @@ decode can be split across the ``model`` mesh axis:
 Communication = n · S² floats per batch element — independent of T.  This is
 the TPU-mesh analogue of the paper's "execute the custom instruction in
 parallel to other independent instructions" future-work note.
+
+The seam calculus here (per-chunk state maps composed with (min,+) prefixes)
+is the shared algebra of kernels/minplus.py; the single-device analogue of
+this decoder is the ``tiled`` backend (kernels/ops.viterbi_decode_tiled_op),
+which folds the tiles into one Pallas launch's lane axis instead of across
+a mesh — prefer it when no model-axis mesh is available.
 """
 from __future__ import annotations
 
@@ -27,8 +33,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.acs import acs_step
 from repro.core.trellis import NEG_UNREACHABLE, ConvCode
-from repro.core.viterbi import _traceback, minplus_matmul
+from repro.core.viterbi import _traceback
 from repro.decode.spec import CodecSpec
+from repro.kernels.minplus import compose_maps, identity_map
 
 
 def _local_transfer_and_bps(code: ConvCode, bm_local: jnp.ndarray):
@@ -73,13 +80,12 @@ def viterbi_decode_seqparallel(
         mat = _local_transfer_and_bps(code, bm_loc)  # (B, S, S)
         mats = jax.lax.all_gather(mat, axis)  # (n, B, S, S)
 
-        # exclusive (min,+) prefix over shards, computed redundantly per shard
-        eye = jnp.where(jnp.eye(S, dtype=bool), 0.0, NEG_UNREACHABLE)
-        eye = jnp.broadcast_to(eye, (B, S, S))
+        # exclusive (min,+) prefix over shards, computed redundantly per
+        # shard — the shared state-map algebra of kernels/minplus.py
+        eye = identity_map(S, (B,))
 
         def pref_step(acc, m):
-            nxt = jnp.minimum(minplus_matmul(acc, m), NEG_UNREACHABLE)
-            return nxt, acc  # emit the *exclusive* prefix
+            return compose_maps(acc, m), acc  # emit the *exclusive* prefix
 
         total, excl = jax.lax.scan(pref_step, eye, mats)
         my_excl = excl[idx]  # (B, S, S)

@@ -1,8 +1,8 @@
-"""BENCH_viterbi.json schema gate (v6): the validator the CI bench-smoke job
+"""BENCH_viterbi.json schema gate (v7): the validator the CI bench-smoke job
 runs must accept well-formed payloads — including the ``stream.online``,
-telemetry-acceptance ``obs``, SISO ``turbo``, and fault-injection
-``stream.resilience`` sections — and reject the invariants it exists to
-guard."""
+telemetry-acceptance ``obs``, SISO ``turbo``, fault-injection
+``stream.resilience``, and time-parallel ``long_blocks`` sections — and
+reject the invariants it exists to guard."""
 import copy
 
 import pytest
@@ -109,6 +109,38 @@ def _payload():
             },
             "bit_exact_with_telemetry": True,
         },
+        "long_blocks": {
+            "workload": {"constraint": 3, "n_states": 4, "metric": "hard",
+                         "batch": 1, "Ts": [2048, 8192],
+                         "tile_counts": [4, 16]},
+            "by_T": {
+                "2048": {
+                    "sequential": {"time_s": 0.45, "bits_per_s": 4551.0},
+                    "tiled": {
+                        "4": {"time_s": 0.30, "bits_per_s": 6826.0,
+                              "bit_exact": True,
+                              "speedup_vs_sequential": 1.5},
+                        "16": {"time_s": 0.21, "bits_per_s": 9752.0,
+                               "bit_exact": True,
+                               "speedup_vs_sequential": 2.14},
+                    },
+                    "best_tiles": 16,
+                    "best_speedup_vs_sequential": 2.14,
+                },
+                "8192": {
+                    "sequential": {"time_s": 0.48, "bits_per_s": 17066.0},
+                    "tiled": {
+                        "16": {"time_s": 0.28, "bits_per_s": 29257.0,
+                               "bit_exact": True,
+                               "speedup_vs_sequential": 1.71},
+                    },
+                    "best_tiles": 16,
+                    "best_speedup_vs_sequential": 1.71,
+                },
+            },
+            "crossover_T_vs_sequential": 2048,
+            "note": "measured wall-clock; monotonicity recorded, not asserted",
+        },
         "turbo": {
             "workload": {
                 "code": "rsc_k4_lte", "interleaver": "qpp(512,31,64)",
@@ -129,8 +161,8 @@ def _payload():
     }
 
 
-def test_schema_is_v6():
-    assert BENCH_SCHEMA == "bench_viterbi/v6"
+def test_schema_is_v7():
+    assert BENCH_SCHEMA == "bench_viterbi/v7"
 
 
 def test_check_schema_accepts_valid_payload():
@@ -142,6 +174,7 @@ def test_check_schema_accepts_payload_without_optional_sections():
     del payload["stream"]
     del payload["obs"]
     del payload["turbo"]
+    del payload["long_blocks"]  # pre-v7 content is fine
     check_schema(payload)
     payload = _payload()
     del payload["stream"]["online"]  # by_shards alone (pre-v3 content) is fine
@@ -243,6 +276,41 @@ def test_check_schema_rejects_broken_obs_sections(mutate):
     ],
 )
 def test_check_schema_rejects_broken_resilience_sections(mutate):
+    payload = copy.deepcopy(_payload())
+    mutate(payload)
+    with pytest.raises((AssertionError, KeyError)):
+        check_schema(payload)
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        # the exact seam regime may never trade correctness for speed
+        lambda p: p["long_blocks"]["by_T"]["2048"]["tiled"]["16"].__setitem__(
+            "bit_exact", False
+        ),
+        lambda p: p["long_blocks"]["by_T"]["2048"]["tiled"]["4"].__setitem__(
+            "time_s", 0.0
+        ),
+        lambda p: p["long_blocks"]["by_T"]["8192"]["sequential"].__setitem__(
+            "time_s", -0.1
+        ),
+        # crossover claimed at a T where the best tiled config does not win
+        lambda p: p["long_blocks"]["by_T"]["2048"].__setitem__(
+            "best_speedup_vs_sequential", 0.9
+        ),
+        # crossover later than a T that already won
+        lambda p: p["long_blocks"].__setitem__(
+            "crossover_T_vs_sequential", 8192
+        ),
+        # best_tiles must point at a recorded tiled row
+        lambda p: p["long_blocks"]["by_T"]["8192"].__setitem__("best_tiles", 32),
+        lambda p: p["long_blocks"]["by_T"]["2048"].__setitem__("tiled", {}),
+        lambda p: p["long_blocks"].pop("by_T"),
+        lambda p: p["long_blocks"].pop("crossover_T_vs_sequential"),
+    ],
+)
+def test_check_schema_rejects_broken_long_blocks_sections(mutate):
     payload = copy.deepcopy(_payload())
     mutate(payload)
     with pytest.raises((AssertionError, KeyError)):

@@ -32,7 +32,7 @@ from repro.decode import (
 GRID_CODES = {"k3": CODE_K3_STD, "k7": CODE_K7_NASA}
 EXPECTED_BACKENDS = (
     "bcjr", "fused", "fused_packed", "parallel", "seqparallel", "sequential",
-    "sharded_stream", "streaming", "turbo",
+    "sharded_stream", "streaming", "tiled", "turbo",
 )
 #: the Viterbi backends the bit-exact equivalence grid sweeps (same family,
 #: same algebra); SISO backends decode a different family and are excluded.
@@ -193,10 +193,20 @@ def test_planner_picks_fused_packed_for_short_batched_blocks():
     assert "short batched block" in plan.reason
 
 
-def test_planner_picks_parallel_for_long_blocks_without_mesh():
+def test_planner_picks_tiled_for_long_blocks_without_mesh():
     plan = plan_decode(CodecSpec(), (4, LONG_BLOCK_T))
-    assert plan.backend == "parallel"
+    assert plan.backend == "tiled"
     assert "no mesh" in plan.reason
+    assert "long-conv-tiled" in plan.reason
+    assert plan.ctx.tiles is not None and plan.ctx.tiles >= 1
+
+
+def test_planner_honors_pinned_tile_count():
+    ctx = DecodeContext(tiles=4)
+    plan = plan_decode(CodecSpec(), (4, LONG_BLOCK_T), ctx=ctx)
+    assert plan.backend == "tiled"
+    assert plan.ctx.tiles == 4
+    assert "pinned by caller" in plan.reason
 
 
 def test_planner_picks_seqparallel_for_long_blocks_on_mesh(mesh11):
@@ -205,11 +215,11 @@ def test_planner_picks_seqparallel_for_long_blocks_on_mesh(mesh11):
 
 
 def test_planner_falls_back_when_mesh_lacks_axis():
-    """A data-parallel-only mesh (no 'model' axis) must fall back to
-    'parallel', not crash on the axis lookup."""
+    """A data-parallel-only mesh (no 'model' axis) must fall back to the
+    single-device time-parallel route, not crash on the axis lookup."""
     mesh = jax.make_mesh((1,), ("data",))
     plan = plan_decode(CodecSpec(), (4, 2 * LONG_BLOCK_T), mesh=mesh)
-    assert plan.backend == "parallel"
+    assert plan.backend == "tiled"
     assert "lacks axis" in plan.reason
 
 

@@ -43,8 +43,10 @@ K7_BATCH = 16
 K7_INFO_BITS = 96
 K7_FLIPS = (0.02, 0.06, 0.11)  # clean floor -> waterfall knee -> lossy region
 #: every decode path whose quality the file pins: the oracle, the (min,+)
-#: scan, the packed Pallas pipeline, and the truncated-window streamer.
-K7_BACKENDS = ("sequential", "parallel", "fused_packed", "streaming")
+#: scan, the packed Pallas pipeline, the truncated-window streamer, and the
+#: time-parallel tiled decoder (P=4 exact seams — must sit exactly on the
+#: sequential curve).
+K7_BACKENDS = ("sequential", "parallel", "fused_packed", "streaming", "tiled")
 
 
 def compute_k7_payload():
@@ -60,7 +62,8 @@ def compute_k7_payload():
         bm = spec.branch_metrics(rx)
         row = {}
         for name in K7_BACKENDS:
-            res = get_decoder(name)(spec, bm, ctx=DecodeContext(chunk=16))
+            ctx = DecodeContext(chunk=16, tiles=4 if name == "tiled" else None)
+            res = get_decoder(name)(spec, bm, ctx=ctx)
             row[name] = float((np.asarray(res.info_bits) != truth).mean())
         grid[f"{flip:g}"] = row
     return {

@@ -329,7 +329,9 @@ def test_planner_conv_selection_is_unchanged_by_siso_families():
     from repro.decode import LONG_BLOCK_T, DecodeContext
 
     assert plan_decode(CodecSpec(), (32, 256)).backend == "fused_packed"
-    assert plan_decode(CodecSpec(), (4, LONG_BLOCK_T)).backend == "parallel"
+    # long blocks without a mesh route to ``tiled`` since the time-parallel
+    # backend landed; the SISO families still leave that choice untouched.
+    assert plan_decode(CodecSpec(), (4, LONG_BLOCK_T)).backend == "tiled"
     ctx = DecodeContext(streaming=True, stream_depth=15)
     assert plan_decode(CodecSpec(), (1, 4096), ctx=ctx).backend == "streaming"
 
