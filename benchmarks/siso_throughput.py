@@ -18,6 +18,7 @@ only); on a real TPU the same code runs the compiled kernels.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 from pathlib import Path
@@ -46,12 +47,10 @@ def _load_bench() -> dict:
     from viterbi_throughput import BENCH_SCHEMA
 
     if BENCH_JSON.exists():
-        try:
+        with contextlib.suppress(ValueError):  # corrupt artifact: rebuild
             bench = json.loads(BENCH_JSON.read_text())
             bench["schema"] = BENCH_SCHEMA
             return bench
-        except ValueError:
-            pass
     return {"schema": BENCH_SCHEMA,
             "generated_by": "benchmarks/siso_throughput.py"}
 

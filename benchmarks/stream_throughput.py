@@ -72,6 +72,7 @@ compiled kernels.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -147,12 +148,10 @@ def _load_bench() -> dict:
     from viterbi_throughput import BENCH_SCHEMA
 
     if BENCH_JSON.exists():
-        try:
+        with contextlib.suppress(ValueError):  # corrupt artifact: rebuild
             bench = json.loads(BENCH_JSON.read_text())
             bench["schema"] = BENCH_SCHEMA
             return bench
-        except ValueError:
-            pass
     return {"schema": BENCH_SCHEMA,
             "generated_by": "benchmarks/stream_throughput.py"}
 

@@ -69,8 +69,12 @@ log = get_logger("bench.viterbi")
 #: ``long_blocks`` section (--long-blocks: sequential vs time-parallel tiled
 #: decode on single long K=3 streams — time vs tile count P, per-row
 #: bit-exactness, and the crossover T where tiling first beats sequential;
-#: speedup-vs-P monotonicity is recorded, not asserted).
-BENCH_SCHEMA = "bench_viterbi/v7"
+#: speedup-vs-P monotonicity is recorded, not asserted); v8 adds the optional
+#: top-level ``analysis`` section (analysis_report.py: repo-rule lint result,
+#: jaxpr contract trace of every registered hot path, pragma census, and the
+#: --sanitize steady-state guard probe — one user host sync per tick, zero
+#: steady recompiles, bit-exact under guards).
+BENCH_SCHEMA = "bench_viterbi/v8"
 DEFAULT_OUT = Path(__file__).resolve().parent / "results" / "BENCH_viterbi.json"
 
 
@@ -292,7 +296,7 @@ def run(quick: bool = True, out: Path = DEFAULT_OUT,
             existing = json.loads(out.read_text())
         except (ValueError, OSError):
             existing = {}
-        preserved = ["stream", "obs", "turbo"]
+        preserved = ["stream", "obs", "turbo", "analysis"]
         if not long_blocks:
             preserved.append("long_blocks")
         for section in preserved:
@@ -434,6 +438,33 @@ def check_schema(payload: Dict) -> None:
             for T, r in lb["by_T"].items():
                 if int(T) < int(cx):
                     assert r["best_speedup_vs_sequential"] <= 1.0
+    # optional static-analysis section (analysis_report.py): v8
+    ana = payload.get("analysis")
+    if ana is not None:
+        for field in ("lint", "jaxpr", "pragmas", "stream_pragmas"):
+            assert field in ana, f"analysis missing {field}"
+        lint = ana["lint"]
+        assert lint["files"] > 0 and lint["rules"] >= 5
+        # the whole point of the section: the repo lints clean
+        assert lint["violations"] == 0, lint.get("violation_lines")
+        jx = ana["jaxpr"]
+        assert jx["violations"] == 0, jx
+        # every registered backend must be traced by a contract — a new
+        # backend that lands without a hot-path contract fails the gate
+        assert jx["backends_traced"] == jx["backends_registered"], jx
+        assert jx["contracts"] and len(jx["contracts"]) >= jx["backends_traced"]
+        for name, row in jx["contracts"].items():
+            assert row["equations"] > 0, f"contract {name} traced nothing"
+            assert row["violations"] == 0, f"contract {name} has violations"
+        # exactly one sanctioned host sync in the streaming hot path
+        assert ana["stream_pragmas"] == {"RPR003": 1}, ana["stream_pragmas"]
+        san = ana.get("sanitize")
+        if san is not None:
+            assert san["ticks"] >= 1
+            assert all(s == 1 for s in san["host_syncs_per_tick"]), san
+            assert san["steady_recompiles"] == 0, san
+            assert san["bit_exact_vs_unguarded"] is True
+            assert san["transfer_guard"] == "disallow" and san["debug_nans"]
     # optional SISO turbo section (siso_throughput.py): v5
     turbo = payload.get("turbo")
     if turbo is not None:

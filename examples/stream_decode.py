@@ -64,7 +64,7 @@ def main():
         sched.submit(f"station-{i}", sbm[0])
     results = sched.run()
     exact = 0
-    for sid, (ib, sbm) in truth.items():
+    for sid, (_ib, sbm) in truth.items():
         ref, _ = viterbi_decode(code, sbm)
         exact += int((results[sid][0] == np.asarray(ref[0])).all())
     s = sched.stats
@@ -111,7 +111,7 @@ def main():
         online.step()
     report = online.load_report()
     ok = 0
-    for sid, (ib, bm) in tables.items():
+    for sid, (_ib, bm) in tables.items():
         ref, _ = viterbi_decode(code, bm[None])
         ok += int((online.pop_result(sid)[0] == np.asarray(ref[0])).all())
     print(f"  backpressure throttled the feed {throttled}x "

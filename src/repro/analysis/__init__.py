@@ -1,0 +1,69 @@
+"""Static analysis & runtime contracts for the decode hot paths.
+
+Three layers:
+
+  * :mod:`repro.analysis.jaxpr_lint` — declarative :class:`Contract`s
+    checked equation-by-equation against traced jaxprs (host callbacks,
+    collectives, dtype policy, output bounds).
+  * :mod:`repro.analysis.repo_lint` — AST rules RPR001–RPR005 for the
+    conventions the codebase relies on (no print, resolve_interpret
+    routing, hot-path host-sync hygiene, registry/test coverage,
+    explicit backend family), with line-scoped ``# repr-lint: allow[...]``
+    pragmas.
+  * :mod:`repro.analysis.guards` — the :func:`sanitized` runtime bundle
+    (transfer guard + debug-NaNs + recompile and host-sync counters).
+
+CLI: ``python -m repro.analysis src`` (add ``--jaxpr`` to also trace every
+registered hot path).  Exit status 0 means clean.
+"""
+from repro.analysis.guards import (
+    SanitizerReport,
+    SanitizerSnapshot,
+    compile_count,
+    sanitized,
+)
+from repro.analysis.hotpaths import (
+    HotPath,
+    check_hot_paths,
+    flatten_violations,
+    hot_path_catalog,
+)
+from repro.analysis.jaxpr_lint import (
+    COLLECTIVE_PRIMS,
+    HOST_CALLBACK_PRIMS,
+    Contract,
+    ContractViolation,
+    check_jaxpr,
+    trace_contract,
+)
+from repro.analysis.repo_lint import (
+    GOLDEN_BER_EXEMPT,
+    RULES,
+    LintViolation,
+    count_pragmas,
+    find_pragmas,
+    lint_paths,
+)
+
+__all__ = [
+    "COLLECTIVE_PRIMS",
+    "Contract",
+    "ContractViolation",
+    "GOLDEN_BER_EXEMPT",
+    "HOST_CALLBACK_PRIMS",
+    "HotPath",
+    "LintViolation",
+    "RULES",
+    "SanitizerReport",
+    "SanitizerSnapshot",
+    "check_hot_paths",
+    "check_jaxpr",
+    "compile_count",
+    "count_pragmas",
+    "find_pragmas",
+    "flatten_violations",
+    "hot_path_catalog",
+    "lint_paths",
+    "sanitized",
+    "trace_contract",
+]

@@ -1,0 +1,81 @@
+"""``python -m repro.analysis [paths...]`` — run the repo-rule linter
+(and, with ``--jaxpr``, the jaxpr contract lint over every registered hot
+path).  Exit status: 0 clean, 1 violations, 2 usage error.
+
+This is the CI `static-analysis` entry point; keep its output stable:
+one line per violation, a final ``summary`` line with counts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.repo_lint import RULES, count_pragmas, lint_paths
+from repro.obs.log import get_logger
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-rule linter (RPR001-RPR005) + jaxpr contract lint",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src"],
+        help="files or directories to lint (default: src)",
+    )
+    parser.add_argument(
+        "--jaxpr", action="store_true",
+        help="also trace every registered hot path against its Contract "
+             "(imports jax and the decode registry; slower)",
+    )
+    parser.add_argument(
+        "--no-repo-rules", action="store_true",
+        help="skip the cross-file rules (RPR004 registry/test coverage)",
+    )
+    parser.add_argument("--quiet", action="store_true")
+    args = parser.parse_args(argv)
+    log = get_logger("analysis.cli", quiet=args.quiet)
+
+    paths = [Path(p) for p in args.paths]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        log.error("no such path", paths=",".join(map(str, missing)))
+        return 2
+
+    violations, n_files = lint_paths(paths, repo_rules=not args.no_repo_rules)
+    for v in violations:
+        log.warning(str(v))
+
+    n_contract = 0
+    n_paths_traced = 0
+    if args.jaxpr:
+        from repro.analysis.hotpaths import check_hot_paths
+
+        report = check_hot_paths()
+        n_paths_traced = len(report)
+        for name, entry in sorted(report.items()):
+            for v in entry["violations"]:
+                n_contract += 1
+                log.warning(str(v))
+            log.info(
+                "traced", path=name, backend=entry["backend"],
+                equations=entry["equations"],
+                violations=len(entry["violations"]),
+            )
+
+    pragmas = count_pragmas(paths)
+    log.info(
+        "summary",
+        files=n_files,
+        rules=len(RULES),
+        lint_violations=len(violations),
+        hot_paths_traced=n_paths_traced,
+        contract_violations=n_contract,
+        pragmas=sum(pragmas.values()),
+    )
+    return 1 if (violations or n_contract) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,232 @@
+"""Runtime sanitizer guards for hot-path code.
+
+:func:`sanitized` bundles the three runtime checks the repo's invariants
+need, as one context manager:
+
+  * ``jax.transfer_guard("disallow")`` — any *implicit* host<->device
+    transfer inside the guarded region raises immediately (explicit
+    ``jax.device_put`` / ``np.asarray`` stay legal: on CPU a device->host
+    read is zero-copy and invisible to the transfer guard, which is why the
+    guard alone was never enough and the host-sync counter below exists).
+  * ``jax.debug_nans`` — a NaN produced by any guarded computation raises
+    at the producing primitive instead of corrupting a path metric rows
+    later.
+  * a recompilation counter — every XLA ``backend_compile`` inside the
+    region is counted via ``jax.monitoring``; a steady-state tick that
+    recompiles is a shape-leak bug, and the spy-test idiom this replaces
+    could not see it at all.
+  * a host-sync counter — counts device->host materializations by hooking
+    the two routes a ``jax.Array`` crosses to numpy: the module-level
+    ``np.asarray``/``np.array`` entry points (the buffer-protocol path that
+    bypasses ``__array__``) and the ``ArrayImpl._value`` cache property
+    (the ``float()`` / ``.item()`` / implicit-conversion path).  Counting
+    ``_value`` only when ``_npy_value`` is unset keeps cached re-reads free,
+    matching the "one sync per tick" contract precisely.
+
+The counters are process-global and the numpy patch is process-wide, so the
+guard is deliberately **not** reentrant or thread-safe — it is a test/bench
+harness, not a production wrapper.  Nesting raises.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import sys
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["SanitizerReport", "SanitizerSnapshot", "sanitized", "compile_count"]
+
+_COMPILE_EVENT_SUFFIX = "backend_compile_duration"
+_compile_events = 0
+_listener_installed = False
+_lock = threading.Lock()
+_active = False
+
+
+def _on_event(name: str, secs: float, **_kw) -> None:
+    global _compile_events
+    if name.endswith(_COMPILE_EVENT_SUFFIX):
+        _compile_events += 1
+
+
+def _install_compile_listener() -> None:
+    """Install the global compile-event listener exactly once.
+
+    jax.monitoring has no public unregister API, so the listener stays for
+    the life of the process; it is a single integer increment per compile,
+    which is noise next to the compile itself."""
+    global _listener_installed
+    with _lock:
+        if not _listener_installed:
+            jax.monitoring.register_event_duration_secs_listener(_on_event)
+            _listener_installed = True
+
+
+def compile_count() -> int:
+    """Process-wide count of backend compiles seen by the listener."""
+    return _compile_events
+
+
+class SanitizerReport:
+    """Filled in while a :func:`sanitized` region runs.
+
+    ``host_syncs`` and ``recompiles`` are live counters — readable mid-region
+    (e.g. snapshot between ticks to assert a per-tick bound) and final once
+    the region exits (``recompiles`` freezes at its exit value)."""
+
+    def __init__(
+        self,
+        transfer_guard: Optional[str] = "disallow",
+        debug_nans: bool = True,
+        compile_base: int = 0,
+    ):
+        self.host_syncs = 0
+        self.transfer_guard = transfer_guard
+        self.debug_nans = debug_nans
+        self._compile_base = compile_base
+        self._frozen_recompiles: Optional[int] = None
+
+    @property
+    def recompiles(self) -> int:
+        if self._frozen_recompiles is not None:
+            return self._frozen_recompiles
+        return _compile_events - self._compile_base
+
+    def _freeze(self) -> None:
+        self._frozen_recompiles = _compile_events - self._compile_base
+
+    def snapshot(self) -> "SanitizerSnapshot":
+        return SanitizerSnapshot(
+            host_syncs=self.host_syncs, recompiles=self.recompiles
+        )
+
+    @contextlib.contextmanager
+    def allow_transfers(self) -> Iterator[None]:
+        """Explicitly sanctioned control-plane window: suspends the transfer
+        guard (a nested ``jax.transfer_guard("allow")`` overrides the outer
+        disallow) while the counters keep running.  Use around setup that is
+        *allowed* to move data — stream admission, warm-up compiles — so the
+        steady-state region stays fully guarded."""
+        with jax.transfer_guard("allow"):
+            yield
+
+
+@dataclasses.dataclass(frozen=True)
+class SanitizerSnapshot:
+    """Point-in-time copy of the live counters."""
+
+    host_syncs: int
+    recompiles: int
+
+
+def _caller_is_jax() -> bool:
+    """True when the frame initiating a host materialization is jax's own
+    machinery (e.g. debug_nans' ``_check_special`` reads every computation
+    output back to check it) — those are sanitizer overhead, not user
+    syncs, and counting them would make ``debug_nans`` and an exact
+    host-sync bound mutually exclusive."""
+    frame = sys._getframe(2)
+    name = frame.f_globals.get("__name__", "")
+    return name == "jax" or name.startswith("jax.")
+
+
+class _HostSyncHooks:
+    """Patch np.asarray/np.array and ArrayImpl._value to count syncs."""
+
+    def __init__(self, report: SanitizerReport):
+        self.report = report
+        self._orig_asarray = np.asarray
+        self._orig_array = np.array
+        from jax._src.array import ArrayImpl
+
+        self._array_impl = ArrayImpl
+        self._orig_value = ArrayImpl._value
+
+    def _wrap_np(self, orig):
+        report = self.report
+
+        def counting(obj, *args, **kwargs):
+            if isinstance(obj, jax.Array) and not _caller_is_jax():
+                report.host_syncs += 1
+            return orig(obj, *args, **kwargs)
+
+        # tests that interpose their own spy above this wrapper use _orig to
+        # route jax-internal calls around the counter (their frame would
+        # otherwise defeat the caller check)
+        counting._orig = orig
+        return counting
+
+    def __enter__(self):
+        np.asarray = self._wrap_np(self._orig_asarray)
+        np.array = self._wrap_np(self._orig_array)
+        report = self.report
+        orig_value = self._orig_value
+
+        # no jax-caller filter here: float()/.item() always route through
+        # jax's own __float__/__index__ shims, so the immediate caller is
+        # jax by construction — and jax's sanitizer machinery (the reason
+        # the filter exists on the asarray path) reads via np.asarray, not
+        # ._value
+        def counting_value(impl_self):
+            if getattr(impl_self, "_npy_value", None) is None:
+                report.host_syncs += 1
+            return orig_value.fget(impl_self)
+
+        setattr(self._array_impl, "_value", property(counting_value))
+        return self
+
+    def __exit__(self, *exc):
+        np.asarray = self._orig_asarray
+        np.array = self._orig_array
+        setattr(self._array_impl, "_value", self._orig_value)
+        return False
+
+
+@contextlib.contextmanager
+def sanitized(
+    transfer_guard: Optional[str] = "disallow",
+    debug_nans: bool = True,
+    count_host_syncs: bool = True,
+) -> Iterator[SanitizerReport]:
+    """Run the enclosed block under the full sanitizer bundle.
+
+    Yields a live :class:`SanitizerReport`.  Typical use::
+
+        with sanitized() as rep:
+            tick()                       # warm: may compile
+            base = rep.snapshot()
+            tick()                       # steady state
+        assert rep.recompiles == base.recompiles          # no shape leak
+        assert rep.host_syncs - base.host_syncs == 1      # the one sync
+
+    ``transfer_guard=None`` / ``debug_nans=False`` / ``count_host_syncs=
+    False`` disable individual layers (the bench --sanitize mode keeps all
+    three on)."""
+    global _active
+    with _lock:
+        if _active:
+            raise RuntimeError("sanitized() does not nest")
+        _active = True
+    _install_compile_listener()
+    report = SanitizerReport(
+        transfer_guard=transfer_guard,
+        debug_nans=debug_nans,
+        compile_base=_compile_events,
+    )
+    try:
+        with contextlib.ExitStack() as stack:
+            if transfer_guard is not None:
+                stack.enter_context(jax.transfer_guard(transfer_guard))
+            if debug_nans:
+                stack.enter_context(jax.debug_nans(True))
+            if count_host_syncs:
+                stack.enter_context(_HostSyncHooks(report))
+            yield report
+    finally:
+        report._freeze()
+        with _lock:
+            _active = False

@@ -1,0 +1,409 @@
+"""Repo-rule AST linter: the codebase conventions ruff can't express.
+
+Rules (RPR = "repro rule"):
+
+  RPR001  no ``print()`` in ``src/`` — report through ``repro.obs.log`` so
+          output is level-gated and silenceable in CI.
+  RPR002  kernel call sites must route ``interpret`` through
+          ``resolve_interpret``: passing a raw ``interpret=True/False``
+          literal at a call site pins one kernel's mode independently of the
+          rest of the decode, which is exactly the split-decode hazard the
+          resolve-once policy exists to prevent.  (``interpret=None`` and
+          forwarding a resolved variable are both fine.)
+  RPR003  no host-sync idioms — ``np.asarray`` / ``np.array`` / ``float()``
+          / ``.item()`` / ``.block_until_ready()`` / ``jax.device_get`` —
+          inside the hot-path scopes (the per-tick device loop: all of
+          ``stream/window.py``, the scheduler's ``step``/``_step_traced``,
+          and every ``kernels/`` module).  The ONE sanctioned sync per
+          scheduler tick (the committed-bits transfer) carries an inline
+          ``repr-lint: allow[RPR003]`` comment pragma.
+  RPR004  every ``@register_decoder`` name must appear in the decode-API
+          equivalence grid (tests/test_decode_api.py EXPECTED_BACKENDS) and
+          in golden BER coverage (a ``*_BACKENDS`` tuple or ``CODECS`` key
+          in tests/test_golden_ber.py) — or carry an explicit, reasoned
+          exemption in ``GOLDEN_BER_EXEMPT`` below.
+  RPR005  every registry backend must declare its code family explicitly:
+          ``capabilities=BackendCapabilities(family="...", ...)`` — the
+          planner routes by family before any shape rule, so an implicit
+          default is a silent wrong-algebra hazard when new families land.
+
+Suppression: append ``# repr-lint: allow[RPRnnn]`` (comma-separate several
+codes) to the flagged line, with a justification comment.  Pragmas are
+deliberately line-scoped — a module-wide opt-out would defeat the point.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: rule code -> one-line description (the README table is generated from the
+#: same text; keep them in sync)
+RULES: Dict[str, str] = {
+    "RPR001": "no print() in src/ — use repro.obs.log",
+    "RPR002": "no raw interpret=True/False literals at call sites — "
+              "route through resolve_interpret (pass None or a resolved "
+              "variable)",
+    "RPR003": "no host-sync idioms (np.asarray/np.array/float()/.item()/"
+              ".block_until_ready()/jax.device_get) in hot-path scopes",
+    "RPR004": "every @register_decoder name must ride the decode-API "
+              "equivalence grid and golden BER coverage",
+    "RPR005": "registry backends must declare BackendCapabilities.family "
+              "explicitly",
+}
+
+#: registry names exempt from RPR004's golden-BER leg, each with the reason
+#: (the equivalence-grid leg still applies to them).  An exemption is a
+#: documented decision, not a hole: these names are quality-gated elsewhere.
+GOLDEN_BER_EXEMPT: Dict[str, str] = {
+    "seqparallel": "mesh-required; bit-exactness gated by the multidevice "
+                   "differential leg (tests/multidevice)",
+    "sharded_stream": "mesh-required; gated by the multidevice differential "
+                      "+ resilience legs and the sharded golden-BER smoke",
+    "bcjr": "SISO constituent: pinned to the brute-force oracle in "
+            "tests/test_siso.py and exercised by the turbo golden sweep",
+}
+
+#: hot-path scopes for RPR003: (path suffix or directory prefix, function
+#: names or None for the whole module).  This is the per-tick device loop —
+#: broad enough to catch a new sync sneaking into a kernel wrapper, narrow
+#: enough that host-side bookkeeping (ingest, snapshot, reports) stays free
+#: to materialize arrays.
+HOT_PATH_SCOPES: Tuple[Tuple[str, Optional[frozenset]], ...] = (
+    ("repro/stream/window.py", None),
+    ("repro/stream/scheduler.py", frozenset({"step", "_step_traced"})),
+    ("repro/kernels/", None),
+)
+
+_PRAGMA_RE = re.compile(r"#\s*repr-lint:\s*allow\[([A-Z0-9,\s]+)\]")
+
+#: attribute names whose call is a device->host sync idiom
+_SYNC_ATTRS = frozenset({"item", "block_until_ready"})
+_NP_SYNC_FUNCS = frozenset({"asarray", "array"})
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def find_pragmas(source: str) -> Dict[int, Set[str]]:
+    """{line number: {rule codes allowed on that line}}."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(text)
+        if m:
+            out[i] = {c.strip() for c in m.group(1).split(",") if c.strip()}
+    return out
+
+
+def _is_name(node: ast.AST, name: str) -> bool:
+    return isinstance(node, ast.Name) and node.id == name
+
+
+def _np_attr(node: ast.AST, attrs: frozenset) -> Optional[str]:
+    """'asarray' if node is np.asarray / numpy.asarray (etc.), else None."""
+    if (
+        isinstance(node, ast.Attribute)
+        and node.attr in attrs
+        and isinstance(node.value, ast.Name)
+        and node.value.id in ("np", "numpy")
+    ):
+        return node.attr
+    return None
+
+
+class _FileLinter(ast.NodeVisitor):
+    """Per-file rules: RPR001, RPR002, RPR003, RPR005."""
+
+    def __init__(self, path: Path, rel: str, source: str, in_src: bool):
+        self.rel = rel
+        self.in_src = in_src
+        self.pragmas = find_pragmas(source)
+        self.violations: List[LintViolation] = []
+        self._func_stack: List[str] = []
+        posix = rel.replace("\\", "/")
+        self._hot_funcs: Optional[frozenset] = None
+        self._hot_module = False
+        for scope, funcs in HOT_PATH_SCOPES:
+            if posix.endswith(scope) or (scope.endswith("/") and scope in posix):
+                if funcs is None:
+                    self._hot_module = True
+                else:
+                    self._hot_funcs = funcs
+
+    # ----------------------------------------------------------------- util
+
+    def _flag(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if rule in self.pragmas.get(line, set()):
+            return
+        self.violations.append(LintViolation(
+            rule=rule, path=self.rel, line=line,
+            col=getattr(node, "col_offset", 0), message=message,
+        ))
+
+    def _in_hot_scope(self) -> bool:
+        if self._hot_module:
+            return True
+        if self._hot_funcs is not None:
+            return any(f in self._hot_funcs for f in self._func_stack)
+        return False
+
+    # -------------------------------------------------------------- visitors
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self.in_src:
+            self._check_print(node)
+            self._check_interpret_literal(node)
+            self._check_register_decoder(node)
+        if self._in_hot_scope():
+            self._check_host_sync(node)
+        self.generic_visit(node)
+
+    # ---------------------------------------------------------------- rules
+
+    def _check_print(self, node: ast.Call) -> None:
+        if _is_name(node.func, "print"):
+            self._flag("RPR001", node,
+                       "print() in library code — use repro.obs.log")
+
+    def _check_interpret_literal(self, node: ast.Call) -> None:
+        for kw in node.keywords:
+            if (
+                kw.arg == "interpret"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value in (True, False)
+            ):
+                self._flag("RPR002", node,
+                           f"raw interpret={kw.value.value} literal — "
+                           "resolve via resolve_interpret and pass the "
+                           "variable (or None) instead")
+
+    def _check_host_sync(self, node: ast.Call) -> None:
+        np_fn = _np_attr(node.func, _NP_SYNC_FUNCS)
+        if np_fn is not None:
+            self._flag("RPR003", node,
+                       f"np.{np_fn}() host sync in a hot-path scope")
+            return
+        if _is_name(node.func, "float") and node.args:
+            self._flag("RPR003", node,
+                       "float() host sync in a hot-path scope")
+            return
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr in _SYNC_ATTRS:
+                self._flag("RPR003", node,
+                           f".{node.func.attr}() host sync in a hot-path "
+                           "scope")
+            elif (
+                node.func.attr == "device_get"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "jax"
+            ):
+                self._flag("RPR003", node,
+                           "jax.device_get() host sync in a hot-path scope")
+
+    def _check_register_decoder(self, node: ast.Call) -> None:
+        if not _is_name(node.func, "register_decoder"):
+            return
+        caps = next(
+            (kw.value for kw in node.keywords if kw.arg == "capabilities"),
+            None,
+        )
+        if caps is None:
+            self._flag("RPR005", node,
+                       "register_decoder without capabilities= — declare "
+                       "BackendCapabilities(family=...)")
+            return
+        if (isinstance(caps, ast.Call)
+                and (_is_name(caps.func, "BackendCapabilities")
+                     or (isinstance(caps.func, ast.Attribute)
+                         and caps.func.attr == "BackendCapabilities"))
+                and not any(kw.arg == "family" for kw in caps.keywords)):
+            self._flag("RPR005", node,
+                       "BackendCapabilities without an explicit "
+                       "family= — the planner routes by family")
+        # capabilities bound to a variable: out of static reach, skipped
+
+
+def _iter_py_files(paths: Sequence[Path]) -> Iterable[Path]:
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def _repo_root(start: Path) -> Optional[Path]:
+    cur = start.resolve()
+    if cur.is_file():
+        cur = cur.parent
+    for cand in (cur, *cur.parents):
+        if (cand / "pyproject.toml").exists():
+            return cand
+    return None
+
+
+def registered_decoder_names(src_root: Path) -> Dict[str, Tuple[str, int]]:
+    """{backend name: (file, line)} for every register_decoder call site."""
+    out: Dict[str, Tuple[str, int]] = {}
+    for path in _iter_py_files([src_root]):
+        try:
+            tree = ast.parse(path.read_text())
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Call)
+                and _is_name(node.func, "register_decoder")
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)
+            ):
+                out[node.args[0].value] = (str(path), node.lineno)
+    return out
+
+
+def _string_tuple_assigns(tree: ast.Module, suffix: str) -> Dict[str, List[str]]:
+    """Module-level ``X_BACKENDS = ("a", "b", ...)`` style assignments."""
+    out: Dict[str, List[str]] = {}
+    for node in tree.body:
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        tgt = node.targets[0]
+        if not (isinstance(tgt, ast.Name) and tgt.id.endswith(suffix)):
+            continue
+        if isinstance(node.value, (ast.Tuple, ast.List)):
+            vals = [
+                e.value for e in node.value.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)
+            ]
+            out[tgt.id] = vals
+    return out
+
+
+def _dict_keys(tree: ast.Module, name: str) -> List[str]:
+    for node in tree.body:
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == name
+            and isinstance(node.value, ast.Dict)
+        ):
+            return [
+                k.value for k in node.value.keys
+                if isinstance(k, ast.Constant) and isinstance(k.value, str)
+            ]
+    return []
+
+
+def check_backend_coverage(root: Path) -> List[LintViolation]:
+    """RPR004 — cross-file: registry names vs test coverage declarations."""
+    src_root = root / "src"
+    grid_path = root / "tests" / "test_decode_api.py"
+    golden_path = root / "tests" / "test_golden_ber.py"
+    if not (src_root.exists() and grid_path.exists() and golden_path.exists()):
+        return []  # partial checkout (e.g. linting a single file): skip
+    names = registered_decoder_names(src_root)
+    grid_tree = ast.parse(grid_path.read_text())
+    golden_tree = ast.parse(golden_path.read_text())
+    expected = set(
+        _string_tuple_assigns(grid_tree, "EXPECTED_BACKENDS")
+        .get("EXPECTED_BACKENDS", [])
+    )
+    golden_covered: Set[str] = set()
+    for vals in _string_tuple_assigns(golden_tree, "_BACKENDS").values():
+        golden_covered.update(vals)
+    golden_covered.update(_dict_keys(golden_tree, "CODECS"))
+    out: List[LintViolation] = []
+    for name, (path, line) in sorted(names.items()):
+        rel = _relpath(Path(path), root)
+        if name not in expected:
+            out.append(LintViolation(
+                rule="RPR004", path=rel, line=line, col=0,
+                message=f"backend {name!r} missing from "
+                        "tests/test_decode_api.py EXPECTED_BACKENDS "
+                        "(the equivalence grid)",
+            ))
+        if name not in golden_covered and name not in GOLDEN_BER_EXEMPT:
+            out.append(LintViolation(
+                rule="RPR004", path=rel, line=line, col=0,
+                message=f"backend {name!r} has no golden BER coverage "
+                        "(tests/test_golden_ber.py) and no "
+                        "GOLDEN_BER_EXEMPT entry",
+            ))
+    return out
+
+
+def _relpath(path: Path, root: Optional[Path]) -> str:
+    try:
+        return str(path.resolve().relative_to(root)) if root else str(path)
+    except ValueError:
+        return str(path)
+
+
+def lint_paths(
+    paths: Sequence[Path],
+    repo_rules: bool = True,
+) -> Tuple[List[LintViolation], int]:
+    """Lint every .py under ``paths``.  Returns (violations, files checked).
+
+    ``repo_rules``: also run the cross-file rules (RPR004) against the repo
+    root inferred from the first path (skipped when no pyproject/tests are
+    reachable, e.g. linting a loose file)."""
+    paths = [Path(p) for p in paths]
+    root = _repo_root(paths[0]) if paths else None
+    violations: List[LintViolation] = []
+    n_files = 0
+    for path in _iter_py_files(paths):
+        try:
+            source = path.read_text()
+            tree = ast.parse(source)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            violations.append(LintViolation(
+                rule="RPR000", path=_relpath(path, root), line=1, col=0,
+                message=f"unparseable: {e}",
+            ))
+            continue
+        n_files += 1
+        rel = _relpath(path, root)
+        in_src = "src/repro" in str(path.resolve()).replace("\\", "/")
+        linter = _FileLinter(path, rel, source, in_src)
+        linter.visit(tree)
+        violations.extend(linter.violations)
+    if repo_rules and root is not None:
+        violations.extend(check_backend_coverage(root))
+    violations.sort(key=lambda v: (v.path, v.line, v.rule))
+    return violations, n_files
+
+
+def count_pragmas(paths: Sequence[Path]) -> Dict[str, int]:
+    """{rule: number of allow[] pragmas} across ``paths`` — the bench
+    'analysis' section records this so a creeping pragma count is visible."""
+    out: Dict[str, int] = {}
+    for path in _iter_py_files([Path(p) for p in paths]):
+        try:
+            source = path.read_text()
+        except (OSError, UnicodeDecodeError):
+            continue
+        for codes in find_pragmas(source).values():
+            for code in codes:
+                out[code] = out.get(code, 0) + 1
+    return out

@@ -28,7 +28,7 @@ def _result(spec: CodecSpec, bits: jnp.ndarray, metric: jnp.ndarray, **diag) -> 
 
 @register_decoder(
     "fused",
-    capabilities=BackendCapabilities(max_states=FUSED_MAX_STATES),
+    capabilities=BackendCapabilities(family="conv", max_states=FUSED_MAX_STATES),
 )
 def decode_fused(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
     """Pallas Texpand scan with VMEM-resident path metrics (the paper's
@@ -59,7 +59,7 @@ def _fused_packed_from_received(
 @register_decoder(
     "fused_packed",
     capabilities=BackendCapabilities(
-        max_states=FUSED_MAX_STATES, accepts_received=True
+        family="conv", max_states=FUSED_MAX_STATES, accepts_received=True
     ),
     from_received=_fused_packed_from_received,
 )
@@ -108,7 +108,7 @@ def _tiled_from_received(
 @register_decoder(
     "tiled",
     capabilities=BackendCapabilities(
-        max_states=FUSED_MAX_STATES, accepts_received=True
+        family="conv", max_states=FUSED_MAX_STATES, accepts_received=True
     ),
     from_received=_tiled_from_received,
 )
@@ -131,7 +131,7 @@ def decode_tiled(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeRes
     )
 
 
-@register_decoder("sequential", capabilities=BackendCapabilities())
+@register_decoder("sequential", capabilities=BackendCapabilities(family="conv"))
 def decode_sequential(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
     """lax.scan reference decoder — the oracle every other backend is tested
     against."""
@@ -139,7 +139,7 @@ def decode_sequential(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> Deco
     return _result(spec, bits, metric, backend="sequential")
 
 
-@register_decoder("parallel", capabilities=BackendCapabilities())
+@register_decoder("parallel", capabilities=BackendCapabilities(family="conv"))
 def decode_parallel(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
     """(min,+) associative scan over chunk transfer matrices — log-depth in
     the number of chunks, the single-device long-block decoder."""
@@ -151,7 +151,9 @@ def decode_parallel(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> Decode
 
 @register_decoder(
     "seqparallel",
-    capabilities=BackendCapabilities(supports_mesh=True, requires_mesh=True),
+    capabilities=BackendCapabilities(
+        family="conv", supports_mesh=True, requires_mesh=True
+    ),
 )
 def decode_seqparallel(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
     """shard_map sequence-parallel decoder: the time axis is split across the
@@ -173,6 +175,7 @@ def decode_seqparallel(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> Dec
 @register_decoder(
     "sharded_stream",
     capabilities=BackendCapabilities(
+        family="conv",
         supports_mesh=True,
         requires_mesh=True,
         supports_streaming=True,
@@ -275,7 +278,9 @@ def decode_turbo(spec, llrs, *, ctx: DecodeContext) -> DecodeResult:
 
 @register_decoder(
     "streaming",
-    capabilities=BackendCapabilities(supports_streaming=True, online=True),
+    capabilities=BackendCapabilities(
+        family="conv", supports_streaming=True, online=True
+    ),
 )
 def decode_streaming(spec: CodecSpec, bm_tables, *, ctx: DecodeContext) -> DecodeResult:
     """Truncated-traceback sliding window over the chunked Pallas scan —

@@ -222,12 +222,12 @@ def _validate(decoder: RegisteredDecoder, spec, ctx: DecodeContext) -> None:
         )
     if caps.needs_terminated and not spec.terminated:
         raise ValueError(f"backend {decoder.name!r} only decodes terminated trellises")
-    if caps.sharded_stream and ctx.mesh is not None:
-        if not int(ctx.mesh.shape.get(ctx.batch_axis, 0)):
-            raise ValueError(
-                f"backend {decoder.name!r} shards over mesh axis "
-                f"{ctx.batch_axis!r}, which {ctx.mesh} lacks"
-            )
+    if (caps.sharded_stream and ctx.mesh is not None
+            and not int(ctx.mesh.shape.get(ctx.batch_axis, 0))):
+        raise ValueError(
+            f"backend {decoder.name!r} shards over mesh axis "
+            f"{ctx.batch_axis!r}, which {ctx.mesh} lacks"
+        )
 
 
 def plan_decode(

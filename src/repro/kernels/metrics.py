@@ -46,7 +46,8 @@ def _phase_mask(
     O(T) however deep into a stream the chunk starts; a steady-state
     received session (fixed chunk, cycling phases) pays the host tile +
     device transfer once per phase, not once per push."""
-    pat = np.asarray(pattern)
+    # puncture pattern is a python tuple-of-tuples — host data, not a sync
+    pat = np.asarray(pattern)  # repr-lint: allow[RPR003]
     return pattern_mask(code, phase + T, pat)[phase:]
 
 
@@ -114,11 +115,15 @@ def fused_metric_plan(
     puncture: Optional[np.ndarray] = None,
 ) -> FusedMetricPlan:
     """Build the affine in-kernel form of a branch metric (see module doc)."""
-    X = np.asarray(code.symbol_bits, np.float64)  # (M, n)
+    # plan construction: symbol table / puncture rows are host numpy inputs
+    X = np.asarray(code.symbol_bits, np.float64)  # repr-lint: allow[RPR003]
     punct = (
         None
         if puncture is None
-        else tuple(tuple(int(v) for v in row) for row in np.asarray(puncture))
+        else tuple(
+            tuple(int(v) for v in row)
+            for row in np.asarray(puncture)  # repr-lint: allow[RPR003]
+        )
     )
     if metric == "soft":
         W = 2.0 * X - 1.0

@@ -261,7 +261,8 @@ def viterbi_decode_fused_packed(
 def _tile_lane_row(per_tile: np.ndarray, B: int, S: int = 1) -> jnp.ndarray:
     """Per-tile (P,) int vector -> per-lane (1, B*P*S) row in the canonical
     lane order (b outer, p middle, s inner)."""
-    v = np.tile(np.asarray(per_tile, np.int32), B)
+    # host-side plan construction on a plain numpy vector, not a device sync
+    v = np.tile(np.asarray(per_tile, np.int32), B)  # repr-lint: allow[RPR003]
     if S > 1:
         v = np.repeat(v, S)
     return jnp.asarray(v.reshape(1, -1))

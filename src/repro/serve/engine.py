@@ -65,7 +65,7 @@ class ServeEngine:
             out = [tok]
             positions = jnp.full((B,), S_p, jnp.int32)
             done = jnp.zeros((B,), bool)
-            for i in range(max_new_tokens - 1):
+            for _ in range(max_new_tokens - 1):
                 key, sub = jax.random.split(key)
                 logits, caches = self._decode(self.params, tok, positions, caches)
                 nxt = self._sample(logits, sub)[:, None]

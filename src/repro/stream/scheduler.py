@@ -658,7 +658,9 @@ class StreamScheduler:
 
         # 4. the tick's ONE host sync, then distribute newly-final bits.
         with span(tr, "commit"):
-            bits_np = np.asarray(bits)
+            # The sanctioned device->host transfer: every other per-tick
+            # value stays device-resident (DeviceCounters, arena, ring).
+            bits_np = np.asarray(bits)  # repr-lint: allow[RPR003]
             self.stats.ticks += 1
             self.stats.steps_decoded += len(ready) * self.chunk
             now = time.monotonic()

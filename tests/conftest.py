@@ -15,3 +15,14 @@ def mesh11():
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def sanitized_guards():
+    """Opt-in runtime sanitizer: the test body runs under
+    ``repro.analysis.sanitized()`` (transfer guard + debug-NaNs + live
+    recompile/host-sync counters) and receives the live report."""
+    from repro.analysis import sanitized
+
+    with sanitized() as report:
+        yield report

@@ -6,6 +6,7 @@ restore onto a different mesh shape — 8-shard to single-device, single to
 8-shard, 8 to 4 — is a re-layout, not a reshard of opaque buffers.  Every
 leg asserts committed bits are identical to the uninterrupted run.
 """
+import contextlib
 import pickle
 
 import jax
@@ -137,7 +138,7 @@ def test_sharded_snapshot_fuzz_points(mesh81):
     rng = np.random.RandomState(7)
     tables = _tables(10, base_seed=200)
     ref = _reference(tables, **KW)
-    for trial in range(2):
+    for _trial in range(2):
         sched = StreamScheduler(CODE, mesh=mesh81, **KW)
         feeds = {sid: [t] for sid, t in tables.items()}
         for sid in tables:
@@ -161,10 +162,8 @@ def test_sharded_snapshot_fuzz_points(mesh81):
                     except KeyError:
                         chunks.clear()
                 if not chunks:
-                    try:
+                    with contextlib.suppress(KeyError):  # already retired
                         s.close(sid)
-                    except KeyError:
-                        pass
 
         for _ in range(snap_tick):
             feed(sched)

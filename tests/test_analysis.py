@@ -1,0 +1,432 @@
+"""The analyzer analyzed: accept/reject fixtures for every layer of
+``repro.analysis``.
+
+Three groups:
+
+  * jaxpr contract lint — a clean kernel passes; an injected ``psum`` in a
+    shard_map body, a float64 constant, a host callback, and an
+    over-budget output list each produce the right
+    :class:`ContractViolation` kind;
+  * repo-rule linter — per-rule accept/reject source fixtures (RPR001
+    print, RPR002 raw interpret literal, RPR003 pragma-less host sync in
+    a hot scope, RPR004 uncovered backend, RPR005 missing family), pragma
+    suppression, and the repo-wide gates: ``src`` lints clean, every
+    registered backend is traced (count == len(list_decoders())), and the
+    one sanctioned sync is the ONLY RPR003 pragma in ``src/repro/stream/``;
+  * runtime guards — ``sanitized()`` counts user host syncs and
+    recompiles, filters jax-internal reads, raises on NaN, and refuses to
+    nest.
+"""
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    GOLDEN_BER_EXEMPT,
+    Contract,
+    check_hot_paths,
+    count_pragmas,
+    find_pragmas,
+    hot_path_catalog,
+    lint_paths,
+    sanitized,
+    trace_contract,
+)
+from repro.analysis.repo_lint import check_backend_coverage
+from repro.decode import list_decoders
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+# --------------------------------------------------------------------------- #
+# jaxpr contract lint                                                          #
+# --------------------------------------------------------------------------- #
+
+
+def _kinds(violations):
+    return sorted({v.kind for v in violations})
+
+
+def test_clean_function_has_no_violations():
+    def f(x):
+        return jnp.cumsum(x * 2.0), jnp.min(x)
+
+    closed, violations = trace_contract(
+        f, [jax.ShapeDtypeStruct((8,), jnp.float32)],
+        Contract(name="clean", max_outputs=2),
+    )
+    assert violations == []
+    assert len(closed.jaxpr.eqns) > 0
+
+
+def test_injected_psum_in_shard_map_is_a_collective_violation(mesh11):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(x):
+        return jax.lax.psum(x, "data")
+
+    def f(x):
+        return shard_map(
+            body, mesh=mesh11, in_specs=P("data"), out_specs=P()
+        )(x)
+
+    _, violations = trace_contract(
+        f, [jax.ShapeDtypeStruct((4,), jnp.float32)],
+        Contract(name="comms-free"),
+    )
+    assert _kinds(violations) == ["collective"]
+    assert violations[0].primitive == "psum"
+    assert "shard_map" in violations[0].path
+
+    # the same psum under a contract that allowlists it is clean
+    _, allowed = trace_contract(
+        f, [jax.ShapeDtypeStruct((4,), jnp.float32)],
+        Contract(name="seam", allowed_collectives=frozenset({"psum"})),
+    )
+    assert allowed == []
+
+
+def test_injected_float64_constant_is_flagged_with_source_line():
+    def f(x):
+        with jax.experimental.enable_x64():
+            y = x.astype(jnp.float64) * 1.5  # the leak
+        return y.astype(jnp.float32)
+
+    _, violations = trace_contract(
+        f, [jax.ShapeDtypeStruct((4,), jnp.float32)],
+        Contract(name="f32-only"),
+    )
+    assert "float64" in _kinds(violations)
+    flagged = [v for v in violations if v.kind == "float64"]
+    assert any("test_analysis" in v.where for v in flagged)
+
+
+def test_bf16_outside_metric_dtype_is_a_dtype_violation():
+    def f(x):
+        return x + x.astype(jnp.bfloat16).astype(jnp.float32)
+
+    _, violations = trace_contract(
+        f, [jax.ShapeDtypeStruct((4,), jnp.float32)], Contract(name="strict")
+    )
+    assert "dtype" in _kinds(violations)
+
+    _, tolerated = trace_contract(
+        f, [jax.ShapeDtypeStruct((4,), jnp.float32)],
+        Contract(name="mixed", extra_float_dtypes=("bfloat16",)),
+    )
+    assert tolerated == []
+
+
+def test_host_callback_is_flagged():
+    def f(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2,
+            jax.ShapeDtypeStruct((4,), jnp.float32),
+            x,
+        )
+        return y
+
+    _, violations = trace_contract(
+        f, [jax.ShapeDtypeStruct((4,), jnp.float32)], Contract(name="no-cb")
+    )
+    assert _kinds(violations) == ["host-callback"]
+
+
+def test_output_budget_is_enforced():
+    def f(x):
+        return x, x * 2, x * 3
+
+    _, violations = trace_contract(
+        f, [jax.ShapeDtypeStruct((4,), jnp.float32)],
+        Contract(name="two-out", max_outputs=2),
+    )
+    assert _kinds(violations) == ["outputs"]
+
+
+# --------------------------------------------------------------------------- #
+# hot-path catalog: the CI coverage gate                                       #
+# --------------------------------------------------------------------------- #
+
+
+def test_every_registered_backend_is_traced_and_clean():
+    report = check_hot_paths()
+    backends = {entry["backend"] for entry in report.values()}
+    assert backends == set(list_decoders())
+    assert len(backends) == len(list_decoders())
+    for name, entry in report.items():
+        assert entry["violations"] == [], f"{name}: {entry['violations']}"
+        assert entry["equations"] > 0
+
+
+def test_catalog_contracts_are_meaningfully_strict():
+    catalog = {hp.name: hp for hp in hot_path_catalog()}
+    # the sharded tick is the comms-free guarantee the GPU-decoder line of
+    # work depends on: no collective may EVER be allowlisted there
+    assert catalog["sharded_stream_tick"].contract.allowed_collectives == frozenset()
+    # seqparallel's seam exchange is the one sanctioned collective user
+    assert catalog["seqparallel"].contract.allowed_collectives
+    for hp in catalog.values():
+        assert not hp.contract.allow_host_callbacks
+
+
+# --------------------------------------------------------------------------- #
+# repo-rule linter: per-rule accept/reject fixtures                            #
+# --------------------------------------------------------------------------- #
+
+
+def _lint_snippet(tmp_path, rel, code):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(code))
+    violations, n = lint_paths([path], repo_rules=False)
+    assert n == 1
+    return violations
+
+
+def test_rpr001_print_rejected_and_log_accepted(tmp_path):
+    bad = _lint_snippet(tmp_path, "src/repro/x.py", """
+        def f():
+            print("debug")
+    """)
+    assert [v.rule for v in bad] == ["RPR001"]
+    good = _lint_snippet(tmp_path, "src/repro/y.py", """
+        from repro.obs.log import get_logger
+        def f():
+            get_logger("x").info("debug")
+    """)
+    assert good == []
+
+
+def test_rpr002_raw_interpret_literal_rejected(tmp_path):
+    bad = _lint_snippet(tmp_path, "src/repro/k.py", """
+        def f(x):
+            return kernel_call(x, interpret=True)
+    """)
+    assert [v.rule for v in bad] == ["RPR002"]
+    # None and a resolved variable are both the sanctioned idiom
+    good = _lint_snippet(tmp_path, "src/repro/k2.py", """
+        def f(x, mode):
+            a = kernel_call(x, interpret=None)
+            return kernel_call(a, interpret=mode)
+    """)
+    assert good == []
+
+
+def test_rpr003_pragma_less_host_sync_rejected(tmp_path):
+    bad = _lint_snippet(tmp_path, "repro/stream/window.py", """
+        import numpy as np
+        def tick(x):
+            return np.asarray(x)
+    """)
+    assert [v.rule for v in bad] == ["RPR003"]
+
+    pragma = _lint_snippet(tmp_path, "repro/stream/window2.py", """
+        import numpy as np
+        def tick(x):
+            return np.asarray(x)  # repr-lint: allow[RPR003]
+    """)
+    # window2.py is not a hot scope (suffix mismatch) — prove the pragma
+    # works on a real hot-scope path instead
+    assert pragma == []
+    ok = _lint_snippet(tmp_path, "two/repro/stream/window.py", """
+        import numpy as np
+        def tick(x):
+            return np.asarray(x)  # repr-lint: allow[RPR003]
+    """)
+    assert ok == []
+
+
+def test_rpr003_catches_every_sync_idiom(tmp_path):
+    bad = _lint_snippet(tmp_path, "repro/kernels/hot.py", """
+        import numpy as np
+        import jax
+        def f(x):
+            a = np.array(x)
+            b = float(x[0])
+            c = x.item()
+            d = x.block_until_ready()
+            e = jax.device_get(x)
+            return a, b, c, d, e
+    """)
+    assert [v.rule for v in bad] == ["RPR003"] * 5
+
+
+def test_rpr003_scheduler_scope_is_function_limited(tmp_path):
+    # host syncs outside step/_step_traced (ingest, reports) stay legal
+    violations = _lint_snippet(tmp_path, "repro/stream/scheduler.py", """
+        import numpy as np
+        def load_report(x):
+            return np.asarray(x)
+        def _step_traced(x):
+            return np.asarray(x)
+    """)
+    assert [(v.rule, v.line) for v in violations] == [("RPR003", 6)]
+
+
+def test_rpr005_missing_family_rejected(tmp_path):
+    bad = _lint_snippet(tmp_path, "src/repro/b.py", """
+        @register_decoder("x", capabilities=BackendCapabilities(online=True))
+        def d(spec, bm, *, ctx):
+            return None
+    """)
+    assert [v.rule for v in bad] == ["RPR005"]
+    none = _lint_snippet(tmp_path, "src/repro/b2.py", """
+        @register_decoder("x")
+        def d(spec, bm, *, ctx):
+            return None
+    """)
+    assert [v.rule for v in none] == ["RPR005"]
+    good = _lint_snippet(tmp_path, "src/repro/b3.py", """
+        @register_decoder("x", capabilities=BackendCapabilities(family="conv"))
+        def d(spec, bm, *, ctx):
+            return None
+    """)
+    assert good == []
+
+
+def test_rpr004_uncovered_backend_rejected(tmp_path):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='fx'\n")
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "mod.py").write_text(textwrap.dedent("""
+        @register_decoder("ghost", capabilities=BackendCapabilities(family="conv"))
+        def d(spec, bm, *, ctx):
+            return None
+    """))
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_decode_api.py").write_text("EXPECTED_BACKENDS = ()\n")
+    (tests / "test_golden_ber.py").write_text("CODECS = {}\n")
+    violations = check_backend_coverage(tmp_path)
+    assert [v.rule for v in violations] == ["RPR004", "RPR004"]
+    msgs = " ".join(v.message for v in violations)
+    assert "equivalence grid" in msgs and "golden BER" in msgs
+
+    # covering both legs silences it
+    (tests / "test_decode_api.py").write_text(
+        "EXPECTED_BACKENDS = ('ghost',)\n"
+    )
+    (tests / "test_golden_ber.py").write_text(
+        "K_BACKENDS = ('ghost',)\nCODECS = {}\n"
+    )
+    assert check_backend_coverage(tmp_path) == []
+
+
+def test_rpr004_exemptions_name_real_backends_with_reasons():
+    for name, reason in GOLDEN_BER_EXEMPT.items():
+        assert name in list_decoders()
+        assert len(reason) > 20  # a reason, not a rubber stamp
+
+
+def test_pragma_parser_handles_multiple_codes():
+    source = "x = 1  # repr-lint: allow[RPR001, RPR003]\ny = 2\n"
+    assert find_pragmas(source) == {1: {"RPR001", "RPR003"}}
+
+
+# --------------------------------------------------------------------------- #
+# repo-wide gates                                                              #
+# --------------------------------------------------------------------------- #
+
+
+def test_src_lints_clean():
+    violations, n_files = lint_paths([SRC])
+    assert violations == [], "\n".join(map(str, violations))
+    assert n_files > 80
+
+
+def test_the_one_sanctioned_sync_is_the_only_stream_rpr003_pragma():
+    pragmas = count_pragmas([SRC / "repro" / "stream"])
+    assert pragmas == {"RPR003": 1}, pragmas
+    # and it is exactly the committed-bits transfer in the scheduler
+    sched = (SRC / "repro" / "stream" / "scheduler.py").read_text()
+    line = next(
+        text for text in sched.splitlines() if "repr-lint: allow" in text
+    )
+    assert "np.asarray(bits)" in line
+
+
+def test_cli_clean_on_src_and_failing_on_bad_file(tmp_path):
+    from repro.analysis.__main__ import main
+
+    assert main([str(SRC), "--quiet"]) == 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("print('hi')\n")
+    # a loose file outside src/repro is not library code: RPR001 no-op
+    assert main([str(bad), "--quiet"]) == 0
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "bad.py").write_text("print('hi')\n")
+    assert main([str(pkg), "--quiet"]) == 1
+    assert main([str(tmp_path / "missing.py"), "--quiet"]) == 2
+
+
+# --------------------------------------------------------------------------- #
+# runtime guards                                                               #
+# --------------------------------------------------------------------------- #
+
+
+def test_sanitized_counts_user_host_syncs():
+    x = jnp.arange(8.0)
+    with sanitized(transfer_guard=None, debug_nans=False) as rep:
+        np.asarray(x)
+        float(x[0])
+        assert rep.host_syncs == 2
+        np.asarray(np.ones(3))  # host->host: not a sync
+        assert rep.host_syncs == 2
+    assert rep.host_syncs == 2
+
+
+def test_sanitized_counts_recompiles_and_freezes_on_exit():
+    @jax.jit
+    def f(a):
+        return a * 2
+
+    with sanitized(transfer_guard=None, count_host_syncs=False) as rep:
+        f(jnp.ones(3)).block_until_ready()
+        first = rep.recompiles
+        assert first >= 1
+        f(jnp.ones(3)).block_until_ready()  # cached: no new compile
+        assert rep.recompiles == first
+        f(jnp.ones(4)).block_until_ready()  # new shape: recompiles
+        assert rep.recompiles > first
+    frozen = rep.recompiles
+    jax.jit(lambda a: a + 1)(jnp.ones(5)).block_until_ready()
+    assert rep.recompiles == frozen  # report is frozen after exit
+
+
+def test_sanitized_debug_nans_raises():
+    with (
+        pytest.raises(FloatingPointError),
+        sanitized(transfer_guard=None, count_host_syncs=False),
+    ):
+        jnp.log(jnp.asarray(-1.0)).block_until_ready()
+
+
+def test_sanitized_transfer_guard_blocks_implicit_and_allows_window():
+    with sanitized(debug_nans=False, count_host_syncs=False) as rep:
+        with pytest.raises(Exception, match="[Dd]isallow"):
+            jax.jit(lambda a: a + 1)(np.ones(3, np.float32))
+        with rep.allow_transfers():
+            jax.jit(lambda a: a + 1)(np.ones(3, np.float32))
+
+
+def test_sanitized_does_not_nest():
+    with (
+        sanitized(transfer_guard=None, debug_nans=False),
+        pytest.raises(RuntimeError, match="nest"),
+        sanitized(),
+    ):
+        pass
+
+
+def test_sanitized_restores_numpy_entry_points():
+    orig_asarray, orig_array = np.asarray, np.array
+    with sanitized(transfer_guard=None, debug_nans=False):
+        assert np.asarray is not orig_asarray
+    assert np.asarray is orig_asarray and np.array is orig_array

@@ -1,8 +1,8 @@
-"""BENCH_viterbi.json schema gate (v7): the validator the CI bench-smoke job
+"""BENCH_viterbi.json schema gate (v8): the validator the CI bench-smoke job
 runs must accept well-formed payloads — including the ``stream.online``,
 telemetry-acceptance ``obs``, SISO ``turbo``, fault-injection
-``stream.resilience``, and time-parallel ``long_blocks`` sections — and
-reject the invariants it exists to guard."""
+``stream.resilience``, time-parallel ``long_blocks``, and static-analysis
+``analysis`` sections — and reject the invariants it exists to guard."""
 import copy
 
 import pytest
@@ -141,6 +141,32 @@ def _payload():
             "crossover_T_vs_sequential": 2048,
             "note": "measured wall-clock; monotonicity recorded, not asserted",
         },
+        "analysis": {
+            "lint": {"files": 93, "rules": 5, "violations": 0,
+                     "violation_lines": []},
+            "jaxpr": {
+                "contracts": {
+                    "fused": {"backend": "fused", "equations": 69,
+                              "violations": 0},
+                    "sharded_stream_tick": {"backend": "sharded_stream",
+                                            "equations": 913, "violations": 0},
+                },
+                "backends_registered": 2,
+                "backends_traced": 2,
+                "violations": 0,
+            },
+            "pragmas": {"RPR003": 5},
+            "stream_pragmas": {"RPR003": 1},
+            "sanitize": {
+                "ticks": 4,
+                "host_syncs_per_tick": [1, 1, 1, 1],
+                "steady_recompiles": 0,
+                "guarded_tick_s": 0.004,
+                "transfer_guard": "disallow",
+                "debug_nans": True,
+                "bit_exact_vs_unguarded": True,
+            },
+        },
         "turbo": {
             "workload": {
                 "code": "rsc_k4_lte", "interleaver": "qpp(512,31,64)",
@@ -161,8 +187,8 @@ def _payload():
     }
 
 
-def test_schema_is_v7():
-    assert BENCH_SCHEMA == "bench_viterbi/v7"
+def test_schema_is_v8():
+    assert BENCH_SCHEMA == "bench_viterbi/v8"
 
 
 def test_check_schema_accepts_valid_payload():
@@ -175,6 +201,10 @@ def test_check_schema_accepts_payload_without_optional_sections():
     del payload["obs"]
     del payload["turbo"]
     del payload["long_blocks"]  # pre-v7 content is fine
+    del payload["analysis"]  # pre-v8 content is fine
+    check_schema(payload)
+    payload = _payload()
+    del payload["analysis"]["sanitize"]  # lint-only analysis run is fine
     check_schema(payload)
     payload = _payload()
     del payload["stream"]["online"]  # by_shards alone (pre-v3 content) is fine
@@ -311,6 +341,44 @@ def test_check_schema_rejects_broken_resilience_sections(mutate):
     ],
 )
 def test_check_schema_rejects_broken_long_blocks_sections(mutate):
+    payload = copy.deepcopy(_payload())
+    mutate(payload)
+    with pytest.raises((AssertionError, KeyError)):
+        check_schema(payload)
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        # the whole point of the section: the repo must lint clean
+        lambda p: p["analysis"]["lint"].__setitem__("violations", 1),
+        lambda p: p["analysis"]["jaxpr"].__setitem__("violations", 1),
+        # a registered backend with no hot-path contract trace
+        lambda p: p["analysis"]["jaxpr"].__setitem__("backends_registered", 3),
+        lambda p: p["analysis"]["jaxpr"]["contracts"]["fused"].__setitem__(
+            "violations", 2
+        ),
+        lambda p: p["analysis"]["jaxpr"]["contracts"]["fused"].__setitem__(
+            "equations", 0
+        ),
+        lambda p: p["analysis"]["jaxpr"].__setitem__("contracts", {}),
+        # a second RPR003 pragma sneaking into the streaming hot path
+        lambda p: p["analysis"].__setitem__("stream_pragmas", {"RPR003": 2}),
+        lambda p: p["analysis"].__setitem__("stream_pragmas", {}),
+        # the guarded probe leaking an extra per-tick sync or a recompile
+        lambda p: p["analysis"]["sanitize"].__setitem__(
+            "host_syncs_per_tick", [1, 2, 1, 1]
+        ),
+        lambda p: p["analysis"]["sanitize"].__setitem__("steady_recompiles", 1),
+        lambda p: p["analysis"]["sanitize"].__setitem__(
+            "bit_exact_vs_unguarded", False
+        ),
+        lambda p: p["analysis"]["sanitize"].__setitem__("transfer_guard", None),
+        lambda p: p["analysis"].pop("lint"),
+        lambda p: p["analysis"].pop("stream_pragmas"),
+    ],
+)
+def test_check_schema_rejects_broken_analysis_sections(mutate):
     payload = copy.deepcopy(_payload())
     mutate(payload)
     with pytest.raises((AssertionError, KeyError)):

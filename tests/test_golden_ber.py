@@ -46,7 +46,14 @@ K7_FLIPS = (0.02, 0.06, 0.11)  # clean floor -> waterfall knee -> lossy region
 #: scan, the packed Pallas pipeline, the truncated-window streamer, and the
 #: time-parallel tiled decoder (P=4 exact seams — must sit exactly on the
 #: sequential curve).
-K7_BACKENDS = ("sequential", "parallel", "fused_packed", "streaming", "tiled")
+K7_BACKENDS = (
+    "sequential",
+    "parallel",
+    "fused",
+    "fused_packed",
+    "streaming",
+    "tiled",
+)
 
 
 def compute_k7_payload():

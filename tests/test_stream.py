@@ -689,7 +689,7 @@ def _assert_arena_integrity(sched):
                 f"(stale _arena_len or compacted rows)"
             )
         by_shard.setdefault(st.shard, []).append(st)
-    for shard, streams in by_shard.items():
+    for streams in by_shard.values():
         all_rows = np.concatenate([st.rows for st in streams]) if streams else []
         assert len(all_rows) == len(set(all_rows.tolist())), "row aliasing"
 

@@ -11,6 +11,7 @@ Two acceptance gates live here:
      step failure, clock skew) must leave the scheduler serving, with the
      injection AND the scheduler's reaction visible in ``metrics_text()``.
 """
+import contextlib
 import pickle
 
 import jax
@@ -121,10 +122,8 @@ def test_snapshot_restore_mid_drip_with_device_counters():
                 except StreamBusy:
                     break
             if served[sid] >= len(t):
-                try:
+                with contextlib.suppress(KeyError):  # already retired
                     s.close(sid)
-                except KeyError:
-                    pass  # already retired
 
     for sid in tables:
         sched.open_stream(sid, max_buffered=256)
@@ -220,7 +219,7 @@ def test_snapshot_restore_fuzz_seeded():
     """Always-on seeded fuzz over (arrival schedule, snapshot point) — the
     hypothesis variant below widens the search when the dep is installed."""
     rng = np.random.RandomState(0)
-    for case in range(6):
+    for _case in range(6):
         sizes = rng.randint(1, 90, size=24).tolist()
         snap_tick = int(rng.randint(0, 8))
         _fuzz_one(sizes, snap_tick, n_streams=int(rng.randint(2, 6)))
@@ -249,10 +248,8 @@ def _fuzz_one(sizes, snap_tick, n_streams):
                 except KeyError:
                     chunks.clear()
             if not chunks:
-                try:
+                with contextlib.suppress(KeyError):  # already retired
                     s.close(sid)
-                except KeyError:
-                    pass
 
     for _ in range(snap_tick):
         feed(sched)
@@ -269,7 +266,8 @@ def _fuzz_one(sizes, snap_tick, n_streams):
     _assert_same_results(ref, restored.results)
 
 
-try:
+# dev-only dep — the seeded fuzz above always runs without it
+with contextlib.suppress(ImportError):
     from hypothesis import given, settings
     from hypothesis import strategies as st
 
@@ -281,9 +279,6 @@ try:
     )
     def test_snapshot_restore_fuzz_hypothesis(sizes, snap_tick, n_streams):
         _fuzz_one(sizes, snap_tick, n_streams)
-
-except ImportError:  # dev-only dep — the seeded fuzz above always runs
-    pass
 
 
 # --------------------------------------------------------------------------- #
